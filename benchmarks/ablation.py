@@ -1,0 +1,87 @@
+"""Paper Table 1: ablation of One-Step-Delay Overlap and Adaptive Gradient
+Compression (Qwen1.5-107B in the paper; reduced-width here for the loss
+column, full-scale comm model for the throughput column).
+
+Expected ordering (paper): loss(AllReduce) <= loss(w/o compression) <=
+loss(w/o overlap) <= loss(full); throughput strictly reversed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+from repro.core import comm
+from repro.core.compression import LowRankQuant, tree_shapes
+
+
+def throughput_column(n_clusters: int = 2, h: int = 125,
+                      rank: int = 2048) -> Dict[str, float]:
+    from benchmarks.throughput import (A800_PEAK, MFU, N_GPUS,
+                                       TOKENS_PER_STEP, model_setup)
+
+    cfg, shapes, n_params = model_setup("qwen1.5-107b")
+    t_step = 6.0 * n_params * TOKENS_PER_STEP / (
+        N_GPUS["qwen1.5-107b"] * A800_PEAK * MFU)
+    sc = comm.CommScenario(n_clusters=n_clusters, t_step_s=t_step,
+                           tokens_per_step=TOKENS_PER_STEP)
+    pb = n_params * 4.0
+    dlx = LowRankQuant(rank=rank, bits=4)
+    full = comm.method_throughput("full", param_bytes_fp32=pb,
+                                  wire_bytes=dlx.wire_bytes(shapes),
+                                  h_steps=h, overlap=True, sc=sc)
+    no_overlap = comm.method_throughput("no_overlap", param_bytes_fp32=pb,
+                                        wire_bytes=dlx.wire_bytes(shapes),
+                                        h_steps=h, overlap=False, sc=sc)
+    no_comp = comm.method_throughput("no_comp", param_bytes_fp32=pb,
+                                     wire_bytes=pb, h_steps=h,
+                                     overlap=True, sc=sc)
+    allreduce = comm.method_throughput("allreduce", param_bytes_fp32=pb,
+                                       wire_bytes=pb, h_steps=1,
+                                       overlap=False, sc=sc,
+                                       allreduce_per_step=True)
+    return {"full": full.tokens_per_s, "wo_overlap": no_overlap.tokens_per_s,
+            "wo_compression": no_comp.tokens_per_s,
+            "allreduce": allreduce.tokens_per_s}
+
+
+def loss_column(rounds: int = 10, h: int = 10, seed: int = 0
+                ) -> Dict[str, float]:
+    from repro.configs.base import get_config
+    from repro.train import trainer as T
+
+    cfg = dataclasses.replace(get_config("opt-1.3b").reduced(),
+                              vocab_size=128)
+    base = dict(n_clusters=2, local_batch=8, seq_len=32, inner_lr=3e-3,
+                seed=seed, outer_lr=0.5, outer_momentum=0.7, hetero=0.7)
+    out = {}
+    tc = T.TrainConfig(**base, h_steps=h, compressor="diloco_x",
+                       compressor_kw=dict(rank=32, bits=4),
+                       delay=True, compress=True)
+    out["full"] = T.run_diloco_training(cfg, tc, rounds).eval_losses[-1]
+    tc = dataclasses.replace(tc, delay=False)
+    out["wo_overlap"] = T.run_diloco_training(cfg, tc, rounds).eval_losses[-1]
+    tc = dataclasses.replace(tc, delay=True, compress=False)
+    out["wo_compression"] = T.run_diloco_training(cfg, tc,
+                                                  rounds).eval_losses[-1]
+    ar = T.run_allreduce_training(
+        cfg, T.TrainConfig(**base, h_steps=1), rounds * h)
+    out["allreduce"] = ar.eval_losses[-1]
+    return out
+
+
+def run(fast: bool = False) -> Dict:
+    tp = throughput_column()
+    ls = loss_column(rounds=6 if fast else 10, h=6 if fast else 10)
+    paper = {"full": (4.20, 3728), "wo_overlap": (4.15, 2197),
+             "wo_compression": (4.02, 1168), "allreduce": (3.90, 10.4)}
+    rows = {k: {"loss": round(ls[k], 3), "tokens_per_s": round(tp[k], 1),
+                "paper_loss": paper[k][0], "paper_tokens_per_s": paper[k][1]}
+            for k in ("full", "wo_overlap", "wo_compression", "allreduce")}
+    ordering_tp = (tp["full"] > tp["wo_overlap"] > tp["wo_compression"]
+                   > tp["allreduce"])
+    return {"rows": rows, "throughput_ordering_ok": bool(ordering_tp)}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,165 @@
+"""Analytic per-device FLOPs / HBM-traffic model for the roofline.
+
+Why this exists: XLA's ``cost_analysis()`` counts each ``while``-loop body
+ONCE, so anything inside a scan-over-layers (all matmul FLOPs, activation
+traffic) is undercounted by ~n_layers x in the compiled dry-run, while
+GSPMD-hoisted collectives are counted correctly. §Roofline therefore
+anchors the compute/memory terms on this analytic model (exact parameter
+shapes via eval_shape, explicit multipliers below) and takes collective
+bytes + per-device memory footprint from the compiled artifact. The raw
+HLO numbers are kept in the table as a sanity column with the measured
+undercount ratio.
+
+Multipliers:
+  train   : fwd 2*N_act FLOPs/token, bwd 2x fwd, remat re-forward 1x
+            -> 8*N_act per token, + attention quadratic term with the same
+            factor.
+  prefill : 2*N_act per token (+ attention, fwd only).
+  decode  : 2*N_act per token over context via KV cache: attention term is
+            linear in context (2*B*ctx*H*dh per layer); SSM/ring-window
+            layers are O(1) per token.
+
+HBM traffic per device (train): 3 passes over resident params (fwd, bwd,
+remat) + optimizer update (m,v,p read+write in f32) + activation
+write/read per layer (~8*d bytes/token incl. attention io) + materialized
+attention-score traffic for the chunked-softmax path (zero if the Pallas
+flash kernel is used — that delta is a §Perf lever).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, get_config, get_shape
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+@dataclass
+class AnalyticTerms:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    t_compute: float
+    t_memory: float
+
+
+def _attn_dims(cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    if cfg.attn_type == "mla":
+        qk = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
+        v = cfg.mla.v_head_dim
+        return cfg.n_heads, qk, v
+    return cfg.n_heads, hd, hd
+
+
+def attention_flops(cfg: ModelConfig, B: int, S: int, *, decode: bool,
+                    ctx: int = 0) -> float:
+    """Global attention FLOPs (QK^T + PV), causal-halved, window-aware."""
+    H, dqk, dv = _attn_dims(cfg)
+    n_attn_layers = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn_layers = cfg.n_layers // cfg.hybrid.shared_attn_period
+    if cfg.family == "ssm":
+        # mLSTM parallel form ~ attention-shaped; sLSTM linear
+        n_attn_layers = cfg.n_layers * 7 // 8
+        H, dqk, dv = 4, cfg.ssm.expand * cfg.d_model // 4, \
+            cfg.ssm.expand * cfg.d_model // 4
+    total = 0.0
+    for i in range(n_attn_layers):
+        if cfg.global_every:
+            local = (i % cfg.global_every) != cfg.global_every - 1
+            span = min(cfg.sliding_window, S) if local else S
+        else:
+            span = min(cfg.sliding_window, S) if cfg.sliding_window else S
+        if decode:
+            eff = min(span, ctx)
+            total += 2.0 * 2 * B * eff * H * (dqk + dv) / 2
+        else:
+            total += 2.0 * B * S * span * H * (dqk + dv) / 2  # causal half
+    if cfg.is_encdec:
+        # encoder self (bidirectional, n_enc_layers) + decoder cross
+        F = cfg.n_frontend_tokens
+        total += 2.0 * B * F * F * H * (dqk + dv) * cfg.n_enc_layers
+        total += 2.0 * B * (1 if decode else S) * F * H * (dqk + dv) \
+            * cfg.n_layers
+    return total
+
+
+def analytic_terms(arch: str, shape_name: str, *, n_chips: int,
+                   multi_pod: bool) -> AnalyticTerms:
+    from repro.models.model import count_active_params
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_act = count_active_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        tokens = B * S
+        mat = 8.0 * n_act * tokens                 # fwd+bwd+remat
+        attn = 4.0 * attention_flops(cfg, B, S, decode=False)
+        flops = mat + attn
+        # memory: params*3 + adam(f32 m,v,p r/w ~ 24B/param on the shards)
+        # (cluster-stacked: every chip holds its own cluster's shard only)
+        p_bytes = n_act * 2.0                      # bf16 resident
+        mem = (3 * p_bytes + 24.0 * n_act
+               + tokens * cfg.d_model * 2.0 * 8 * cfg.n_layers / n_chips
+               * n_chips                           # global activation io
+               )
+        # attention score traffic (chunked softmax materializes scores once
+        # fwd + once in remat-bwd, f32)
+        H, dqk, dv = _attn_dims(cfg)
+        span = min(cfg.sliding_window, S) if cfg.sliding_window else S
+        mem += 2.0 * B * S * span * H * 4.0 * cfg.n_layers / 2
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_act * tokens + attention_flops(cfg, B, S,
+                                                       decode=False)
+        p_bytes = n_act * 2.0
+        H, dqk, dv = _attn_dims(cfg)
+        span = min(cfg.sliding_window, S) if cfg.sliding_window else S
+        mem = (p_bytes + tokens * cfg.d_model * 2.0 * 4 * cfg.n_layers
+               / n_chips * n_chips
+               + 1.0 * B * S * span * H * 4.0 * cfg.n_layers / 2)
+    else:  # decode: one token, context = S
+        flops = 2.0 * n_act * B + attention_flops(cfg, B, 1, decode=True,
+                                                  ctx=S)
+        # decode is param+cache-bandwidth bound: read all params + cache
+        H, dqk, dv = _attn_dims(cfg)
+        if cfg.attn_type == "mla":
+            cache_per_tok = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+        else:
+            cache_per_tok = 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+        span = min(cfg.sliding_window, S) if cfg.sliding_window else S
+        n_full = cfg.n_layers
+        cache_bytes = 0.0
+        if cfg.family in ("dense", "vlm", "moe", "audio"):
+            for i in range(cfg.n_layers):
+                if cfg.global_every:
+                    local = (i % cfg.global_every) != cfg.global_every - 1
+                    eff = span if local else S
+                elif cfg.sliding_window:
+                    eff = span
+                else:
+                    eff = S
+                cache_bytes += B * eff * cache_per_tok * 2.0
+        elif cfg.family == "hybrid":
+            n_attn = cfg.n_layers // cfg.hybrid.shared_attn_period
+            cache_bytes += B * S * cache_per_tok * 2.0 * 0 + \
+                B * S * 2 * cfg.n_heads * cfg.resolved_head_dim * 2.0
+            # mamba states are O(1): d_inner*d_state per layer
+            d_inner = cfg.ssm.expand * cfg.d_model
+            cache_bytes += cfg.n_layers * B * d_inner * cfg.ssm.d_state * 4.0
+        elif cfg.family == "ssm":
+            d_inner = cfg.ssm.expand * cfg.d_model
+            hd = d_inner // 4
+            cache_bytes += cfg.n_layers * B * 4 * hd * hd * 4.0
+        mem = n_act * 2.0 + cache_bytes
+    return AnalyticTerms(
+        flops_per_dev=flops / n_chips,
+        hbm_bytes_per_dev=mem / n_chips,
+        t_compute=flops / n_chips / PEAK_FLOPS,
+        t_memory=mem / n_chips / HBM_BW,
+    )

@@ -1,0 +1,80 @@
+"""Paper Fig. 3: convergence comparison of AllReduce / DiLoCoX /
+OpenDiLoCo-style / CocktailSGD-style at matched communication budgets.
+
+Offline scaling: the OPT-1.3B experiment is reproduced at reduced width on
+the synthetic stream (DESIGN.md §3) — loss *ordering and gaps* are the
+claim under test, not absolute values. Methods are matched the way the
+paper matches them (§4.1.3): DiLoCoX H=125->here H, int4+low-rank;
+OpenDiLoCo H 4x larger (its "excessively large H"), fp16, synchronous;
+CocktailSGD per-step aggressive compression, no local training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+import numpy as np
+
+
+def run(rounds: int = 12, h: int = 10, seed: int = 0,
+        fast: bool = False) -> Dict:
+    from repro.configs.base import get_config
+    from repro.train import trainer as T
+
+    cfg = dataclasses.replace(get_config("opt-1.3b").reduced(),
+                              vocab_size=128)
+    if fast:
+        rounds, h = 6, 6
+    # hetero: per-cluster data sources (Assumption 3.3) — the decentralized
+    # setting's defining property
+    base = dict(n_clusters=2, local_batch=8, seq_len=32, inner_lr=3e-3,
+                seed=seed, hetero=0.7)
+    total_steps = rounds * h
+    out: Dict = {"steps": total_steps}
+
+    # vanilla AllReduce (loss reference)
+    r = T.run_allreduce_training(cfg, T.TrainConfig(**base, h_steps=1),
+                                 total_steps)
+    out["allreduce"] = {"eval": r.eval_losses, "final": r.eval_losses[-1]}
+
+    # DiLoCoX: delay + low-rank+int4 + error feedback
+    tc = T.TrainConfig(**base, h_steps=h, compressor="diloco_x",
+                       compressor_kw=dict(rank=32, bits=4),
+                       delay=True, compress=True,
+                       outer_lr=0.5, outer_momentum=0.7)
+    r = T.run_diloco_training(cfg, tc, rounds)
+    out["diloco_x"] = {"eval": r.eval_losses, "final": r.eval_losses[-1],
+                       "wire_bytes": r.wire_bytes_per_round[0]}
+
+    # OpenDiLoCo-style: synchronous, fp16, H 4x larger (gradient staleness)
+    tc = T.TrainConfig(**base, h_steps=4 * h, compressor="fp16",
+                       delay=False, compress=True,
+                       outer_lr=0.7, outer_momentum=0.9)
+    r = T.run_diloco_training(cfg, tc, max(2, rounds // 4))
+    out["opendiloco"] = {"eval": r.eval_losses, "final": r.eval_losses[-1],
+                         "wire_bytes": r.wire_bytes_per_round[0]}
+
+    # CocktailSGD-style: per-step aggressive compression, no local training
+    tc = T.TrainConfig(**base, compressor="cocktail",
+                       compressor_kw=dict(random_ratio=0.1, topk_ratio=0.08,
+                                          bits=4))
+    r = T.run_compressed_ddp_training(cfg, tc, total_steps)
+    out["cocktail"] = {"eval": r.eval_losses, "final": r.eval_losses[-1],
+                       "wire_bytes": r.wire_bytes_per_round[0]}
+
+    # scale-transferable orderings (EXPERIMENTS.md §Convergence): AllReduce
+    # best; DiLoCoX within a modest gap of AllReduce (the delay penalty the
+    # paper's own Table 1 shows); DiLoCoX beats CocktailSGD. The paper's
+    # large OpenDiLoCo penalty (H=500 staleness at 1.3B on WikiText) does
+    # NOT reproduce at toy scale even with heterogeneity — reported, not
+    # asserted.
+    out["ordering_ok"] = bool(
+        out["allreduce"]["final"] <= out["diloco_x"]["final"] + 0.05
+        and out["diloco_x"]["final"] < out["cocktail"]["final"] + 0.3
+        and out["diloco_x"]["final"] < out["diloco_x"]["eval"][0] - 0.8)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

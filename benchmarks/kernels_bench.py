@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: us/call for the compressor/attention hot spots,
+jnp reference path vs Pallas interpret path (interpret mode measures the
+Python-executed kernel body — correctness-lane numbers, not TPU numbers;
+the BlockSpec tiling is what carries to hardware)."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> Dict[str, float]:
+    from repro.kernels import ref
+    from repro.kernels.quant4 import quant4_pack_pallas
+    from repro.kernels.lowrank_mm import matmul_pallas
+
+    out = {}
+    x = jax.random.normal(jax.random.PRNGKey(0), (1 << 20,))
+    out["quant4_pack_ref_1M"] = _time(
+        jax.jit(lambda v: ref.quant4_pack_ref(v)[0]), x)
+    out["quant4_pack_pallas_1M"] = _time(
+        lambda v: quant4_pack_pallas(v)[0], x, iters=2)
+
+    a = jax.random.normal(jax.random.PRNGKey(1), (1024, 1024))
+    b = jax.random.normal(jax.random.PRNGKey(2), (1024, 128))
+    out["powersgd_proj_ref_1024x1024xr128"] = _time(
+        jax.jit(ref.matmul_ref), a, b)
+    out["powersgd_proj_pallas"] = _time(matmul_pallas, a, b, iters=2)
+
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1024, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1024, 1, 64))
+    out["flash_attn_ref_1k"] = _time(
+        jax.jit(lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_)),
+        q, k, k)
+    return out
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k},{v:.1f},us_per_call")

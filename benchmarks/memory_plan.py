@@ -1,0 +1,92 @@
+"""Analytic per-device memory planner: for every (arch x mesh) predict the
+resident-byte budget (params, inner Adam, outer DiLoCoX state, PowerSGD
+warm starts, activation working set) under the Mode A sharding rules, and
+compare with the dry-run's measured memory_analysis. The planner is what a
+deployment would consult BEFORE compiling — and the comparison validates
+both it and the sharding rules.
+
+  PYTHONPATH=src python -m benchmarks.memory_plan [dryrun_results.json]
+
+Observed planner-vs-XLA gap (EXPERIMENTS.md): the resident-state columns
+match the dry-run arg_bytes closely, but XLA's scheduled temp peak runs
+2-10x above the activation estimate (unfused f32 chains, attention score
+buffers, scan carries) — the planner's `total` is a LOWER bound and the
+headroom factor is itself a fusion-quality metric per arch (seamless's
+45x gap flagged the unchunked encoder attention as the next §Perf target).
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import Dict, Optional
+
+BF16, F32 = 2, 4
+
+
+def plan(arch: str, *, n_clusters: int = 2, n_chips: int = 256,
+         rank: int = 128, batch_tokens_per_device: int = 65536,
+         d_model: Optional[int] = None) -> Dict[str, float]:
+    from repro.configs.base import get_config
+    from repro.models.model import count_params
+
+    cfg = get_config(arch)
+    n = count_params(cfg)
+    chips_per_cluster = n_chips // n_clusters
+    # Mode A: params 2-D sharded (data x model) within the cluster
+    p_dev = n * BF16 / chips_per_cluster
+    adam_dev = n * 2 * F32 / chips_per_cluster          # m + v
+    # outer state: anchor + momentum (unstacked, sharded over the full mesh)
+    outer_dev = n * (BF16 + F32) / n_chips
+    # per-cluster delta + error buffers (f32, stacked, cluster-sharded)
+    buffers_dev = n * 2 * F32 / chips_per_cluster
+    # PowerSGD warm starts: sum over matrices of n*r f32 ~ bounded by
+    # (r / min_dim) of param count; use the exact accounting
+    from repro.core.mesh_compression import MeshCompressionConfig
+    from repro.launch.steps import params_specs
+    ccfg = MeshCompressionConfig(rank=rank)
+    q_elems = 0
+    for x in __import__("jax").tree.leaves(params_specs(cfg)):
+        shp = x.shape
+        if len(shp) >= 2 and min(shp[-2], shp[-1]) >= ccfg.min_dim_for_lowrank:
+            lead = math.prod(shp[:-2]) if len(shp) > 2 else 1
+            q_elems += lead * shp[-1] * min(rank, shp[-2], shp[-1])
+    q_dev = q_elems * F32 / chips_per_cluster
+    # activation working set (remat: one unit's internals + layer carries)
+    d = cfg.d_model
+    act_dev = batch_tokens_per_device * d * BF16 * 12
+    total = p_dev + adam_dev + outer_dev + buffers_dev + q_dev + act_dev
+    return {"arch": arch, "params_gb": p_dev / 1e9,
+            "adam_gb": adam_dev / 1e9, "outer_gb": outer_dev / 1e9,
+            "ef_buffers_gb": buffers_dev / 1e9, "powersgd_q_gb": q_dev / 1e9,
+            "activations_gb": act_dev / 1e9, "total_gb": total / 1e9,
+            "fits_v5e": total < 16e9, "fits_v5p": total < 95e9}
+
+
+def main() -> None:
+    from repro.configs.base import ARCH_IDS
+    path = sys.argv[1] if len(sys.argv) > 1 else None
+    measured = {}
+    if path:
+        for r in json.load(open(path)):
+            if r.get("status") == "ok" and "train" in r \
+                    and not r.get("multi_pod"):
+                measured[r["arch"]] = (
+                    r["train"]["per_device_memory_bytes"] / 1e9)
+    print(f"{'arch':24s} {'params':>7s} {'adam':>6s} {'outer':>6s} "
+          f"{'EF':>6s} {'Q':>6s} {'acts':>6s} {'TOTAL':>7s} "
+          f"{'measured':>9s} {'fits':>9s}")
+    for arch in [a for a in ARCH_IDS if a not in ("opt-1.3b",)]:
+        p = plan(arch)
+        m = measured.get(arch)
+        fits = "v5e" if p["fits_v5e"] else ("v5p" if p["fits_v5p"]
+                                            else ">v5p")
+        print(f"{arch:24s} {p['params_gb']:7.2f} {p['adam_gb']:6.2f} "
+              f"{p['outer_gb']:6.2f} {p['ef_buffers_gb']:6.2f} "
+              f"{p['powersgd_q_gb']:6.2f} {p['activations_gb']:6.2f} "
+              f"{p['total_gb']:7.1f} "
+              f"{(f'{m:8.1f}G' if m else '      --'):>9s} {fits:>9s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+  python -m benchmarks.run [--fast] [--skip-convergence]
+
+Prints ``name,value,unit`` CSV lines per benchmark plus JSON blobs to
+benchmarks/out/. Mapping to the paper:
+  fig3_convergence   -> Fig. 3 (loss: AllReduce/DiLoCoX/OpenDiLoCo/Cocktail)
+  fig4_throughput    -> Fig. 4 + §4.2.2 (357x / 32x speedups)
+  table1_ablation    -> Table 1 (overlap/compression ablation)
+  kernels            -> compressor/attention hot-spot microbench
+  roofline           -> EXPERIMENTS.md §Roofline source (needs
+                        dryrun_results.json from launch/dryrun.py --all)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-convergence", action="store_true",
+                    help="skip the (slow) training-based benchmarks")
+    ap.add_argument("--out-dir", default="benchmarks/out")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    from benchmarks import ablation, kernels_bench, throughput
+
+    blobs = {}
+
+    # Fig. 4 / 357x
+    for arch in ("opt-1.3b", "qwen1.5-107b"):
+        r = throughput.run(arch)
+        blobs[f"fig4_{arch}"] = r
+        for m, v in r["methods"].items():
+            print(f"fig4_throughput.{arch}.{m},{v['tokens_per_s']},"
+                  f"tokens_per_s")
+        print(f"fig4_speedup.{arch}.diloco_x,"
+              f"{r['speedup_vs_allreduce']['diloco_x']},x_vs_allreduce")
+
+    # kernels
+    kb = kernels_bench.run()
+    blobs["kernels"] = kb
+    for k, v in kb.items():
+        print(f"kernels.{k},{v:.1f},us_per_call")
+
+    # Table 1 (throughput column always; loss column unless skipped)
+    if args.skip_convergence:
+        tp = ablation.throughput_column()
+        blobs["table1_throughput"] = tp
+        for k, v in tp.items():
+            print(f"table1_ablation.{k},{v:.1f},tokens_per_s")
+    else:
+        ab = ablation.run(fast=args.fast)
+        blobs["table1"] = ab
+        for k, v in ab["rows"].items():
+            print(f"table1_ablation.{k}.loss,{v['loss']},nll")
+            print(f"table1_ablation.{k}.throughput,{v['tokens_per_s']},"
+                  f"tokens_per_s")
+        print(f"table1_ablation.ordering_ok,"
+              f"{int(ab['throughput_ordering_ok'])},bool")
+
+    # Fig. 3 convergence
+    if not args.skip_convergence:
+        from benchmarks import convergence
+        cv = convergence.run(fast=args.fast)
+        blobs["fig3"] = cv
+        for m in ("allreduce", "diloco_x", "opendiloco", "cocktail"):
+            print(f"fig3_convergence.{m}.final_loss,{cv[m]['final']:.3f},nll")
+        print(f"fig3_convergence.ordering_ok,{int(cv['ordering_ok'])},bool")
+
+    # beyond-paper: decentralized scaling envelope
+    from benchmarks import scaling
+    sc = scaling.run()
+    blobs["scaling"] = sc
+    for k, v in sc["max_fully_hidden_clusters"].items():
+        print(f"scaling.max_hidden_clusters.{k},{v},clusters")
+
+    # roofline (if the dry-run matrix has been produced)
+    if os.path.exists("dryrun_results.json"):
+        from benchmarks import roofline
+        with open("dryrun_results.json") as f:
+            rows = roofline.build_rows(json.load(f))
+        blobs["roofline"] = rows
+        ok = sum(1 for r in rows if r.get("status") == "ok")
+        print(f"roofline.combos_ok,{ok},count")
+
+    with open(os.path.join(args.out_dir, "results.json"), "w") as f:
+        json.dump(blobs, f, indent=1, default=str)
+    print("benchmarks.done,1,bool")
+
+
+if __name__ == "__main__":
+    main()

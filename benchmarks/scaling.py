@@ -1,0 +1,64 @@
+"""Beyond-paper: decentralized scaling sweep.
+
+The paper evaluates one cluster topology; here we sweep the number of
+clusters C (2..32) and local steps H for qwen1.5-107b over 1 Gbps and ask
+when the outer sync stops hiding behind local compute (the §2.3 overlap
+condition T_comm <= H * t_step) — i.e. the operating envelope of DiLoCoX,
+and what Alg. 3's rank annealing buys at each point.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from repro.core import comm
+from repro.core.compression import LowRankQuant, tree_shapes
+
+
+def run(arch: str = "qwen1.5-107b") -> Dict:
+    from benchmarks.throughput import (A800_PEAK, MFU, N_GPUS,
+                                       TOKENS_PER_STEP, model_setup)
+
+    cfg, shapes, n_params = model_setup(arch)
+    t_step = 6.0 * n_params * TOKENS_PER_STEP / (
+        N_GPUS.get(arch, 160) * A800_PEAK * MFU)
+    rows: List[dict] = []
+    for C in (2, 4, 8, 16, 32):
+        for H in (25, 125, 500):
+            for rank in (2048, 512, 128):
+                dlx = LowRankQuant(rank=rank, bits=4)
+                wire = dlx.wire_bytes(shapes)
+                sc = comm.CommScenario(n_clusters=C, t_step_s=t_step,
+                                       tokens_per_step=TOKENS_PER_STEP * C
+                                       // 2)
+                r = comm.method_throughput(
+                    "dlx", param_bytes_fp32=n_params * 4.0,
+                    wire_bytes=wire, h_steps=H, overlap=True, sc=sc)
+                rows.append({
+                    "clusters": C, "H": H, "rank": rank,
+                    "comm_s": round(r.comm_s_per_round, 1),
+                    "hidden": r.exposed_comm_s == 0.0,
+                    "exposed_s": round(r.exposed_comm_s, 1),
+                    "tokens_per_s": round(r.tokens_per_s, 0),
+                    "overlap_margin": round(
+                        H * t_step / max(r.comm_s_per_round, 1e-9), 2),
+                })
+    # envelope: largest C fully hidden at each (H, rank)
+    envelope = {}
+    for row in rows:
+        key = f"H={row['H']},r={row['rank']}"
+        if row["hidden"]:
+            envelope[key] = max(envelope.get(key, 0), row["clusters"])
+    return {"arch": arch, "t_step_s": round(t_step, 2), "rows": rows,
+            "max_fully_hidden_clusters": envelope}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"{'C':>3} {'H':>4} {'rank':>5} {'comm_s':>8} {'hidden':>7} "
+          f"{'margin':>7}")
+    for r in out["rows"]:
+        print(f"{r['clusters']:>3} {r['H']:>4} {r['rank']:>5} "
+              f"{r['comm_s']:>8} {str(r['hidden']):>7} "
+              f"{r['overlap_margin']:>7}")
+    print(json.dumps(out["max_fully_hidden_clusters"], indent=1))

@@ -1,0 +1,107 @@
+"""Paper Fig. 4 + the 357x headline: end-to-end throughput of AllReduce /
+OpenDiLoCo / CocktailSGD / DiLoCoX over a 1 Gbps decentralized link.
+
+Everything is *derived*, not transcribed:
+ - wire bytes: real parameter shapes (eval_shape) x each method's
+   compressor accounting (core.compression), including index overheads the
+   paper's "compression ratio" quietly ignores;
+ - ring-AllReduce / all-gather times at 1 Gbps (core.comm);
+ - local step time from a FLOPs model of the paper's hardware:
+   t_step = 6 N tokens / (n_gpus * 312 TF * MFU). Fitting MFU to the
+   paper's published throughputs gives a consistent ~4.5% on BOTH models
+   (OPT-1.3B on 16 A800s and Qwen1.5-107B on 160 A800s — low MFU is
+   plausible for 40G A800s + cross-node PP), so MFU=0.045 is the single
+   calibrated constant; tokens/step = 36k inferred the same way.
+ - the §2.3 one-step-delay overlap hides comm behind H*t_step.
+
+The claim under reproduction: DiLoCoX ~357x vs AllReduce and ~1.35x vs
+CocktailSGD at 107B; ~32x vs AllReduce at 1.3B (paper §4.2.2).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from repro.core import comm
+from repro.core.compression import (CocktailSGD, FP16, LowRankQuant,
+                                    tree_shapes)
+
+A800_PEAK = 312e12
+MFU = 0.045
+TOKENS_PER_STEP = 36_000
+N_GPUS = {"opt-1.3b": 16, "qwen1.5-107b": 160}
+
+
+def model_setup(arch: str):
+    from repro.configs.base import get_config
+    from repro.launch import steps
+    from repro.models.model import count_params
+
+    cfg = get_config(arch)
+    p_specs = steps.params_specs(cfg)
+    shapes = tree_shapes(p_specs)
+    n_params = count_params(cfg)
+    return cfg, shapes, n_params
+
+
+def run(arch: str = "qwen1.5-107b", n_clusters: int = 2,
+        h_steps: int = 125, rank: int = 2048) -> Dict:
+    cfg, shapes, n_params = model_setup(arch)
+    n_gpus = N_GPUS.get(arch, 16)
+    t_step = 6.0 * n_params * TOKENS_PER_STEP / (n_gpus * A800_PEAK * MFU)
+    sc = comm.CommScenario(n_clusters=n_clusters, t_step_s=t_step,
+                           tokens_per_step=TOKENS_PER_STEP)
+
+    param_bytes = n_params * 4.0
+    rows = {}
+    rows["allreduce"] = comm.method_throughput(
+        "allreduce", param_bytes_fp32=param_bytes,
+        wire_bytes=param_bytes, h_steps=1, overlap=False, sc=sc,
+        allreduce_per_step=True)
+    fp16 = FP16()
+    rows["opendiloco"] = comm.method_throughput(
+        "opendiloco", param_bytes_fp32=param_bytes,
+        wire_bytes=fp16.wire_bytes(shapes), h_steps=4 * h_steps,
+        overlap=False, sc=sc)
+    cocktail = CocktailSGD(random_ratio=0.1,
+                           topk_ratio=0.04 if "107" in arch else 0.08,
+                           bits=4)
+    rows["cocktail"] = comm.method_throughput(
+        "cocktail", param_bytes_fp32=param_bytes,
+        wire_bytes=cocktail.wire_bytes(shapes), h_steps=1, overlap=False,
+        sc=sc, allreduce_per_step=True)
+    # paper hyperparams: r=2048 at 107B; at 1.3B the paper used quant+H
+    # only ("we did not use the adaptive algorithm"), r=64 matches its 500x
+    dlx = LowRankQuant(rank=rank if "107" in arch else 64, bits=4)
+    rows["diloco_x"] = comm.method_throughput(
+        "diloco_x", param_bytes_fp32=param_bytes,
+        wire_bytes=dlx.wire_bytes(shapes), h_steps=h_steps, overlap=True,
+        sc=sc)
+
+    out = {"arch": arch, "n_params": n_params,
+           "t_step_s": round(t_step, 3), "n_gpus": n_gpus, "methods": {}}
+    for k, r in rows.items():
+        out["methods"][k] = {
+            "tokens_per_s": round(r.tokens_per_s, 1),
+            "t_round_s": round(r.t_round_s, 2),
+            "comm_s": round(r.comm_s_per_round, 2),
+            "exposed_comm_s": round(r.exposed_comm_s, 2),
+            "wire_MB": round(r.wire_bytes / 1e6, 1),
+            "compression_x": round(param_bytes / r.wire_bytes, 1),
+        }
+    ar = rows["allreduce"].tokens_per_s
+    out["speedup_vs_allreduce"] = {
+        k: round(r.tokens_per_s / ar, 1) for k, r in rows.items()}
+    out["diloco_x_vs_cocktail"] = round(
+        rows["diloco_x"].tokens_per_s / rows["cocktail"].tokens_per_s, 2)
+    out["paper_reference"] = (
+        {"allreduce": 10.4, "cocktail": 2427, "diloco_x": 3728,
+         "speedup": 357} if "107" in arch else
+        {"allreduce": 745, "cocktail": 16161, "diloco_x": 23880,
+         "speedup": 32})
+    return out
+
+
+if __name__ == "__main__":
+    for arch in ("opt-1.3b", "qwen1.5-107b"):
+        print(json.dumps(run(arch), indent=1))

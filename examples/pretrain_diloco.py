@@ -1,0 +1,45 @@
+"""End-to-end driver: pre-train a ~100M-param dense model with the FULL
+DiLoCoX stack (mesh runtime, 8 simulated devices = 2 clusters x 2 data x
+2 model, adaptive compression, checkpointing) for a few hundred steps.
+
+  PYTHONPATH=src python examples/pretrain_diloco.py [--rounds 20]
+
+This is the executable twin of the production dry-run: the same
+launch/steps.py functions the 512-device dry-run lowers. NOTE: the full
+default budget (20 rounds x 10 steps of a 116M model) is sized for a real
+accelerator; on a 1-core CPU container use --rounds 2 --h-steps 2 to see
+the mechanics (CI does).
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--h-steps", type=int, default=10)
+    args = ap.parse_args()
+
+    # ~100M params: d=512, L=8, vocab 8192 -> 8*(4*512^2 + 3*512*2048) +
+    # 2*8192*512 ~ 42M... bump d_ff/d for ~100M
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "hundred-m", "--devices", "8", "--clusters", "2",
+        "--data", "2", "--model", "2",
+        "--rounds", str(args.rounds), "--h-steps", str(args.h_steps),
+        "--global-batch", "16", "--seq-len", "128",
+        "--inner-lr", "1e-3", "--outer-lr", "0.5", "--outer-momentum", "0.7",
+        "--rank", "32", "--adaptive",
+        "--ckpt-dir", "/tmp/diloco_ckpt",
+    ]
+    print(" ".join(cmd))
+    r = subprocess.run(cmd, env=env)
+    sys.exit(r.returncode)
+
+
+if __name__ == "__main__":
+    main()

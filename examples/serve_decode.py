@@ -1,0 +1,26 @@
+"""Batched serving example: greedy decode with KV caches (dense) and
+recurrent state (SSM) through the same serve_step the dry-run lowers.
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch gemma3-1b]
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    args = ap.parse_args()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", args.arch, "--smoke", "--devices", "4",
+           "--batch", "4", "--prompt-len", "12", "--gen-len", "12"]
+    print(" ".join(cmd))
+    sys.exit(subprocess.run(cmd, env=env).returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Sharding-aware npz checkpointing (offline container: no orbax).
+
+Saves the full pytree as flat npz entries keyed by the tree path, plus a
+tiny json manifest (step, arch, ...). On restore the tree is rebuilt and
+``jax.device_put`` re-applies target shardings if given. Values are pulled
+with ``jax.device_get`` (gathers shards) — fine for the model scales we
+execute on CPU; a production TPU deployment would swap in per-shard files
+behind the same API.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for p, x in flat:
+        arr = np.asarray(jax.device_get(x))
+        if arr.dtype.kind not in 'fiub':          # bf16/void: store as f32
+            arr = arr.astype(np.float32)
+        out[jax.tree_util.keystr(p)] = arr
+    return out
+
+
+def save(path: str, tree, *, step: int = 0, meta: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(path + ".npz", **arrays)
+    manifest = {"step": int(step), "n_arrays": len(arrays),
+                "meta": meta or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, tree_like, *, shardings=None):
+    """tree_like provides the structure; returns (tree, step)."""
+    with np.load(path + ".npz") as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        leaves = []
+        for p, ref in flat:
+            key = jax.tree_util.keystr(p)
+            arr = data[key]
+            assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+            leaves.append(jnp.asarray(arr).astype(ref.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    return tree, manifest["step"]
+
+
+def latest(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    cands = [f[:-5] for f in os.listdir(ckpt_dir) if f.endswith(".json")]
+    if not cands:
+        return None
+    best = max(cands, key=lambda c: json.load(
+        open(os.path.join(ckpt_dir, c + ".json")))["step"])
+    return os.path.join(ckpt_dir, best)

@@ -1,0 +1,205 @@
+"""Configuration system for the DiLoCoX reproduction framework.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``.
+The config fully determines the parameter pytree and the forward semantics;
+``reduced()`` produces the CPU-smoke variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0          # per-expert hidden dim
+    n_shared_experts: int = 0     # deepseek-style always-on experts
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    d_ff_dense: int = 0           # hidden dim of dense path (arctic residual /
+                                  # deepseek first dense layer)
+    first_k_dense: int = 0        # deepseek: first k layers use dense FFN
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    rope_head_dim: int = 64       # decoupled rope dims per head
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba2"          # mamba2 | xlstm
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    n_ssm_heads: int = 0          # mamba2 heads (0 -> d_inner//64)
+    chunk: int = 64               # chunked scan length
+    # xlstm: within each unit of `xlstm_unit` layers, the last is sLSTM
+    xlstm_unit: int = 8
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2: shared-weight attention block applied every `period` layers."""
+    shared_attn_period: int = 6
+    shared_d_ff: int = 0          # d_ff of the shared block's MLP
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "dense"         # dense | moe | hybrid | audio | vlm | ssm
+    source: str = ""              # citation for the config
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 512
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    # attention flavour
+    attn_type: str = "gqa"        # gqa | mla
+    rope_theta: float = 10_000.0
+    mrope: bool = False           # qwen2-vl M-RoPE (t,h,w sections)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    # sliding-window pattern: window size (0 = full attention) and the
+    # local:global pattern period (gemma3: 5 local then 1 global)
+    sliding_window: int = 0
+    global_every: int = 0         # 0 = all layers same; k>0: layer is global
+                                  # iff (idx % k == k-1)
+    # norms / residual structure
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    parallel_residual: bool = False   # stablelm-2 style attn+FFN in parallel
+    tie_embeddings: bool = False
+    # enc-dec (audio)
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+    # modality frontend stubs
+    modality: str = "text"        # text | audio | vlm
+    n_frontend_tokens: int = 0    # patches / frames prepended for audio & vlm
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"   # bf16 on TPU targets
+    # which layers are SSM vs attention for hybrid stacks; "all_ssm" for
+    # zamba-style (attention lives in the shared block)
+    sub_quadratic: bool = False   # eligible for long_500k
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def d_ff_resolved(self) -> int:
+        return self.d_ff
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests (<=2 layers,
+        d_model<=512, <=4 experts)."""
+        kw = dict(
+            name=self.name + "-smoke",
+            n_layers=2,
+            d_model=min(self.d_model, 128),
+            n_heads=4,
+            n_kv_heads=min(max(1, self.n_kv_heads), 2),
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=32,
+            n_frontend_tokens=min(self.n_frontend_tokens, 8) if self.n_frontend_tokens else 0,
+        )
+        if self.is_encdec:
+            kw["n_enc_layers"] = 2
+        if self.moe is not None:
+            kw["moe"] = replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=min(self.moe.d_ff_expert, 128),
+                n_shared_experts=min(self.moe.n_shared_experts, 1),
+                d_ff_dense=min(self.moe.d_ff_dense, 128) if self.moe.d_ff_dense else 0,
+                first_k_dense=min(self.moe.first_k_dense, 1),
+            )
+        if self.mla is not None:
+            kw["mla"] = replace(
+                self.mla, kv_lora_rank=32, q_lora_rank=32,
+                rope_head_dim=16, nope_head_dim=32, v_head_dim=32)
+            kw["head_dim"] = 0
+        if self.ssm is not None:
+            kw["ssm"] = replace(self.ssm, d_state=16, chunk=16, xlstm_unit=2)
+        if self.hybrid is not None:
+            kw["hybrid"] = replace(self.hybrid, shared_attn_period=2,
+                                   shared_d_ff=min(self.hybrid.shared_d_ff or 256, 256))
+        if self.mrope:
+            kw["mrope_sections"] = (4, 6, 6)   # sums to reduced head_dim/2
+        if self.global_every:
+            kw["global_every"] = 2
+        if self.sliding_window:
+            kw["sliding_window"] = 8
+        return replace(self, **kw)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS and memory plans)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "granite-3-8b", "deepseek-v2-236b", "arctic-480b", "stablelm-12b",
+    "phi3-medium-14b", "zamba2-1.2b", "seamless-m4t-large-v2",
+    "qwen2-vl-7b", "xlstm-1.3b", "gemma3-1b",
+    # the paper's own models
+    "opt-1.3b", "qwen1.5-107b",
+]
+
+_MODULE_FOR = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+               for a in ARCH_IDS}
+# extra configs usable via --arch but not part of the assigned matrix
+_MODULE_FOR["hundred-m"] = "repro.configs.hundred_m"
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULE_FOR)}")
+    mod = importlib.import_module(_MODULE_FOR[arch])
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Which (arch x shape) pairs run; mirrors DESIGN.md skip table."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md)"
+    return True, ""

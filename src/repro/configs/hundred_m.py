@@ -1,0 +1,10 @@
+"""~100M-param dense model for the end-to-end example driver (deliverable
+b: "train ~100M model for a few hundred steps")."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hundred-m", family="dense",
+    source="examples/pretrain_diloco.py",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+    d_ff=3072, vocab_size=8192, head_dim=64,
+)

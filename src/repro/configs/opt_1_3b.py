@@ -1,0 +1,9 @@
+"""opt-1.3b — the paper's small-scale experiment model (§4.1.1)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-1.3b", family="dense",
+    source="arXiv:2205.01068 (paper §4.1.1)",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=50272, head_dim=64, norm="layernorm",
+)

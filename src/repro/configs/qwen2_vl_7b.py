@@ -1,0 +1,13 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191].
+Vision tower is a stub per spec: inputs include precomputed patch embeddings
+(B, n_patches, d_model) merged into the prefix of the token sequence."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    source="arXiv:2409.12191",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    d_ff=18944, vocab_size=152064, head_dim=128,
+    mrope=True, mrope_sections=(16, 24, 24),
+    modality="vlm", n_frontend_tokens=256,
+)

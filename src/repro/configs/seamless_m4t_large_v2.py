@@ -1,0 +1,14 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec multimodal backbone
+[arXiv:2308.11596]. Frontend (mel+conv codec) is a stub per spec: inputs are
+precomputed frame embeddings of shape (B, n_frames, d_model)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    source="arXiv:2308.11596",
+    n_layers=24, n_enc_layers=24, is_encdec=True,
+    d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=256206, head_dim=64,
+    norm="layernorm", modality="audio",
+    n_frontend_tokens=1024,       # encoder frames per example
+)

@@ -1,0 +1,11 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks, no FFN [arXiv:2405.04517]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    source="arXiv:2405.04517",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304, head_dim=512,
+    ssm=SSMConfig(kind="xlstm", d_state=0, expand=2, chunk=64, xlstm_unit=8),
+    sub_quadratic=True,
+)

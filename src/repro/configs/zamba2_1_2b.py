@@ -1,0 +1,13 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block
+[arXiv:2411.15242]."""
+from repro.configs.base import ModelConfig, SSMConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    source="arXiv:2411.15242",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=32000, head_dim=64,
+    ssm=SSMConfig(kind="mamba2", d_state=64, expand=2, chunk=64),
+    hybrid=HybridConfig(shared_attn_period=6, shared_d_ff=8192),
+    sub_quadratic=True,
+)

@@ -1,0 +1,159 @@
+"""DiLoCoX round state machine (paper Alg. 2).
+
+This module is the *algorithm*, independent of how clusters are realised:
+``cluster_mean`` is injected (a stacked-axis mean in the single-host
+simulation; an ``all_gather``+mean over the pod/data mesh axis in the
+distributed runtime — see repro/train/trainer.py and launch/).
+
+Semantics implemented (and their provenance):
+ - Dual optimizer: inner AdamW for H local steps, outer Nesterov on averaged
+   pseudo-gradients (§2.2). Inner state persists across rounds.
+ - One-step-delay overlap (§2.3): round t averages delta^{t-1} (dataflow-
+   independent of the H inner steps -> XLA can overlap the collective), and
+   the outer update applied at the end of round t uses the DELAYED
+   Delta^{t-1}:   theta^t = OuterOpt(theta^{t-1}, Delta^{t-1}).
+   Local round-t progress reaches global params one round late, through the
+   averaged pseudo-gradient — replicas restart from the outer-updated params
+   every round, exactly as in DiLoCo.
+ - Error feedback (Alg. 2 verbatim): e^t = delta^{t-1} - Delta^{t-1} (error
+   vs the *global average*; ``error_vs_own=True`` switches to classic EF
+   e = delta - C(delta), used in an ablation).
+ - Compression: any ``core.compression.Compressor``; rank annealed by
+   ``core.adaptive`` between rounds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressor
+from repro.optim import nesterov
+
+
+class DiLoCoXState(NamedTuple):
+    params: Any               # global params theta_t (post outer updates)
+    inner_opt: Any            # per-cluster inner AdamW state (stacked)
+    outer_opt: Any            # outer Nesterov state (fp32, param-shaped)
+    delta_pending: Any        # per-cluster pseudo-grads awaiting averaging
+    error: Any                # per-cluster error-feedback buffers
+    comp_state: Any           # compressor warm starts (per cluster)
+    t: jnp.ndarray            # outer step
+
+
+def init_state(params, inner_opt_state, n_clusters: int,
+               compressor: Compressor) -> DiLoCoXState:
+    stack = lambda tree: jax.tree.map(
+        lambda x: jnp.zeros((n_clusters,) + x.shape, jnp.float32), tree)
+    comp0 = compressor.init_state(params)
+    comp_stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_clusters,) + x.shape).copy()
+        if hasattr(x, "shape") else x, comp0)
+    return DiLoCoXState(
+        params=params,
+        inner_opt=inner_opt_state,
+        outer_opt=nesterov.init(params),
+        delta_pending=stack(params),
+        error=stack(params),
+        comp_state=comp_stacked,
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+@dataclass
+class RoundConfig:
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    delay: bool = True            # one-step-delay overlap (§2.3)
+    compress: bool = True
+    error_feedback: bool = True
+    error_vs_own: bool = False    # classic EF instead of Alg. 2's variant
+
+
+def diloco_round(state: DiLoCoXState,
+                 inner_fn: Callable,          # (params, inner_opt, round_idx)
+                                              #   -> (params_H, inner_opt')
+                 compressor: Compressor,
+                 cluster_mean: Callable,      # stacked tree -> mean tree
+                 cfg: RoundConfig,
+                 rank_scalar: Optional[jnp.ndarray] = None,
+                 ):
+    """One outer round (H inner steps + overlapped communication).
+    Returns (new_state, aux) where aux comes from inner_fn (e.g. losses)."""
+    anchor = state.params
+
+    if cfg.delay:
+        # ---- communication "thread": average LAST round's pseudo-grads.
+        # Dataflow-independent of inner_fn below => overlappable by XLA.
+        if cfg.compress:
+            comp_fn = lambda d, s: compressor.roundtrip(d, s, rank_scalar)
+            delta_hat, comp_state = jax.vmap(comp_fn)(state.delta_pending,
+                                                      state.comp_state)
+        else:
+            delta_hat, comp_state = state.delta_pending, state.comp_state
+        Delta = cluster_mean(delta_hat)
+        if cfg.error_feedback:
+            if cfg.error_vs_own:
+                err = jax.tree.map(lambda d, dh: d - dh,
+                                   state.delta_pending, delta_hat)
+            else:   # Alg. 2: e = delta^{t-1} - Delta^{t-1}
+                err = jax.tree.map(lambda d, D: d - D[None],
+                                   state.delta_pending, Delta)
+        else:
+            err = jax.tree.map(jnp.zeros_like, state.error)
+
+        # ---- training "thread": H local steps from the current params.
+        params_inner, inner_opt, aux = inner_fn(state.params,
+                                                state.inner_opt, state.t)
+
+        # ---- join: next round's pending pseudo-grads (+ error comp.)
+        delta_new = jax.tree.map(
+            lambda a, p, e: (a.astype(jnp.float32)[None]
+                             - p.astype(jnp.float32)) + e,
+            anchor, params_inner, err)
+
+        # ---- delayed outer update on the ANCHOR (theta^{t-1})
+        def outer_apply(params, outer_opt):
+            return nesterov.update(Delta, outer_opt, params,
+                                   lr=cfg.outer_lr,
+                                   momentum=cfg.outer_momentum)
+
+        # skip the very first round (no averaged Delta yet): Delta==0 anyway
+        params_new, outer_opt = outer_apply(anchor, state.outer_opt)
+    else:
+        # ---- synchronous DiLoCo/OpenDiLoCo: train, then average THIS
+        # round's pseudo-grads and apply immediately (no overlap).
+        params_inner, inner_opt, aux = inner_fn(state.params,
+                                                state.inner_opt, state.t)
+        delta_raw = jax.tree.map(
+            lambda a, p, e: (a.astype(jnp.float32)[None]
+                             - p.astype(jnp.float32)) + e,
+            anchor, params_inner, state.error)
+        if cfg.compress:
+            comp_fn = lambda d, s: compressor.roundtrip(d, s, rank_scalar)
+            delta_hat, comp_state = jax.vmap(comp_fn)(delta_raw,
+                                                      state.comp_state)
+        else:
+            delta_hat, comp_state = delta_raw, state.comp_state
+        Delta = cluster_mean(delta_hat)
+        if cfg.error_feedback:
+            if cfg.error_vs_own:
+                err = jax.tree.map(lambda d, dh: d - dh, delta_raw, delta_hat)
+            else:
+                err = jax.tree.map(lambda d, D: d - D[None], delta_raw, Delta)
+        else:
+            err = jax.tree.map(jnp.zeros_like, state.error)
+        delta_new = jax.tree.map(jnp.zeros_like, state.delta_pending)
+        params_new, outer_opt = nesterov.update(
+            Delta, state.outer_opt, anchor,
+            lr=cfg.outer_lr, momentum=cfg.outer_momentum)
+        # pending stays zero in sync mode; error carries to next round
+        delta_new = delta_new if cfg.delay else delta_new
+
+    return DiLoCoXState(
+        params=params_new, inner_opt=inner_opt, outer_opt=outer_opt,
+        delta_pending=(delta_new if cfg.delay else
+                       jax.tree.map(jnp.zeros_like, state.delta_pending)),
+        error=err, comp_state=comp_state, t=state.t + 1), aux

@@ -1,0 +1,53 @@
+"""Cluster membership / dropout tolerance for the decentralized outer step.
+
+Decentralized clusters (the paper's setting: independent sites over WAN
+links) drop out and rejoin. The outer average must stay correct under a
+changing participant set: Delta = sum_c m_c * C(delta_c) / sum_c m_c with
+a liveness mask m — and a rejoining cluster must restart from the current
+global params (it missed outer updates), which the Alg. 2 state machine
+already provides (replicas restart from theta_t every round).
+
+This module is pure algorithm (mask-weighted means + state resets) so it
+composes with both the single-host simulator and the mesh runtime.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_cluster_mean(stacked_tree: Any, alive: jnp.ndarray) -> Any:
+    """Mean over the cluster axis counting only alive clusters.
+    alive: (C,) float/bool mask. Falls back to a zero update if no cluster
+    reported (sum mass 0) — the outer optimizer then applies momentum only.
+    """
+    mass = jnp.maximum(alive.astype(jnp.float32).sum(), 1e-9)
+
+    def one(x):
+        m = alive.astype(x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x * m).sum(axis=0) / mass.astype(x.dtype)
+
+    return jax.tree.map(one, stacked_tree)
+
+
+def reset_rejoining(stacked_tree: Any, rejoined: jnp.ndarray,
+                    fill_value: float = 0.0) -> Any:
+    """Zero per-cluster buffers (pending deltas, error feedback) of clusters
+    that just rejoined — their stale local state predates the current
+    global params and must not leak into the next average."""
+
+    def one(x):
+        m = rejoined.astype(bool).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, jnp.full_like(x, fill_value), x)
+
+    return jax.tree.map(one, stacked_tree)
+
+
+def effective_batch_scale(alive: jnp.ndarray, n_clusters: int) -> jnp.ndarray:
+    """Outer-lr compensation for lost data parallelism: with fewer clusters
+    the averaged pseudo-gradient has higher variance; scale by
+    sqrt(alive/C) (linear-scaling-rule analogue for the outer step)."""
+    frac = alive.astype(jnp.float32).sum() / max(n_clusters, 1)
+    return jnp.sqrt(jnp.maximum(frac, 1e-9))

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: block-wise symmetric int4 quantization (pack/unpack).
+
+This is the wire-format hot spot of the DiLoCoX compressor (Alg. 1 step 2):
+every outer step quantizes the PowerSGD factors of every parameter matrix.
+On TPU the kernel streams `rows_per_tile` quantization blocks from HBM into
+VMEM, computes the per-block scale on the VPU, packs two int4 codes per
+byte, and writes the packed payload + scales back out.
+
+Validated in interpret mode on CPU against ``ref.quant4_pack_ref`` (the
+tests sweep sizes/dtypes). Layout note: the pair-split uses a
+reshape-(block/2,2) access pattern; on real TPU the final pack prefers a
+(2, block/2) sublane layout — the BlockSpec keeps the whole quantization
+block in one tile so either layout stays VMEM-local.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(x_ref, packed_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)              # (rows, block)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(amax == 0, 1.0, amax / 7.0)   # qmax = 7
+    q = jnp.clip(jnp.round(x / scale[:, None]), -8, 7).astype(jnp.int32)
+    qu = (q & 0xF).astype(jnp.uint8)
+    rows, block = qu.shape
+    pair = qu.reshape(rows, block // 2, 2)
+    packed_ref[...] = pair[:, :, 0] | (pair[:, :, 1] << 4)
+    scale_ref[...] = scale
+
+
+def _unpack_kernel(packed_ref, scale_ref, out_ref):
+    p = packed_ref[...]                             # (rows, block//2) uint8
+    lo = (p & 0xF).astype(jnp.int32)
+    hi = ((p >> 4) & 0xF).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], axis=2).reshape(p.shape[0], -1)
+    codes = jnp.where(codes >= 8, codes - 16, codes)
+    out_ref[...] = (codes.astype(jnp.float32)
+                    * scale_ref[...][:, None])
+
+
+def quant4_pack_pallas(x: jnp.ndarray, block: int = 256,
+                       rows_per_tile: int = 8, interpret: bool = True):
+    """x: flat (n,) -> (packed uint8 (ceil(n/2),), scales f32)."""
+    n = x.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    rows = xp.shape[0]
+    row_pad = (-rows) % rows_per_tile
+    if row_pad:
+        xp = jnp.pad(xp, ((0, row_pad), (0, 0)))
+    grid = (xp.shape[0] // rows_per_tile,)
+    packed, scales = pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_per_tile, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows_per_tile, block // 2), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0], block // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp)
+    packed = packed[:rows].reshape(-1)[: (n + pad) // 2]
+    scales = scales[:rows]
+    return packed, scales
+
+
+def quant4_unpack_pallas(packed: jnp.ndarray, scales: jnp.ndarray, n: int,
+                         block: int = 256, rows_per_tile: int = 8,
+                         interpret: bool = True) -> jnp.ndarray:
+    rows = scales.shape[0]
+    pp = packed.reshape(rows, block // 2)
+    row_pad = (-rows) % rows_per_tile
+    if row_pad:
+        pp = jnp.pad(pp, ((0, row_pad), (0, 0)))
+        scales = jnp.pad(scales, (0, row_pad))
+    grid = (pp.shape[0] // rows_per_tile,)
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_tile, block // 2), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_tile, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pp.shape[0], block), jnp.float32),
+        interpret=interpret,
+    )(pp, scales)
+    return out[:rows].reshape(-1)[:n]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference the
+kernel tests assert_allclose against).
+
+Wire format (int4, block-wise symmetric):
+  packed: uint8, two int4 codes per byte (low nibble = even index)
+  scales: float32, one per `block` elements
+Numerics match core.compression.quantize_sim exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int4 block quantization (pack / unpack)
+# ---------------------------------------------------------------------------
+
+def quant4_pack_ref(x: jnp.ndarray, block: int = 256):
+    """x: flat (n,) f32, n % (2*block assumptions): pads internally.
+    Returns (packed uint8 (ceil(n/2),), scales f32 (ceil(n/block),), n)."""
+    n = x.shape[0]
+    pad = (-n) % block
+    xf = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    qmax = 7.0
+    scale = jnp.max(jnp.abs(xf), axis=1) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -8, 7).astype(jnp.int32)
+    qu = (q & 0xF).astype(jnp.uint8).reshape(-1)          # two's complement
+    lo = qu[0::2]
+    hi = qu[1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scale, n
+
+
+def quant4_unpack_ref(packed: jnp.ndarray, scales: jnp.ndarray, n: int,
+                      block: int = 256) -> jnp.ndarray:
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], axis=1).reshape(-1)
+    codes = jnp.where(codes >= 8, codes - 16, codes)       # sign extend
+    vals = codes.astype(jnp.float32).reshape(-1, block) * scales[:, None]
+    return vals.reshape(-1)[:n]
+
+
+def quant4_roundtrip_ref(x: jnp.ndarray, block: int = 256) -> jnp.ndarray:
+    shape = x.shape
+    packed, scales, n = quant4_pack_ref(x.reshape(-1), block)
+    return quant4_unpack_ref(packed, scales, n, block).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul (PowerSGD projections G@Q / G^T@P)
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, GQA) — semantic oracle
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """q: (B,Sq,H,d); k,v: (B,Sk,KV,d). Plain softmax attention in f32."""
+    B, Sq, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, d).astype(q.dtype)

@@ -1,0 +1,77 @@
+"""Batched serving driver: prefill-by-decode + greedy generation loop on a
+host-device mesh, using the same serve_step the dry-run lowers.
+
+  python -m repro.launch.serve --arch gemma3-1b --smoke --devices 4 \
+      --batch 4 --prompt-len 16 --gen-len 16
+"""
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--model", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs.base import get_config
+    from repro.launch import steps
+    from repro.models import model as M
+    from repro.parallel import sharding as sh
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    mesh = jax.make_mesh((args.data, args.model), ("data", "model"))
+    M.set_activation_sharder(sh.make_activation_sharder(mesh))
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    s_max = args.prompt_len + args.gen_len
+    state = M.init_decode_state(cfg, args.batch, s_max)
+    if cfg.is_encdec:
+        fe = jax.random.normal(jax.random.PRNGKey(7),
+                               (args.batch, cfg.n_frontend_tokens,
+                                cfg.d_model)) * 0.02
+        mem = M.prefill_encoder(params, cfg, fe)
+        state = M.fill_cross_caches(params, cfg, state, mem)
+
+    serve_step = jax.jit(steps.make_serve_step(cfg))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    # prefill by decode (correct for every family incl. SSM state)
+    tok = prompt[:, :1]
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        nxt, state = serve_step(params, state, prompt[:, t:t + 1])
+    generated = [int(x) for x in np.asarray(nxt[:, 0])]
+    outs = [nxt]
+    for t in range(args.gen_len - 1):
+        nxt, state = serve_step(params, state, nxt)
+        outs.append(nxt)
+    gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
+    dt = time.time() - t0
+    toks = args.batch * (args.prompt_len + args.gen_len - 1)
+    print(f"generated shape {gen.shape}; {toks / dt:.1f} tok/s "
+          f"({dt:.2f}s total)")
+    print("sample:", gen[0][:12].tolist())
+    print("SERVE-DRIVER-OK")
+
+
+if __name__ == "__main__":
+    main()

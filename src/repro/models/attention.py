@@ -1,0 +1,278 @@
+"""Attention flavours: GQA (+RoPE/M-RoPE/sliding-window), DeepSeek-V2 MLA,
+cross-attention, with train/prefill and cached single-token decode paths.
+
+Long sequences use a query-chunked formulation so the (Sq, Sk) score matrix
+never materialises at full size (peak is (chunk, Sk)); the Pallas flash
+kernel in ``repro.kernels.flash_attention`` is the TPU hot-spot version and
+``repro.models.attention`` is its semantic reference.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_mrope, apply_rope, dense_init, split)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mask construction (position-id based, chunk friendly)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int) -> jnp.ndarray:
+    """Returns additive bias (..., Sq, Sk). window==0 -> no sliding limit."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        ok = ok & (kp <= qp)
+    if window > 0:
+        ok = ok & (kp > qp - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def grouped_attend(q, k, v, bias, *, chunk: int = 0,
+                   plain_causal: bool = False) -> jnp.ndarray:
+    """GQA core. q: (B,Sq,H,dh); k,v: (B,Sk,KV,dh[v]); bias: (B|1,Sq,Sk) or
+    (Sq,Sk) additive. Returns (B,Sq,H,dv).
+
+    plain_causal=True marks a pure causal self-attention call (no window,
+    qk dims equal) — eligible for the Pallas flash kernel when
+    REPRO_USE_PALLAS=1 (kernels/flash_attention; validated vs this code)."""
+    import os
+    if (plain_causal and os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+            and q.shape[1] == k.shape[1] and q.shape[-1] == v.shape[-1]
+            and q.shape[1] % 128 == 0):
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=True)
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Sq, KV, G, dh)
+    if bias.ndim == 2:
+        bias = bias[None]
+
+    def _block(q_blk, bias_blk):
+        # q_blk (B,cq,KV,G,dh) ; bias_blk (B|1,cq,Sk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        s = s + bias_blk[:, None, None, :, :]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+        return o
+
+    if chunk and Sq > chunk and Sq % chunk == 0:
+        n = Sq // chunk
+        qc = qg.reshape(B, n, chunk, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+        bc = bias.reshape(bias.shape[0], n, chunk, -1).transpose(1, 0, 2, 3)
+        # checkpoint per chunk: backward recomputes the (cq,Sk) scores
+        # instead of stashing every chunk's f32 scores as scan residuals
+        blk = jax.checkpoint(_block)
+        oc = jax.lax.map(lambda args: blk(*args), (qc, bc))
+        o = oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, v.shape[-1])
+    else:
+        o = _block(qg, bias)
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype=jnp.float32):
+    k1, k2, k3, k4 = split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(k3, d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _qkv(p, x, n_heads, n_kv, head_dim):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    return q, k, v
+
+
+def apply_gqa(p, x, positions, *, n_heads, n_kv, head_dim, rope_theta,
+              causal=True, window=0, chunk=0, mrope_positions=None,
+              mrope_sections=None) -> jnp.ndarray:
+    """Self-attention over a full sequence (train / prefill)."""
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, rope_theta, mrope_sections)
+        k = apply_mrope(k, mrope_positions, rope_theta, mrope_sections)
+    else:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    bias = _mask_bias(positions, positions, causal=causal, window=window)
+    o = grouped_attend(q, k, v, bias, chunk=chunk,
+                       plain_causal=(causal and window == 0))
+    return o.reshape(*x.shape[:2], -1) @ p["wo"]
+
+
+def decode_gqa(p, x1, cache, index, *, n_heads, n_kv, head_dim, rope_theta,
+               window=0, mrope_positions=None, mrope_sections=None):
+    """One-token decode. x1: (B,1,d). cache: {"k","v"}: (B,Smax,KV,dh).
+    index: scalar current position. Returns (out (B,1,d), new_cache)."""
+    B = x1.shape[0]
+    q, k_new, v_new = _qkv(p, x1, n_heads, n_kv, head_dim)
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, rope_theta, mrope_sections)
+        k_new = apply_mrope(k_new, mrope_positions, rope_theta, mrope_sections)
+    else:
+        q = apply_rope(q, pos, rope_theta)
+        k_new = apply_rope(k_new, pos, rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), index, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), index, axis=1)
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)[None, :]
+    bias = _mask_bias(pos, k_pos, causal=True, window=window)
+    o = grouped_attend(q, k, v, bias)
+    out = o.reshape(B, 1, -1) @ p["wo"]
+    return out, {"k": k, "v": v}
+
+
+def init_gqa_cache(batch, s_max, n_kv, head_dim, *, window=0, dtype=jnp.float32):
+    """Full-length cache for global layers; ring buffer of size `window`
+    (plus a slot-position array) for sliding-window layers, so a 500k-context
+    decode keeps O(window) memory on local layers."""
+    if window > 0 and window < s_max:
+        return {"k": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+                "v": jnp.zeros((batch, window, n_kv, head_dim), dtype),
+                "pos": jnp.full((batch, window), -1, jnp.int32)}
+    return {"k": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, s_max, n_kv, head_dim), dtype)}
+
+
+def decode_gqa_ring(p, x1, cache, index, *, n_heads, n_kv, head_dim,
+                    rope_theta):
+    """Sliding-window decode against a ring buffer. The `pos` array tracks
+    which absolute position each slot holds; all stored positions are within
+    the window by construction, so the only mask is slot-validity."""
+    B = x1.shape[0]
+    W = cache["k"].shape[1]
+    q, k_new, v_new = _qkv(p, x1, n_heads, n_kv, head_dim)
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+    slot = jnp.mod(index, W)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos_arr = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((B, 1), index, jnp.int32), slot, axis=1)
+    bias = jnp.where(pos_arr >= 0, 0.0, NEG_INF).astype(jnp.float32)[:, None, :]
+    o = grouped_attend(q, k, v, bias)
+    out = o.reshape(B, 1, -1) @ p["wo"]
+    return out, {"k": k, "v": v, "pos": pos_arr}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def apply_cross(p, x, memory, *, n_heads, n_kv, head_dim):
+    B, S, _ = x.shape
+    Sm = memory.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (memory @ p["wk"]).reshape(B, Sm, n_kv, head_dim)
+    v = (memory @ p["wv"]).reshape(B, Sm, n_kv, head_dim)
+    bias = jnp.zeros((1, S, Sm), jnp.float32)
+    o = grouped_attend(q, k, v, bias)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_kv(p, memory, *, n_kv, head_dim):
+    B, Sm, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(B, Sm, n_kv, head_dim)
+    v = (memory @ p["wv"]).reshape(B, Sm, n_kv, head_dim)
+    return {"k": k, "v": v}
+
+
+def decode_cross(p, x1, kv, *, n_heads, head_dim):
+    B = x1.shape[0]
+    q = (x1 @ p["wq"]).reshape(B, 1, n_heads, head_dim)
+    bias = jnp.zeros((1, 1, kv["k"].shape[1]), jnp.float32)
+    o = grouped_attend(q, kv["k"], kv["v"], bias)
+    return o.reshape(B, 1, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 MLA (Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d_model: int, n_heads: int, mla, dtype=jnp.float32):
+    ks = split(key, 6)
+    qd = mla.nope_head_dim + mla.rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], d_model, mla.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], mla.q_lora_rank, n_heads * qd, dtype),
+        "wkv_a": dense_init(ks[2], d_model,
+                            mla.kv_lora_rank + mla.rope_head_dim, dtype),
+        "wkv_b": dense_init(ks[3], mla.kv_lora_rank,
+                            n_heads * (mla.nope_head_dim + mla.v_head_dim), dtype),
+        "wo": dense_init(ks[4], n_heads * mla.v_head_dim, d_model, dtype),
+    }
+
+
+def _mla_qkv(p, x, c_kv, k_rope_flat, positions, n_heads, mla, rope_theta):
+    """Shared between prefill and decode. c_kv: (B,S,lora); k_rope_flat:
+    (B,S,rope_dim) pre-RoPE'd latent rope key (shared across heads)."""
+    B, Sq = x.shape[:2]
+    qd = mla.nope_head_dim + mla.rope_head_dim
+    q = ((x @ p["wq_a"]) @ p["wq_b"]).reshape(B, Sq, n_heads, qd)
+    q_nope, q_rope = jnp.split(q, [mla.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    kv = (c_kv @ p["wkv_b"]).reshape(
+        B, c_kv.shape[1], n_heads, mla.nope_head_dim + mla.v_head_dim)
+    k_nope, v = jnp.split(kv, [mla.nope_head_dim], axis=-1)
+    k_rope = jnp.broadcast_to(k_rope_flat[:, :, None, :],
+                              (B, c_kv.shape[1], n_heads, mla.rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q_full, k_full, v
+
+
+def apply_mla(p, x, positions, *, n_heads, mla, rope_theta, chunk=0):
+    B, S, _ = x.shape
+    ckv_rope = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(ckv_rope, [mla.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0, :]
+    q, k, v = _mla_qkv(p, x, c_kv, k_rope, positions, n_heads, mla, rope_theta)
+    bias = _mask_bias(positions, positions, causal=True, window=0)
+    o = grouped_attend(q, k, v, bias, chunk=chunk)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def init_mla_cache(batch, s_max, mla, dtype=jnp.float32):
+    """The MLA cache stores only the compressed latent + shared rope key —
+    the paper's memory win (kv_lora + rope_dim per token, not 2*H*dh)."""
+    return {"c_kv": jnp.zeros((batch, s_max, mla.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, s_max, mla.rope_head_dim), dtype)}
+
+
+def decode_mla(p, x1, cache, index, *, n_heads, mla, rope_theta):
+    B = x1.shape[0]
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    ckv_rope = x1 @ p["wkv_a"]
+    c_new, kr_new = jnp.split(ckv_rope, [mla.kv_lora_rank], axis=-1)
+    kr_new = apply_rope(kr_new[:, :, None, :], pos, rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), index, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), index, axis=1)
+    q, k, v = _mla_qkv(p, x1, c_kv, k_rope, pos, n_heads, mla, rope_theta)
+    k_pos = jnp.arange(c_kv.shape[1], dtype=jnp.int32)[None, :]
+    bias = _mask_bias(pos, k_pos, causal=True, window=0)
+    o = grouped_attend(q, k, v, bias)
+    return o.reshape(B, 1, -1) @ p["wo"], {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,146 @@
+"""Shared building blocks: norms, RoPE/M-RoPE, MLPs, initializers.
+
+All modules are functional: ``init_*`` returns a param dict, ``apply``-style
+functions consume it. Stacked (scanned) layers carry a leading layer dim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hook (installed by the mesh launcher; identity on CPU)
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDER = None
+
+
+def set_activation_sharder(fn):
+    global _ACT_SHARDER
+    _ACT_SHARDER = fn
+
+
+def shard_act(x, name: str):
+    if _ACT_SHARDER is None:
+        return x
+    return _ACT_SHARDER(name, x)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def split(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                 # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE. positions3: (3, ..., S) = (t, h, w) ids.
+    The head_dim/2 frequency slots are split into `sections` groups, each
+    rotated by its own position stream (arXiv:2409.12191)."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(d, theta)                       # (half,)
+    # build a (..., S, half) angle tensor, per-section position source
+    angs = []
+    start = 0
+    for sec_i, sec in enumerate(sections):
+        pos = positions3[sec_i]                      # (..., S)
+        angs.append(pos[..., None].astype(jnp.float32) * inv[start:start + sec])
+        start += sec
+    ang = jnp.concatenate(angs, axis=-1)             # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = split(key, 3)
+    return {"w_gate": dense_init(k1, d, d_ff, dtype),
+            "w_up": dense_init(k2, d, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d, dtype)}
+
+
+def apply_swiglu(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = split(key, 2)
+    return {"w_in": dense_init(k1, d, d_ff, dtype),
+            "b_in": jnp.zeros((d_ff,), dtype),
+            "w_out": dense_init(k2, d_ff, d, dtype),
+            "b_out": jnp.zeros((d,), dtype)}
+
+
+def apply_gelu_mlp(p, x):
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    return h @ p["w_out"] + p["b_out"]

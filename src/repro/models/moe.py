@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer: top-k router, shared experts, dense residual.
+
+Dispatch is GShard-style capacity scatter/gather over token-major slots.
+SPMD history (§Perf hillclimb B, EXPERIMENTS.md): the baseline leaked
+1.34 GB f32 per inner step across the *cluster* (1 Gbps) boundary. The
+culprit was ``lax.top_k`` (GSPMD replicates its operand across every
+sharded dim, clusters included) — replaced by ``topk_spmd`` below. A
+per-row grouped dispatch with a vmapped scatter was also tried and
+REVERTED: GSPMD replicated the batched scatter operands in f32 over the
+data axis (83 -> 309 GB/device). The flat scatter partitions fine.
+
+Memory is O(T*k*cf*d) for the expert buffer — the inherent dispatched
+volume; never O(E*T*d).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_swiglu, dense_init, init_swiglu,
+                                 shard_act, split)
+
+
+def init_experts(key, n_experts: int, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = split(key, 3)
+
+    def e_init(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dtype))(
+            jax.random.split(k, n_experts))
+
+    return {"w_gate": e_init(k1, d, d_ff),
+            "w_up": e_init(k2, d, d_ff),
+            "w_down": e_init(k3, d_ff, d)}
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    m = cfg.moe
+    ks = split(key, 4)
+    p = {"router": dense_init(ks[0], cfg.d_model, m.n_experts, dtype),
+         "experts": init_experts(ks[1], m.n_experts, cfg.d_model,
+                                 m.d_ff_expert, dtype)}
+    if m.n_shared_experts:
+        p["shared"] = init_swiglu(ks[2], cfg.d_model,
+                                  m.d_ff_expert * m.n_shared_experts, dtype)
+    if m.dense_residual:
+        p["dense"] = init_swiglu(ks[3], cfg.d_model, m.d_ff_dense, dtype)
+    return p
+
+
+def topk_spmd(x, k: int):
+    """Iterative top-k over the last dim using only elementwise ops +
+    reductions. ``lax.top_k`` has no useful SPMD partitioning: GSPMD
+    all-gathers the operand over every sharded dim INCLUDING the cluster
+    axis (measured: 1.34 GB f32 per step crossing the 1 Gbps boundary for
+    deepseek's router — §Perf hillclimb B iter 3). k is 2-6 for the
+    assigned MoEs, so k masked max-passes are cheap and fully local."""
+    E = x.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    masked = x
+    vals, idxs = [], []
+    for _ in range(k):
+        v = masked.max(axis=-1, keepdims=True)
+        is_max = masked == v
+        idx = jnp.min(jnp.where(is_max, iota, E), axis=-1)
+        vals.append(v[..., 0])
+        idxs.append(idx)
+        masked = jnp.where(iota == idx[..., None], -jnp.inf, masked)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def apply_moe(p, x, cfg):
+    """x: (B,S,d). Returns (out, router_aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    T = B * S
+    Cg = max(k, int(T * k * m.capacity_factor / E))   # global capacity
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)   # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = topk_spmd(probs, k)              # (T,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # GShard position-in-expert: cumsum over token-major flattened slots.
+    # (A per-row grouped variant with a vmapped scatter was tried as
+    # hillclimb B iter 2 — GSPMD replicated the batched scatter operands
+    # in f32 over the data axis, 4x worse memory. The flat scatter
+    # partitions fine; the cross-cluster leak was lax.top_k all along.)
+    flat_e = top_idx.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (Tk,E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    my_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = (my_pos < Cg)
+    dest = jnp.where(keep, flat_e * Cg + my_pos, E * Cg)
+
+    upd = jnp.repeat(xt, k, axis=0)                   # (Tk,d)
+    buf = jnp.zeros((E * Cg + 1, d), x.dtype).at[dest].add(
+        upd * keep[:, None].astype(x.dtype))
+    xe = buf[: E * Cg].reshape(E, Cg, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["experts"]["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                    p["experts"]["w_down"]).reshape(E * Cg, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+
+    gathered = ye[dest]                               # (Tk,d)
+    wts = (top_w.reshape(T * k).astype(x.dtype)
+           * keep.astype(x.dtype))[:, None]
+    out = (gathered * wts).reshape(T, k, d).sum(axis=1).reshape(B, S, d)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)
+    ce = (onehot.astype(jnp.float32).reshape(T, k, E).sum(1).mean(0)
+          / max(k, 1))
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+
+    # shared/dense paths operate on (B,S,d) directly: reshaping to (B*S,d)
+    # merged the sharded batch dim and GSPMD replicated the merged tensor
+    # across clusters (1.34 GB f32 on the 1 Gbps boundary per inner step —
+    # §Perf hillclimb B iter 2).
+    if "shared" in p:
+        out = out + apply_swiglu(p["shared"], x)
+    if "dense" in p:
+        out = out + apply_swiglu(p["dense"], x)
+    return out, aux

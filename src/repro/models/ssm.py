@@ -1,0 +1,397 @@
+"""State-space blocks: Mamba2 (chunked SSD) and xLSTM (mLSTM + sLSTM).
+
+TPU adaptation notes (DESIGN.md §3): the Mamba2 recurrence is computed in
+the chunked matmul form (intra-chunk quadratic with decay masks + inter-chunk
+scan), which maps onto the MXU instead of a length-S sequential scan. mLSTM
+uses its stabilized parallel form with query chunking; sLSTM is inherently
+sequential and uses ``lax.scan`` over time (it is 1/8 of xLSTM layers).
+Decode paths are O(1)-state recurrent steps, which is what makes these
+families ``long_500k``-eligible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (dense_init, split, init_norm, apply_norm,
+                                 shard_act)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (kernel k, channels last)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key, channels: int, k: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (k, channels), jnp.float32) / math.sqrt(k)
+    return {"w": w.astype(dtype), "b": jnp.zeros((channels,), dtype)}
+
+
+def apply_conv1d(p, x):
+    """x: (B,S,C) -> causal depthwise conv."""
+    k = p["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * p["w"][i] for i in range(k))
+    return out + p["b"]
+
+
+def conv1d_step(p, buf, x1):
+    """buf: (B,k-1,C) past inputs; x1: (B,1,C). Returns (y1, new_buf)."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([buf, x1], axis=1)          # (B,k,C)
+    y = jnp.einsum("bkc,kc->bc", window, p["w"]) + p["b"]
+    return y[:, None, :], window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(d_model: int, ssm):
+    d_inner = ssm.expand * d_model
+    head_dim = 64 if d_inner % 64 == 0 else max(8, d_inner // 8)
+    nh = ssm.n_ssm_heads or d_inner // head_dim
+    head_dim = d_inner // nh
+    return d_inner, nh, head_dim
+
+
+def init_mamba2(key, d_model: int, ssm, dtype=jnp.float32):
+    d_inner, nh, hd = mamba2_dims(d_model, ssm)
+    ds = ssm.d_state
+    ks = split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * ds + nh   # [z, x, B, C, dt]
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_in_proj, dtype),
+        "conv": init_conv1d(ks[1], d_inner + 2 * ds, 4, dtype),
+        "A_log": jnp.zeros((nh,), dtype),            # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "gate_norm": init_norm("rmsnorm", d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _mamba2_split(p, u, d_inner, ds, nh):
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * ds], axis=-1)
+    return z, xBC, dt
+
+
+def _ssd_chunk_scan(x, dtv, a_log, Bm, Cm, chunk: int):
+    """Chunked SSD. x: (B,S,nh,hd); dtv: (B,S,nh) (already softplus'ed);
+    a_log: (B,S,nh) = A*dt (log decay, negative); Bm, Cm: (B,S,ds).
+    Returns y: (B,S,nh,hd)."""
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    nc = S // chunk
+    L = chunk
+    xc = x.reshape(Bsz, nc, L, nh, hd)
+    dc = dtv.reshape(Bsz, nc, L, nh)
+    ac = a_log.reshape(Bsz, nc, L, nh)
+    Bc = Bm.reshape(Bsz, nc, L, ds)
+    Cc = Cm.reshape(Bsz, nc, L, ds)
+
+    la = jnp.cumsum(ac, axis=2)                          # (B,nc,L,nh)
+    # intra-chunk: Y[i] += sum_{s<=i} exp(la_i - la_s) dt_s (C_i.B_s) x_s
+    G = jnp.einsum("bnld,bnsd->bnls", Cc, Bc)            # (B,nc,L,L)
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]    # (B,nc,L,L,nh)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    Y_intra = jnp.einsum("bnlsh,bnls,bnsh,bnshd->bnlhd",
+                         M, G, dc, xc)
+    # chunk-end states and inter-chunk scan
+    decay_end = jnp.exp(la[:, :, -1:, :] - la)           # (B,nc,L,nh)
+    states = jnp.einsum("bnlh,bnlh,bnlhd,bnls->bnhds",
+                        decay_end, dc, xc, Bc)           # (B,nc,nh,hd,ds)
+    chunk_decay = jnp.exp(la[:, :, -1, :])               # (B,nc,nh)
+
+    def scan_fn(h, inp):
+        st, cd = inp                                     # (B,nh,hd,ds), (B,nh)
+        h_new = h * cd[:, :, None, None] + st
+        return h_new, h                                  # emit state *entering* chunk
+
+    h0 = jnp.zeros((Bsz, nh, hd, ds), x.dtype)
+    _, h_in = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                 # (B,nc,nh,hd,ds)
+    Y_inter = jnp.einsum("bnlh,bnls,bnhds->bnlhd",
+                         jnp.exp(la), Cc, h_in)
+    return (Y_intra + Y_inter).reshape(Bsz, S, nh, hd)
+
+
+def apply_mamba2(p, x, ssm, *, d_model: int):
+    """x: (B,S,d) -> (B,S,d)."""
+    d_inner, nh, hd = mamba2_dims(d_model, ssm)
+    ds = ssm.d_state
+    z, xBC, dt_raw = _mamba2_split(p, x, d_inner, ds, nh)
+    xBC = jax.nn.silu(apply_conv1d(p["conv"], xBC))
+    xi, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + ds], axis=-1)
+    dtv = jax.nn.softplus(dt_raw + p["dt_bias"])         # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (nh,)
+    a_log = dtv * A                                      # (B,S,nh)
+    xh = xi.reshape(*xi.shape[:2], nh, hd)
+    S = x.shape[1]
+    chunk = ssm.chunk if S % ssm.chunk == 0 else S
+    y = _ssd_chunk_scan(xh.astype(jnp.float32), dtv, a_log,
+                        Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = apply_norm(p["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y @ p["out_proj"]
+
+
+def init_mamba2_state(batch: int, d_model: int, ssm, dtype=jnp.float32):
+    d_inner, nh, hd = mamba2_dims(d_model, ssm)
+    ds = ssm.d_state
+    return {"conv_buf": jnp.zeros((batch, 3, d_inner + 2 * ds), dtype),
+            "h": jnp.zeros((batch, nh, hd, ds), dtype)}
+
+
+def decode_mamba2(p, x1, state, ssm, *, d_model: int):
+    """Single-token recurrent step. x1: (B,1,d)."""
+    d_inner, nh, hd = mamba2_dims(d_model, ssm)
+    ds = ssm.d_state
+    z, xBC, dt_raw = _mamba2_split(p, x1, d_inner, ds, nh)
+    xBC, conv_buf = conv1d_step(p["conv"], state["conv_buf"], xBC)
+    xBC = jax.nn.silu(xBC)
+    xi, Bm, Cm = jnp.split(xBC[:, 0], [d_inner, d_inner + ds], axis=-1)
+    dtv = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dtv * A)                                 # (B,nh)
+    xh = xi.reshape(-1, nh, hd)
+    h = (state["h"] * a[:, :, None, None]
+         + jnp.einsum("bh,bhd,bs->bhds", dtv, xh, Bm))
+    y = jnp.einsum("bhds,bs->bhd", h, Cm) + xh * p["D"][None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(x1.dtype)
+    y = apply_norm(p["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y @ p["out_proj"], {"conv_buf": conv_buf, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (parallel, stabilized) and sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(d_model: int, ssm):
+    d_inner = ssm.expand * d_model
+    nh = 4
+    return d_inner, nh, d_inner // nh
+
+
+def init_mlstm(key, d_model: int, ssm, dtype=jnp.float32):
+    d_inner, nh, hd = mlstm_dims(d_model, ssm)
+    ks = split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv": init_conv1d(ks[1], d_inner, 4, dtype),
+        # per-head block-diagonal q/k/v (xLSTM paper; keeps 1.3B nameplate)
+        "wq": (jax.random.normal(ks[2], (nh, hd, hd), jnp.float32)
+               / math.sqrt(hd)).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (nh, hd, hd), jnp.float32)
+               / math.sqrt(hd)).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (nh, hd, hd), jnp.float32)
+               / math.sqrt(hd)).astype(dtype),
+        "w_if": dense_init(ks[5], d_inner, 2 * nh, dtype),
+        "skip": jnp.ones((d_inner,), dtype),
+        "out_norm": init_norm("rmsnorm", d_inner, dtype),
+        "down_proj": dense_init(ks[6], d_inner, d_model, dtype),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre, chunk: int = 512):
+    """Stabilized parallel mLSTM, query-chunked. q,k,v: (B,S,nh,hd);
+    i_pre,f_pre: (B,S,nh). Returns h: (B,S,nh,hd).
+
+    The decay matrix D[t,s] = exp(F_t - F_s + i_s - m_t) factors through
+    1-D cumulative quantities (F = cumsum log f, m = F + cummax(i - F)),
+    so it can be built PER QUERY CHUNK: peak memory is (B, cq, S, nh)
+    instead of (B, S, S, nh) — at 4k train that is the difference between
+    a 17 GB/device buffer GSPMD replicates across clusters (412 GB of
+    cross-cluster all-gather in the baseline dry-run) and a chunk that
+    stays local. Backward recomputes per chunk (jax.checkpoint),
+    flash-style. [EXPERIMENTS.md §Perf hillclimb A]"""
+    B, S, nh, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))     # (B,S,nh)
+    F = jnp.cumsum(logf, axis=1)                             # (B,S,nh)
+    g = i_pre.astype(jnp.float32) - F
+    m = F + jax.lax.cummax(g, axis=1)                        # (B,S,nh)
+    scale = 1.0 / math.sqrt(hd)
+    # NOTE [hillclimb A iter 3, REFUTED]: context-parallel keys (S over
+    # "model" for k/v/gates) predicted ~8x less ICI via s-contraction
+    # psums, but measured 2.47s -> 3.37s: GSPMD re-gathers the sharded
+    # keys for the masked-decay einsum inside the chunk loop. Reverted.
+    i_f = i_pre.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def block(q_blk, F_blk, m_blk, t0):
+        # q_blk: (B,cq,nh,hd); F_blk, m_blk: (B,cq,nh); keys: full prefix
+        cq = q_blk.shape[1]
+        logD = (F_blk[:, :, None, :] - F[:, None, :, :]
+                + i_f[:, None, :, :]
+                - m_blk[:, :, None, :])                      # (B,cq,S,nh)
+        t_pos = t0 + jnp.arange(cq)[:, None]
+        s_pos = jnp.arange(S)[None, :]
+        D = jnp.where((s_pos <= t_pos)[None, :, :, None],
+                      jnp.exp(logD), 0.0)
+        Sc = jnp.einsum("bthd,bshd->btsh", q_blk.astype(jnp.float32),
+                        kf) * scale
+        Sd = shard_act(Sc * D, "act4")
+        norm = jnp.maximum(jnp.abs(Sd.sum(axis=2)), jnp.exp(-m_blk))
+        h = jnp.einsum("btsh,bshd->bthd", Sd, vf)
+        return shard_act((h / norm[:, :, :, None]).astype(q.dtype), "act4")
+
+    if chunk and S > chunk and S % chunk == 0:
+        n = S // chunk
+        qc = q.reshape(B, n, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+        Fc = F.reshape(B, n, chunk, nh).transpose(1, 0, 2, 3)
+        mc = m.reshape(B, n, chunk, nh).transpose(1, 0, 2, 3)
+        t0s = jnp.arange(n) * chunk
+        blk = jax.checkpoint(block)
+        hc = jax.lax.map(lambda args: blk(*args), (qc, Fc, mc, t0s))
+        return hc.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, hd)
+    return block(q, F, m, 0)
+
+
+def apply_mlstm(p, x, ssm, *, d_model: int):
+    d_inner, nh, hd = mlstm_dims(d_model, ssm)
+    uz = x @ p["up_proj"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    c = jax.nn.silu(apply_conv1d(p["conv"], u))
+    B, S = x.shape[:2]
+    ch = c.reshape(B, S, nh, hd)
+    uh = u.reshape(B, S, nh, hd)
+    q = shard_act(jnp.einsum("bshd,hde->bshe", ch, p["wq"]), "act4")
+    k = shard_act(jnp.einsum("bshd,hde->bshe", ch, p["wk"]), "act4")
+    v = shard_act(jnp.einsum("bshd,hde->bshe", uh, p["wv"]), "act4")
+    if_pre = c @ p["w_if"]
+    i_pre, f_pre = jnp.split(if_pre.reshape(B, S, 2, nh), 2, axis=2)
+    h = _mlstm_parallel(q, k, v, i_pre[:, :, 0], f_pre[:, :, 0])
+    h = h.reshape(B, S, d_inner) + p["skip"] * c
+    h = apply_norm(p["out_norm"], h, "rmsnorm")
+    return (h * jax.nn.silu(z)) @ p["down_proj"]
+
+
+def init_mlstm_state(batch: int, d_model: int, ssm, dtype=jnp.float32):
+    d_inner, nh, hd = mlstm_dims(d_model, ssm)
+    return {"conv_buf": jnp.zeros((batch, 3, d_inner), dtype),
+            "C": jnp.zeros((batch, nh, hd, hd), dtype),
+            "n": jnp.zeros((batch, nh, hd), dtype),
+            "m": jnp.full((batch, nh), -1e30, dtype)}
+
+
+def decode_mlstm(p, x1, state, ssm, *, d_model: int):
+    d_inner, nh, hd = mlstm_dims(d_model, ssm)
+    B = x1.shape[0]
+    uz = x1 @ p["up_proj"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    c, conv_buf = conv1d_step(p["conv"], state["conv_buf"], u)
+    c = jax.nn.silu(c)
+    ch = c.reshape(B, nh, hd)
+    uh = u[:, 0].reshape(B, nh, hd)
+    q = jnp.einsum("bhd,hde->bhe", ch, p["wq"])
+    k = jnp.einsum("bhd,hde->bhe", ch, p["wk"])
+    v = jnp.einsum("bhd,hde->bhe", uh, p["wv"])
+    if_pre = (c @ p["w_if"]).reshape(B, 2, nh)
+    i_pre, f_pre = if_pre[:, 0].astype(jnp.float32), if_pre[:, 1].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"].astype(jnp.float32), i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + state["m"].astype(jnp.float32) - m_new)
+    scale = 1.0 / math.sqrt(hd)
+    C = (state["C"].astype(jnp.float32) * f_g[..., None, None]
+         + i_g[..., None, None] * jnp.einsum("bhd,bhe->bhde", v, k * scale))
+    n = (state["n"].astype(jnp.float32) * f_g[..., None]
+         + i_g[..., None] * k * scale)
+    num = jnp.einsum("bhde,bhe->bhd", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, d_inner).astype(x1.dtype)
+    h = h + p["skip"] * c
+    h = apply_norm(p["out_norm"], h, "rmsnorm")
+    out = (h * jax.nn.silu(z)) @ p["down_proj"]
+    new_state = {"conv_buf": conv_buf, "C": C.astype(state["C"].dtype),
+                 "n": n.astype(state["n"].dtype),
+                 "m": m_new.astype(state["m"].dtype)}
+    return out, new_state
+
+
+def init_slstm(key, d_model: int, ssm, dtype=jnp.float32):
+    nh = 4
+    hd = d_model // nh
+    ks = split(key, 4)
+    return {
+        "conv": init_conv1d(ks[0], d_model, 4, dtype),
+        "w_gates": dense_init(ks[1], d_model, 4 * d_model, dtype),  # i,f,z,o
+        "r_gates": (jax.random.normal(ks[2], (nh, hd, 4 * hd), jnp.float32)
+                    / math.sqrt(hd)).astype(dtype),  # block-diag recurrent
+        "out_norm": init_norm("rmsnorm", d_model, dtype),
+        "w_up": dense_init(ks[3], d_model, int(d_model * 4 / 3) // 2 * 2, dtype),
+        "w_down": dense_init(split(key, 5)[4], int(d_model * 4 / 3) // 2 * 2,
+                             d_model, dtype),
+    }
+
+
+def _slstm_cell(p, xg, hcnm, nh, hd):
+    """One time step. xg: (B,4*d) pre-activations from input path."""
+    h, c, n, m = hcnm
+    B = h.shape[0]
+    rec = jnp.einsum("bhd,hdk->bhk", h.reshape(B, nh, hd), p["r_gates"])
+    g = xg.reshape(B, nh, 4 * hd) + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, i_pre.astype(jnp.float32))
+    i_g = jnp.exp(i_pre.astype(jnp.float32) - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(z_pre.astype(jnp.float32))
+    o = jax.nn.sigmoid(o_pre.astype(jnp.float32))
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def apply_slstm(p, x, ssm, *, d_model: int):
+    nh = 4
+    hd = d_model // nh
+    B, S, _ = x.shape
+    xc = jax.nn.silu(apply_conv1d(p["conv"], x))
+    xg = xc @ p["w_gates"]                               # (B,S,4d)
+
+    h0 = jnp.zeros((B, nh, hd), jnp.float32)
+    init = (h0, h0, h0, jnp.full((B, nh, hd), -1e30, jnp.float32))
+
+    def step(carry, xg_t):
+        new = _slstm_cell(p, xg_t, carry, nh, hd)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(step, init, xg.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_model).astype(x.dtype)
+    h = apply_norm(p["out_norm"], h, "rmsnorm")
+    up = h @ p["w_up"]
+    return jax.nn.gelu(up) @ p["w_down"]
+
+
+def init_slstm_state(batch: int, d_model: int, ssm, dtype=jnp.float32):
+    nh = 4
+    hd = d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"conv_buf": jnp.zeros((batch, 3, d_model), dtype),
+            "h": z, "c": z, "n": z, "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}
+
+
+def decode_slstm(p, x1, state, ssm, *, d_model: int):
+    nh = 4
+    hd = d_model // nh
+    xc, conv_buf = conv1d_step(p["conv"], state["conv_buf"], x1)
+    xc = jax.nn.silu(xc)
+    xg = (xc @ p["w_gates"])[:, 0]
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h_new, c_new, n_new, m_new = _slstm_cell(p, xg, carry, nh, hd)
+    h = h_new.reshape(-1, 1, d_model).astype(x1.dtype)
+    h = apply_norm(p["out_norm"], h, "rmsnorm")
+    out = jax.nn.gelu(h @ p["w_up"]) @ p["w_down"]
+    return out, {"conv_buf": conv_buf, "h": h_new, "c": c_new,
+                 "n": n_new, "m": m_new}

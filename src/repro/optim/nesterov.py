@@ -1,0 +1,46 @@
+"""Outer optimizer: Nesterov momentum over *pseudo-gradients* (DiLoCo /
+DiLoCoX §2.2). The pseudo-gradient Δ is (θ_anchor − θ_local) averaged across
+clusters; the outer step is SGD with Nesterov momentum in fp32.
+
+State is param-shaped and inherits param sharding — the "distributed outer
+optimizer" half of the Dual Optimizer Policy.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NesterovState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def init(params) -> NesterovState:
+    return NesterovState(
+        step=jnp.zeros((), jnp.int32),
+        momentum=jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params))
+
+
+def update(pseudo_grads, state: NesterovState, params, *, lr=0.7,
+           momentum=0.9):
+    """θ ← θ − lr·(μ·v_new + Δ), v_new = μ·v + Δ  (Nesterov form used by
+    DiLoCo). pseudo_grads point in the *descent* direction already
+    (θ_anchor − θ_local ≈ η·Σ grads)."""
+    def upd(p, g, v):
+        g = g.astype(jnp.float32)
+        v_new = momentum * v + g
+        step_dir = momentum * v_new + g
+        return ((p.astype(jnp.float32) - lr * step_dir).astype(p.dtype),
+                v_new)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(pseudo_grads)
+    flat_v = jax.tree.leaves(state.momentum)
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    return (treedef.unflatten([o[0] for o in out]),
+            NesterovState(step=state.step + 1,
+                          momentum=treedef.unflatten([o[1] for o in out])))

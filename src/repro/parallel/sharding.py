@@ -1,0 +1,201 @@
+"""GSPMD sharding rules (Mode A): 2-D weight sharding = FSDP over "data" x
+tensor-parallel over "model", per parameter family. Cluster-stacked leaves
+get a leading "clusters" axis.
+
+Rules are path+shape based:
+  - expert-stacked weights (path contains 'experts'): expert dim -> "model"
+    (expert parallelism), d_model dim -> "data".
+  - 2-D weights (d_in, d_out): the *larger* of the two trailing dims gets
+    "model" (keeps TP on the fat dim: ff/heads/vocab), the other "data".
+  - scanned-layer leading dims and 1-D params: replicated.
+Activations: batch over ("clusters","data") [train] or ("data",) [serve];
+long-context (batch=1) decode shards the KV-cache sequence dim over "data".
+
+A dim is only sharded if divisible by the axis size — otherwise left
+replicated (keeps every (arch x shape) lowering valid; the dry-run reports
+what actually sharded).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _divisible(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def spec_for_param(path_names, shape: Tuple[int, ...], mesh: Mesh, *,
+                   cluster_stacked: bool, n_scan_dims: int) -> P:
+    """Build a PartitionSpec for one parameter leaf.
+
+    n_scan_dims: number of leading stacked dims that are scan/cluster dims
+    (cluster dim first if cluster_stacked, then segment-stack dim)."""
+    names = [str(n) for n in path_names]
+    entries: list = []
+    lead = []
+    if cluster_stacked:
+        lead.append("clusters" if _divisible(shape[0], mesh, "clusters")
+                    else None)
+    while len(lead) < n_scan_dims:
+        lead.append(None)
+    body_shape = shape[n_scan_dims:]
+    is_expert = any("experts" in n for n in names)
+    if len(body_shape) == 0:
+        entries = lead
+    elif len(body_shape) == 1:
+        entries = lead + [None]
+    elif is_expert and len(body_shape) >= 3:
+        # (E, d_in, d_out): expert parallel + FSDP on d_in
+        e, din, dout = body_shape[-3], body_shape[-2], body_shape[-1]
+        entries = lead + [None] * (len(body_shape) - 3)
+        entries += ["model" if _divisible(e, mesh, "model") else None,
+                    "data" if _divisible(din, mesh, "data") else None,
+                    None]
+    else:
+        # generic 2D+ weight: fat trailing dim -> model, other -> data
+        din, dout = body_shape[-2], body_shape[-1]
+        mid = [None] * (len(body_shape) - 2)
+        if dout >= din:
+            a = "data" if _divisible(din, mesh, "data") else None
+            b = "model" if _divisible(dout, mesh, "model") else None
+        else:
+            a = "model" if _divisible(din, mesh, "model") else None
+            b = "data" if _divisible(dout, mesh, "data") else None
+        entries = lead + mid + [a, b]
+    return P(*entries)
+
+
+def param_shardings(params_shape_tree, mesh: Mesh, *,
+                    cluster_stacked: bool, serve: bool = False) -> Any:
+    """Tree of NamedShardings matching an (optionally cluster-stacked)
+    param pytree of ShapeDtypeStructs.
+
+    serve=True: weights shard over "model" ONLY (no FSDP dim) when the
+    model fits that way — decode is latency-bound and per-token FSDP
+    all-gathers dominated the decode ICI term (§Perf hillclimb D). Callers
+    pass serve=True only when params_bytes/model_axis fits HBM."""
+
+    def build(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        shape = leaf.shape
+        # embedding table: d_model -> "model" (gather stays local in vocab;
+        # the head-side use is resharded by the "head_w" activation rule)
+        if any(n == "embed" for n in names):
+            lead = (["clusters"] if cluster_stacked
+                    and shape[0] % mesh.shape["clusters"] == 0 else
+                    [None] * (1 if cluster_stacked else 0))
+            spec = P(*lead, None,
+                     "model" if _divisible(shape[-1], mesh, "model") else None)
+            return NamedSharding(mesh, spec)
+        # infer scan dims: cluster dim (if stacked) + segment-stack dim for
+        # leaves under 'segments' (they carry a leading n_units dim)
+        n_scan = (1 if cluster_stacked else 0)
+        if any("segments" in str(n) for n in names):
+            n_scan += 1
+        n_scan = min(n_scan, max(0, len(shape) - 1))
+        spec = spec_for_param(names, shape, mesh,
+                              cluster_stacked=cluster_stacked,
+                              n_scan_dims=n_scan)
+        if serve:   # drop the "data" (FSDP) dim; keep tensor parallelism
+            spec = P(*[e if e != "data" else None for e in tuple(spec)])
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(build, params_shape_tree)
+
+
+def make_activation_sharder(mesh: Mesh):
+    """Named activation constraints used inside model code (installed via
+    models.model.set_activation_sharder). Specs are ranked for the
+    *unbatched* value (vmap-over-clusters lifts them)."""
+    from jax.sharding import NamedSharding
+
+    def sharder(name: str, x):
+        shape = x.shape
+        if name == "act" and len(shape) == 3:        # (B,S,d)
+            spec = P("data" if _divisible(shape[0], mesh, "data") else None,
+                     None, None)
+        elif name == "act4" and len(shape) == 4:     # (B,S,heads,dh)-like
+            spec = P("data" if _divisible(shape[0], mesh, "data") else None,
+                     None, None, None)
+        elif name == "moe_buf" and len(shape) == 4:  # (B,E,C,d): EP on E
+            spec = P("data" if _divisible(shape[0], mesh, "data") else None,
+                     "model" if _divisible(shape[1], mesh, "model") else None,
+                     None, None)
+        elif name == "ctx4" and len(shape) == 4:     # keys: S over "model"
+            spec = P("data" if _divisible(shape[0], mesh, "data") else None,
+                     "model" if _divisible(shape[1], mesh, "model") else None,
+                     None, None)
+        elif name == "ctx3" and len(shape) == 3:     # gate prefixes (B,S,nh)
+            spec = P("data" if _divisible(shape[0], mesh, "data") else None,
+                     "model" if _divisible(shape[1], mesh, "model") else None,
+                     None)
+        elif name == "logits" and len(shape) == 3:   # (B,S,V)
+            spec = P("data" if _divisible(shape[0], mesh, "data") else None,
+                     None,
+                     "model" if _divisible(shape[2], mesh, "model") else None)
+        elif name == "head_w" and len(shape) == 2:   # (d,V)
+            spec = P("data" if _divisible(shape[0], mesh, "data") else None,
+                     "model" if _divisible(shape[1], mesh, "model") else None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return sharder
+
+
+def batch_shardings(batch_shape_tree, mesh: Mesh, *,
+                    cluster_stacked: bool) -> Any:
+    """Tokens/labels/frontend: leading (cluster,) batch dims sharded."""
+
+    def build(leaf):
+        dims: list = []
+        if cluster_stacked:
+            dims.append("clusters")
+        dims.append("data" if _divisible(leaf.shape[len(dims)], mesh, "data")
+                    else None)
+        dims += [None] * (len(leaf.shape) - len(dims))
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(build, batch_shape_tree)
+
+
+def decode_state_shardings(state_tree, mesh: Mesh, *, seq_shard: bool) -> Any:
+    """KV caches / SSM states for serving. Batched decode shards batch over
+    "data"; long-context (batch=1) shards the cache sequence dim over "data"
+    instead (context parallelism). Heads/state dims go to "model".
+
+    Cache leaves look like (n_units, B, S, KV, hd) / (n_units, B, S, lora)
+    / SSM (n_units, B, nh, hd, ds) / conv (n_units, B, k, C)."""
+
+    def build(path, leaf):
+        shape = leaf.shape
+        if not hasattr(leaf, "shape") or len(shape) == 0:
+            return NamedSharding(mesh, P())
+        dims: list = [None] * len(shape)
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if len(shape) >= 2:
+            # dim 1 is batch for unit-stacked caches
+            bdim = 1 if len(shape) >= 3 else 0
+            if not seq_shard and _divisible(shape[bdim], mesh, "data"):
+                dims[bdim] = "data"
+            if seq_shard and len(shape) >= 4 and "pos" not in names[-1:]:
+                # (units, B, S, ...): shard S over data
+                if _divisible(shape[2], mesh, "data"):
+                    dims[2] = "data"
+            # shard a heads-like dim over model if present & divisible
+            for di in range(len(shape) - 1, 1, -1):
+                if dims[di] is None and _divisible(shape[di], mesh, "model") \
+                        and shape[di] >= mesh.shape["model"] and di != 2:
+                    dims[di] = "model"
+                    break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(build, state_tree)
+
+
+def replicated(tree, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,272 @@
+"""Single-host DiLoCoX trainer: D clusters simulated by a vmap'd leading
+axis (the same algebra the mesh runtime uses with the cluster dim sharded
+over the "pod"/"data" axis — see DESIGN.md §3 and launch/train.py).
+
+Drives the paper's convergence experiments (Fig. 3, Table 1): AllReduce,
+OpenDiLoCo-style, CocktailSGD and DiLoCoX all run through ``diloco_round``
+with different RoundConfig/Compressor settings.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import adaptive, diloco
+from repro.core.compression import Compressor, make_compressor, tree_shapes
+from repro.data.synthetic import SyntheticLM, with_frontend
+from repro.models import model as M
+from repro.optim import adamw
+
+
+@dataclass
+class TrainConfig:
+    n_clusters: int = 2           # D (paper's decentralized clusters)
+    local_batch: int = 8
+    seq_len: int = 64
+    inner_lr: float = 1e-3
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    h_steps: int = 20             # H (local steps per round)
+    compressor: str = "diloco_x"
+    compressor_kw: Dict[str, Any] = field(default_factory=dict)
+    delay: bool = True
+    compress: bool = True
+    error_feedback: bool = True
+    adaptive: bool = False        # run AdaGradCmp (Alg. 3)
+    adaptive_mode: str = "paper"
+    hetero: float = 0.0           # per-cluster data heterogeneity (xi^2>0)
+    seed: int = 0
+
+
+def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables):
+    """Returns inner_fn(params, inner_opt_stacked, round_idx) -> (stacked
+    params after H local AdamW steps per cluster, new inner state).
+    Data is drawn deterministically from per-cluster PRNG streams; with
+    tcfg.hetero > 0 each cluster prefers a different successor slot
+    (Assumption 3.3 heterogeneity)."""
+    from repro.data.synthetic import _gen_batch
+
+    branching = 4
+    if tcfg.hetero > 0:
+        base = jnp.zeros((tcfg.n_clusters, branching))
+        boost = jnp.log(1.0 + tcfg.hetero * branching
+                        / (1 - tcfg.hetero + 1e-9))
+        bias_all = jax.vmap(
+            lambda i: base[0].at[i % branching].set(boost))(
+            jnp.arange(tcfg.n_clusters))
+    else:
+        bias_all = None
+
+    def one_cluster(params, opt_state, cluster_idx, round_idx):
+        def step(carry, h):
+            params, opt_state = carry
+            key = jax.random.fold_in(
+                jax.random.fold_in(
+                    jax.random.fold_in(jax.random.PRNGKey(tcfg.seed + 7),
+                                       cluster_idx), round_idx), h)
+            toks = _gen_batch(key, tcfg.local_batch, tcfg.seq_len, 4,
+                              data_tables,
+                              None if bias_all is None
+                              else bias_all[cluster_idx])
+            batch = {"tokens": toks}
+            if cfg.modality != "text":
+                emb = jax.random.normal(
+                    key, (tcfg.local_batch, cfg.n_frontend_tokens,
+                          cfg.d_model), jnp.float32) * 0.02
+                batch["frontend"] = emb
+            (loss, _), g = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+            params, opt_state = adamw.update(g, opt_state, params,
+                                             lr=tcfg.inner_lr)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            step, (params, opt_state), jnp.arange(tcfg.h_steps))
+        return params, opt_state, losses
+
+    def inner_fn(params, inner_opt_stacked, round_idx):
+        f = lambda opt, ci: one_cluster(params, opt, ci, round_idx)
+        params_s, opt_s, losses = jax.vmap(f)(
+            inner_opt_stacked, jnp.arange(tcfg.n_clusters))
+        return params_s, opt_s, losses
+
+    return inner_fn
+
+
+def cluster_mean(stacked_tree):
+    return jax.tree.map(lambda x: x.mean(axis=0), stacked_tree)
+
+
+@dataclass
+class RunResult:
+    losses: List[float]
+    eval_losses: List[float]
+    wire_bytes_per_round: List[int]
+    h_per_round: List[int]
+    r_per_round: List[int]
+    wall_s: float
+
+
+def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
+                        eval_every: int = 1) -> RunResult:
+    """Full training run; returns per-round mean train loss + eval loss on a
+    held-out stream + per-round wire bytes (feeds the throughput model)."""
+    rng = jax.random.PRNGKey(tcfg.seed)
+    params = M.init_params(cfg, rng)
+    compressor = make_compressor(tcfg.compressor, **tcfg.compressor_kw)
+
+    # per-cluster inner optimizer states (stacked)
+    opt0 = adamw.init(params)
+    inner_stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (tcfg.n_clusters,) + x.shape).copy(),
+        opt0)
+
+    state = diloco.init_state(params, inner_stacked, tcfg.n_clusters,
+                              compressor)
+    rcfg = diloco.RoundConfig(
+        outer_lr=tcfg.outer_lr, outer_momentum=tcfg.outer_momentum,
+        delay=tcfg.delay, compress=tcfg.compress,
+        error_feedback=tcfg.error_feedback)
+
+    data = SyntheticLM(cfg.vocab_size, tcfg.seq_len, tcfg.local_batch,
+                       seed=tcfg.seed)
+    eval_data = SyntheticLM(cfg.vocab_size, tcfg.seq_len, 16,
+                            seed=tcfg.seed, data_shard=9999)
+    eval_batch = with_frontend(eval_data.next_batch(), cfg)
+    inner_fn = make_inner_fn(cfg, tcfg, data.table)
+
+    def _round(state, rank_scalar):
+        return diloco.diloco_round(state, inner_fn, compressor,
+                                   cluster_mean, rcfg, rank_scalar)
+
+    round_jit = jax.jit(_round)
+    eval_jit = jax.jit(lambda p: M.loss_fn(p, cfg, eval_batch)[0])
+
+    ada_cfg = adaptive.AdaGradCmpConfig(
+        r1=getattr(compressor, "rank", 64), h1=tcfg.h_steps,
+        mode=tcfg.adaptive_mode)
+    ada_state = adaptive.AdaGradCmpState.create(ada_cfg)
+
+    shapes = tree_shapes(params)
+    losses, evals, wires, hs, rs = [], [], [], [], []
+    t0 = time.time()
+    rank_scalar = jnp.asarray(ada_state.r_t, jnp.int32)
+    for r in range(n_rounds):
+        state, round_losses = round_jit(state, rank_scalar)
+        losses.append(float(np.mean(np.asarray(round_losses))))
+        evals.append(float(eval_jit(state.params)))
+        if tcfg.adaptive and tcfg.compress:
+            r_prime = float(adaptive.tree_effective_rank(
+                cluster_mean(state.delta_pending)))
+            ada_state = adaptive.adagradcmp_update(ada_state, r_prime,
+                                                   ada_cfg)
+            rank_scalar = jnp.asarray(ada_state.r_t, jnp.int32)
+        wires.append(compressor.wire_bytes(
+            shapes, rank=ada_state.r_t if tcfg.adaptive else None)
+            if tcfg.compress else
+            sum(int(np.prod(s)) * 4 for s in shapes.values()))
+        hs.append(ada_state.h_t if tcfg.adaptive else tcfg.h_steps)
+        rs.append(ada_state.r_t)
+    return RunResult(losses, evals, wires, hs, rs, time.time() - t0)
+
+
+def run_allreduce_training(cfg: ModelConfig, tcfg: TrainConfig,
+                           n_steps: int) -> RunResult:
+    """Vanilla synchronous AllReduce baseline (paper's first baseline): the
+    D clusters' gradients are averaged every step."""
+    rng = jax.random.PRNGKey(tcfg.seed)
+    params = M.init_params(cfg, rng)
+    opt = adamw.init(params)
+    data = [SyntheticLM(cfg.vocab_size, tcfg.seq_len, tcfg.local_batch,
+                        seed=tcfg.seed, data_shard=i, hetero=tcfg.hetero)
+            for i in range(tcfg.n_clusters)]
+    eval_data = SyntheticLM(cfg.vocab_size, tcfg.seq_len, 16,
+                            seed=tcfg.seed, data_shard=9999)
+    eval_batch = with_frontend(eval_data.next_batch(), cfg)
+
+    @jax.jit
+    def step(params, opt, toks_stacked):
+        def loss_one(p, toks):
+            return M.loss_fn(p, cfg, {"tokens": toks})[0]
+
+        def mean_loss(p):
+            return jnp.mean(jax.vmap(lambda t: loss_one(p, t))(toks_stacked))
+
+        loss, g = jax.value_and_grad(mean_loss)(params)
+        params, opt = adamw.update(g, opt, params, lr=tcfg.inner_lr)
+        return params, opt, loss
+
+    eval_jit = jax.jit(lambda p: M.loss_fn(p, cfg, eval_batch)[0])
+    shapes = tree_shapes(params)
+    wire = sum(int(np.prod(s)) * 4 for s in shapes.values())
+    losses, evals = [], []
+    t0 = time.time()
+    for s in range(n_steps):
+        toks = jnp.stack([d.next_batch()["tokens"] for d in data])
+        params, opt, loss = step(params, opt, toks)
+        losses.append(float(loss))
+        evals.append(float(eval_jit(params)))
+    return RunResult(losses, evals, [wire] * n_steps, [1] * n_steps,
+                     [0] * n_steps, time.time() - t0)
+
+
+def run_compressed_ddp_training(cfg: ModelConfig, tcfg: TrainConfig,
+                                n_steps: int) -> RunResult:
+    """CocktailSGD-style baseline (paper §4.1.3): NO local training — every
+    step each cluster compresses its gradient (with error feedback), the
+    compressed gradients are averaged, and a shared AdamW applies them."""
+    rng = jax.random.PRNGKey(tcfg.seed)
+    params = M.init_params(cfg, rng)
+    opt = adamw.init(params)
+    compressor = make_compressor(tcfg.compressor, **tcfg.compressor_kw)
+    comp_state0 = compressor.init_state(params)
+    comp_state = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (tcfg.n_clusters,) + x.shape).copy(),
+        comp_state0)
+    error = jax.tree.map(
+        lambda p: jnp.zeros((tcfg.n_clusters,) + p.shape, jnp.float32),
+        params)
+    data = [SyntheticLM(cfg.vocab_size, tcfg.seq_len, tcfg.local_batch,
+                        seed=tcfg.seed, data_shard=i, hetero=tcfg.hetero)
+            for i in range(tcfg.n_clusters)]
+    eval_data = SyntheticLM(cfg.vocab_size, tcfg.seq_len, 16,
+                            seed=tcfg.seed, data_shard=9999)
+    eval_batch = with_frontend(eval_data.next_batch(), cfg)
+
+    @jax.jit
+    def step(params, opt, error, comp_state, toks_stacked):
+        def grad_one(toks):
+            (l, _), g = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, {"tokens": toks}),
+                has_aux=True)(params)
+            return l, g
+
+        losses, grads = jax.vmap(grad_one)(toks_stacked)   # per cluster
+        with_err = jax.tree.map(lambda g, e: g + e, grads, error)
+        comp_fn = lambda d, s: compressor.roundtrip(d, s, None)
+        g_hat, comp_state = jax.vmap(comp_fn)(with_err, comp_state)
+        error = jax.tree.map(lambda w, gh: w - gh, with_err, g_hat)
+        g_mean = jax.tree.map(lambda x: x.mean(0), g_hat)
+        params, opt = adamw.update(g_mean, opt, params, lr=tcfg.inner_lr)
+        return params, opt, error, comp_state, losses.mean()
+
+    eval_jit = jax.jit(lambda p: M.loss_fn(p, cfg, eval_batch)[0])
+    shapes = tree_shapes(params)
+    wire = compressor.wire_bytes(shapes)
+    losses, evals = [], []
+    t0 = time.time()
+    for s in range(n_steps):
+        toks = jnp.stack([d.next_batch()["tokens"] for d in data])
+        params, opt, error, comp_state, loss = step(params, opt, error,
+                                                    comp_state, toks)
+        losses.append(float(loss))
+        evals.append(float(eval_jit(params)))
+    return RunResult(losses, evals, [wire] * n_steps, [1] * n_steps,
+                     [0] * n_steps, time.time() - t0)

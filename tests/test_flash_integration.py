@@ -1,0 +1,41 @@
+"""Flash-attention kernel integration: the model's attention path with
+REPRO_USE_PALLAS=1 matches the default XLA path (subprocess so the env var
+is set before kernels import)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os, dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import get_config
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_config('granite-3-8b').reduced(),
+                              vocab_size=128)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0,
+                              cfg.vocab_size)
+    os.environ['REPRO_USE_PALLAS'] = '0'
+    base, _ = M.forward(params, cfg, {'tokens': toks}, remat=False)
+    os.environ['REPRO_USE_PALLAS'] = '1'
+    flash, _ = jax.jit(lambda p, t: M.forward(p, cfg, {'tokens': t},
+                                              remat=False))(params, toks)
+    err = float(jnp.abs(base - flash).max())
+    assert err < 5e-3, err
+    print('FLASH-INTEGRATION-OK', err)
+""")
+
+
+@pytest.mark.slow
+def test_flash_path_matches_xla():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "FLASH-INTEGRATION-OK" in r.stdout

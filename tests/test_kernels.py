@@ -1,0 +1,126 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle
+(kernels/ref.py), sweeping shapes and dtypes (hypothesis + parametrize)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lowrank_mm import matmul_pallas
+from repro.kernels.quant4 import quant4_pack_pallas, quant4_unpack_pallas
+
+
+# ---------------------------------------------------------------------------
+# quant4
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 5000), seed=st.integers(0, 20))
+def test_quant4_pack_matches_ref(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 3.0
+    p_ref, s_ref, _ = ref.quant4_pack_ref(x)
+    p_pl, s_pl = quant4_pack_pallas(x)
+    np.testing.assert_array_equal(np.asarray(p_pl), np.asarray(p_ref))
+    np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 5000), seed=st.integers(0, 20))
+def test_quant4_roundtrip_pallas(n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 2.0
+    p, s = quant4_pack_pallas(x)
+    out = quant4_unpack_pallas(p, s, n)
+    expect = ref.quant4_roundtrip_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant4_dtypes(dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), (1024,)) * 5).astype(dtype)
+    p, s = quant4_pack_pallas(x.astype(jnp.float32))
+    out = quant4_unpack_pallas(p, s, 1024)
+    err = np.abs(np.asarray(out) - np.asarray(x, np.float32))
+    scale = np.abs(np.asarray(x, np.float32)).max() / 7
+    assert err.max() <= scale / 2 + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (100, 70, 36), (1, 512, 64),
+                                   (333, 129, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(m, k, n, dtype):
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k)).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n)).astype(dtype)
+    out = matmul_pallas(a, b)
+    expect = ref.matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+       seed=st.integers(0, 5))
+def test_matmul_property(m, k, n, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n))
+    np.testing.assert_allclose(np.asarray(matmul_pallas(a, b, bm=64, bn=64,
+                                                        bk=64)),
+                               np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,d", [
+    (1, 256, 4, 4, 64),     # MHA
+    (2, 256, 4, 2, 64),     # GQA 2:1
+    (1, 512, 8, 1, 32),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, S, H, KV, d, causal):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (B, S, H, d))
+    k = jax.random.normal(kk, (B, S, KV, d))
+    v = jax.random.normal(kv, (B, S, KV, d))
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=128, bk=128)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 2, 64)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64)).astype(dtype)
+    out = flash_attention_pallas(q, k, v, bq=128, bk=128)
+    expect = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_long_block_sweep():
+    """Block-size sweep at longer sequence (the 32k-prefill configuration,
+    scaled down)."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1024, 2, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1024, 1, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1024, 1, 64))
+    expect = ref.flash_attention_ref(q, k, v)
+    for bq, bk in [(128, 256), (256, 128), (512, 512)]:
+        out = flash_attention_pallas(q, k, v, bq=bq, bk=bk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,85 @@
+"""Cluster dropout/rejoin tolerance (core.membership)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import membership as mb
+
+
+def test_masked_mean_matches_subset():
+    x = {"w": jnp.arange(12.0).reshape(4, 3)}
+    alive = jnp.array([1.0, 0.0, 1.0, 1.0])
+    out = mb.masked_cluster_mean(x, alive)
+    expect = (x["w"][0] + x["w"][2] + x["w"][3]) / 3
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(expect))
+
+
+def test_masked_mean_all_dead_is_zero():
+    x = {"w": jnp.ones((4, 3))}
+    out = mb.masked_cluster_mean(x, jnp.zeros((4,)))
+    assert float(jnp.abs(out["w"]).max()) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50), c=st.integers(2, 8))
+def test_masked_mean_full_equals_plain_mean(seed, c):
+    x = {"w": jax.random.normal(jax.random.PRNGKey(seed), (c, 5))}
+    out = mb.masked_cluster_mean(x, jnp.ones((c,)))
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(x["w"].mean(0)), rtol=1e-6)
+
+
+def test_reset_rejoining_zeroes_only_rejoined():
+    x = {"e": jnp.ones((3, 4))}
+    out = mb.reset_rejoining(x, jnp.array([0, 1, 0]))
+    np.testing.assert_array_equal(np.asarray(out["e"][1]), np.zeros(4))
+    np.testing.assert_array_equal(np.asarray(out["e"][0]), np.ones(4))
+
+
+def test_effective_batch_scale():
+    assert abs(float(mb.effective_batch_scale(jnp.ones(4), 4)) - 1.0) < 1e-6
+    assert abs(float(mb.effective_batch_scale(
+        jnp.array([1.0, 0, 0, 0]), 4)) - 0.5) < 1e-6
+
+
+def test_dropout_training_still_converges():
+    """DiLoCoX keeps learning when a cluster drops for some rounds: run the
+    simulator with a masked cluster_mean."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.core import diloco
+    from repro.core.compression import make_compressor
+    from repro.train import trainer as T
+
+    cfg = dataclasses.replace(get_config("opt-1.3b").reduced(),
+                              vocab_size=64)
+    tcfg = T.TrainConfig(n_clusters=2, local_batch=8, seq_len=32,
+                         inner_lr=3e-3, h_steps=6,
+                         outer_lr=0.5, outer_momentum=0.7)
+    from repro.data.synthetic import SyntheticLM, with_frontend
+    from repro.models import model as M
+    from repro.optim import adamw
+    import jax.numpy as jnp
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    comp = make_compressor("diloco_x", rank=16, bits=4)
+    inner0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (2,) + x.shape).copy(),
+        adamw.init(params))
+    state = diloco.init_state(params, inner0, 2, comp)
+    rcfg = diloco.RoundConfig(outer_lr=0.5, outer_momentum=0.7)
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+    inner_fn = T.make_inner_fn(cfg, tcfg, data.table)
+    eval_b = SyntheticLM(cfg.vocab_size, 32, 16, seed=0,
+                         data_shard=9999).next_batch()
+
+    losses = []
+    for r in range(8):
+        alive = jnp.array([1.0, 0.0 if r in (3, 4) else 1.0])
+        cm = lambda t: mb.masked_cluster_mean(t, alive)
+        state, _ = diloco.diloco_round(state, inner_fn, comp, cm, rcfg,
+                                       jnp.asarray(16))
+        losses.append(float(M.loss_fn(state.params, cfg, eval_b)[0]))
+    assert losses[-1] < losses[0] - 0.4, losses
+    assert all(np.isfinite(losses))

@@ -1,0 +1,59 @@
+"""Wire-honest mesh compression (core.mesh_compression): numerics match
+the simulator, the payload bytes match the analytic accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mesh_compression as mc
+from repro.core.compression import LowRankQuant
+
+
+def _tree(C=2):
+    k = jax.random.PRNGKey(0)
+    one = {"w": jax.random.normal(k, (3, 128, 96)) / 10,   # (units, m, n)
+           "b": jax.random.normal(jax.random.fold_in(k, 1), (96,))}
+    return jax.tree.map(
+        lambda x: jnp.stack([x, x * 0.5]), one)            # stacked clusters
+
+
+def test_compress_gather_mean_shapes_and_finiteness():
+    cfg = mc.MeshCompressionConfig(rank=16, bits=4, min_dim_for_lowrank=64)
+    tree = _tree()
+    q = mc.init_q_state(jax.tree.map(lambda x: x[0], tree), cfg)
+    q = jax.tree.map(lambda x: jnp.broadcast_to(x, (2,) + x.shape).copy(), q)
+    Delta, q2 = mc.compress_gather_mean(tree, q, jnp.asarray(16), cfg)
+    for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[0], tree)),
+                    jax.tree.leaves(Delta)):
+        assert a.shape == b.shape
+        assert np.isfinite(np.asarray(b)).all()
+
+
+def test_mesh_compression_reduces_error_with_warm_start():
+    """Repeated compression of the same low-rank matrix converges (PowerSGD
+    subspace iteration), matching the simulator's behaviour."""
+    cfg = mc.MeshCompressionConfig(rank=8, min_dim_for_lowrank=8)
+    u = jax.random.normal(jax.random.PRNGKey(1), (128, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (8, 96))
+    M = (u @ v) / 8.0
+    tree = {"w": jnp.stack([M, M])}          # 2 identical clusters
+    q = mc.init_q_state({"w": M}, cfg)
+    q = jax.tree.map(lambda x: jnp.broadcast_to(x, (2,) + x.shape).copy(), q)
+    errs = []
+    for _ in range(4):
+        Delta, q = mc.compress_gather_mean(tree, q, None, cfg)
+        errs.append(float(jnp.linalg.norm(Delta["w"] - M)
+                          / jnp.linalg.norm(M)))
+    # int4 factor quantization bounds the floor: |PQ^T - M| ~ 2 * (scale/2)
+    # relative ~ 0.15-0.2 for Gaussian factors; the subspace itself locks on
+    assert errs[-1] < 0.25, errs
+    assert errs[-1] <= errs[0] + 0.02
+
+
+def test_wire_bytes_scale_with_rank():
+    cfg64 = mc.MeshCompressionConfig(rank=64)
+    cfg16 = mc.MeshCompressionConfig(rank=16)
+    p = {"w": jnp.zeros((4, 1024, 1024))}
+    assert mc.wire_bytes_tree(p, cfg16) < mc.wire_bytes_tree(p, cfg64)
+    # adaptive rank accounting
+    assert mc.wire_bytes_tree(p, cfg64, rank=16) == \
+        mc.wire_bytes_tree(p, cfg16, rank=16)
