@@ -10,6 +10,8 @@ benchmarks/out/. Mapping to the paper:
   kernels            -> compressor/attention hot-spot microbench
   roofline           -> EXPERIMENTS.md §Roofline source (needs
                         dryrun_results.json from launch/dryrun.py --all)
+  sim_scenarios      -> beyond-paper: Fig. 4 methods + fault/churn sweeps
+                        replayed on the virtual cluster (repro.sim)
 """
 from __future__ import annotations
 
@@ -78,6 +80,17 @@ def main() -> None:
     blobs["scaling"] = sc
     for k, v in sc["max_fully_hidden_clusters"].items():
         print(f"scaling.max_hidden_clusters.{k},{v},clusters")
+
+    # beyond-paper: virtual-cluster fault/churn scenario sweep (sim/)
+    from benchmarks import sim_scenarios
+    ss = sim_scenarios.run(fast=args.fast or args.skip_convergence)
+    blobs["sim_scenarios"] = ss
+    for arch, m in ss["methods"].items():
+        print(f"sim_methods.{arch}.diloco_x,"
+              f"{m['speedup_vs_allreduce']['diloco_x']},x_vs_allreduce")
+    for tag, sweep in ss["fault_sweep"].items():
+        for case, row in sweep.items():
+            print(f"sim_faults.{tag}.{case},{row['retention']},retention")
 
     # roofline (if the dry-run matrix has been produced)
     if os.path.exists("dryrun_results.json"):

@@ -1,0 +1,106 @@
+"""Scenario-sweep benchmark on the virtual decentralized cluster.
+
+What decentralized reality costs: sweeps straggler severity, link
+degradation, and membership churn over the paper's operating point and
+reports effective-throughput retention vs the clean run.  Also re-derives
+the Fig. 4 / §4.2.2 method comparison (357x at 107B, 32x at 1.3B) through
+the round-by-round simulator instead of closed-form arithmetic —
+the two must agree on clean links (tests/test_sim.py asserts it).
+
+  python -m benchmarks.sim_scenarios
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import replace
+from typing import Dict
+
+from repro.sim import (FaultSchedule, Join, Leave, LinkDegradation,
+                       LinkProfile, Scenario, Straggler, compare_methods,
+                       simulate)
+
+# the paper's two throughput operating points (§4.2.2, calibrated exactly
+# as benchmarks/throughput.py does: t_step from a FLOPs model at MFU 4.5%)
+A800_PEAK = 312e12
+MFU = 0.045
+TOKENS_PER_STEP = 36_000
+OPERATING_POINTS = {
+    # arch: (n_params, n_gpus, rank)
+    "opt-1.3b": (1.3e9, 16, 64),
+    "qwen1.5-107b": (107e9, 160, 2048),
+}
+
+
+def paper_scenario(arch: str, *, rounds: int = 4, n_clusters: int = 2,
+                   h_steps: int = 125) -> Scenario:
+    n_params, n_gpus, rank = OPERATING_POINTS[arch]
+    t_step = 6.0 * n_params * TOKENS_PER_STEP / (n_gpus * A800_PEAK * MFU)
+    return Scenario(n_clusters=n_clusters, rounds=rounds, h_steps=h_steps,
+                    t_step_s=t_step, tokens_per_step=TOKENS_PER_STEP,
+                    n_params=n_params, compressor="diloco_x",
+                    compressor_kw={"rank": rank}, rank=rank)
+
+
+def fault_sweep(base: Scenario) -> Dict[str, Dict[str, float]]:
+    """Throughput retention under injected faults, vs the clean run."""
+    R = base.rounds
+    cases = {
+        "clean": FaultSchedule(()),
+        "straggler_2x": FaultSchedule((Straggler(1, 0, R, 2.0),)),
+        "straggler_5x": FaultSchedule((Straggler(1, 0, R, 5.0),)),
+        "link_half": FaultSchedule((LinkDegradation(0, R, 0.5),)),
+        "link_tenth": FaultSchedule((LinkDegradation(0, R, 0.1),)),
+        "churn": FaultSchedule((Leave(1, R // 3), Join(1, 2 * R // 3))),
+        "jittery": None,                       # 20% sigma link/step noise
+    }
+    out = {}
+    clean_tps = None
+    for name, faults in cases.items():
+        sc = (replace(base, link=replace(base.link, jitter=0.2))
+              if faults is None else replace(base, faults=faults))
+        tl = simulate(sc)
+        tps = tl.tokens_per_s
+        if name == "clean":
+            clean_tps = tps
+        out[name] = {
+            "tokens_per_s": round(tps, 1),
+            "retention": round(tps / clean_tps, 4) if clean_tps else 1.0,
+            "exposed_comm_frac": round(tl.exposed_comm_frac, 4),
+        }
+    return out
+
+
+def run(fast: bool = True) -> Dict:
+    """Entry for benchmarks/run.py: method comparison + fault sweeps."""
+    out = {"methods": {}, "fault_sweep": {}}
+    for arch in OPERATING_POINTS:
+        base = paper_scenario(arch, rounds=4 if fast else 12)
+        _, _, rank = OPERATING_POINTS[arch]
+        cmp = compare_methods(base, rank=rank)
+        out["methods"][arch] = {
+            "tokens_per_s": {k: round(v, 1)
+                             for k, v in cmp["tokens_per_s"].items()},
+            "speedup_vs_allreduce": {
+                k: round(v, 1)
+                for k, v in cmp["speedup_vs_allreduce"].items()},
+        }
+        out["fault_sweep"][arch] = fault_sweep(base)
+    # churn at higher cluster counts (the regime the paper never measures)
+    base8 = replace(paper_scenario("opt-1.3b", rounds=12), n_clusters=8)
+    out["fault_sweep"]["opt-1.3b_8clusters"] = fault_sweep(base8)
+    return out
+
+
+def main() -> None:
+    r = run(fast=True)
+    for arch, m in r["methods"].items():
+        for k, v in m["speedup_vs_allreduce"].items():
+            print(f"sim_methods.{arch}.{k},{v},x_vs_allreduce")
+    for tag, sweep in r["fault_sweep"].items():
+        for case, row in sweep.items():
+            print(f"sim_faults.{tag}.{case},{row['retention']},retention")
+    print(json.dumps(r, indent=1))
+
+
+if __name__ == "__main__":
+    main()

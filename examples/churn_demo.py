@@ -1,0 +1,55 @@
+"""Membership-churn demo on the virtual decentralized cluster.
+
+Four clusters pre-train over simulated 1 Gbps WAN links running the REAL
+DiLoCoX round loop (core/diloco.py: compression, error feedback, one-step
+delay) on a tiny problem while the fault injector misbehaves:
+
+ - cluster 1 straggles 3x for rounds 4-8 (the outer barrier waits, but
+   the overlap keeps comm hidden);
+ - cluster 2 LEAVES at round 6: the outer average switches to the
+   mask-weighted mean over the 3 survivors (core/membership.py);
+ - cluster 2 REJOINS at round 12: its stale pending-delta/error buffers
+   are reset and it restarts from the current global params.
+
+Training keeps converging through all of it, and the event timeline shows
+exactly what each round cost.  Run:
+
+  PYTHONPATH=src python examples/churn_demo.py
+"""
+from repro.sim import (FaultSchedule, Join, Leave, LinkProfile, Scenario,
+                       Straggler, make_quadratic_problem, simulate)
+
+
+def main() -> None:
+    n_clusters, rounds, h = 4, 16, 6
+    faults = FaultSchedule((
+        Straggler(cluster=1, start_round=4, end_round=8, slowdown=3.0),
+        Leave(cluster=2, round=6),
+        Join(cluster=2, round=12),
+    ))
+    sc = Scenario(
+        n_clusters=n_clusters, rounds=rounds, h_steps=h,
+        t_step_s=1.0, tokens_per_step=4096,
+        link=LinkProfile(jitter=0.05),
+        faults=faults,
+        compressor="diloco_x",
+        compressor_kw={"rank": 4, "min_dim_for_lowrank": 8},
+        n_params=1e6, seed=0)
+    problem = make_quadratic_problem(n_clusters, h_steps=h, seed=0)
+
+    tl = simulate(sc, numeric=problem)
+    print(tl.table())
+    print()
+    losses = tl.losses()
+    print(f"loss: {losses[0]:.2f} (start) -> {losses[-1]:.2f} (final), "
+          f"through a straggler + a leave/rejoin cycle")
+    print(f"deterministic timeline fingerprint: {tl.fingerprint()[:16]}")
+
+    # rerun => bit-identical timeline (same seed)
+    assert simulate(sc, numeric=make_quadratic_problem(
+        n_clusters, h_steps=h, seed=0)).fingerprint() == tl.fingerprint()
+    print("rerun with the same seed: identical timeline ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 fast test runner — mirrors the ROADMAP tier-1 command.
+#
+# `slow`-marked tests (multi-minute subprocess/integration runs) are
+# deselected by tests/conftest.py; pass --runslow to include them:
+#   scripts/test_fast.sh            # tier-1 (fast) suite
+#   scripts/test_fast.sh --runslow  # everything
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

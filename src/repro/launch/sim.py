@@ -1,0 +1,138 @@
+"""Virtual decentralized-cluster simulator entrypoint.
+
+Replays DiLoCoX outer rounds over N simulated clusters on modeled WAN
+links, with injectable faults, and prints the event timeline:
+
+  # 4 clusters, 1 Gbps, cluster 1 straggling 3x for rounds 5-10,
+  # cluster 2 leaves at round 8 and rejoins at round 14:
+  python -m repro.launch.sim --clusters 4 --rounds 20 --h-steps 30 \
+      --straggler 1:5:10:3 --leave 2:8 --join 2:14
+
+  # same faults, but actually TRAIN through them (tiny quadratic problem
+  # running the real core/diloco.py round loop):
+  python -m repro.launch.sim ... --numeric
+
+  # the paper's Fig. 4 method comparison under this link/fault profile:
+  python -m repro.launch.sim --clusters 2 --h-steps 125 --rounds 4 \
+      --params 107e9 --t-step 10.3 --rank 2048 --compare
+
+Fault grammar (repeatable flags):
+  --straggler C:START:END:SLOWDOWN      step time x SLOWDOWN on cluster C
+  --degrade START:END:FACTOR[:C]        bandwidth x FACTOR (all links or C)
+  --leave C:ROUND / --join C:ROUND      membership churn
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def parse_faults(args, ap):
+    from repro.sim import (FaultSchedule, Join, Leave, LinkDegradation,
+                           Straggler)
+    ev = []
+    try:
+        for s in args.straggler or []:
+            c, a, b, x = s.split(":")
+            ev.append(Straggler(int(c), int(a), int(b), float(x)))
+        for s in args.degrade or []:
+            parts = s.split(":")
+            a, b, f = int(parts[0]), int(parts[1]), float(parts[2])
+            c = int(parts[3]) if len(parts) > 3 else None
+            ev.append(LinkDegradation(a, b, f, c))
+        for s in args.leave or []:
+            c, r = s.split(":")
+            ev.append(Leave(int(c), int(r)))
+        for s in args.join or []:
+            c, r = s.split(":")
+            ev.append(Join(int(c), int(r)))
+    except ValueError as e:
+        ap.error(f"bad fault spec ({e}); grammar: --straggler C:START:END:X"
+                 "  --degrade START:END:F[:C]  --leave C:R  --join C:R")
+    for e in ev:
+        if getattr(e, "cluster", None) is not None and \
+                not (0 <= e.cluster < args.clusters):
+            ap.error(f"fault names cluster {e.cluster} but --clusters is "
+                     f"{args.clusters}")
+    return FaultSchedule(tuple(ev))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--h-steps", type=int, default=30)
+    ap.add_argument("--t-step", type=float, default=1.0,
+                    help="local step seconds (paper §2.4.1: 1.0)")
+    ap.add_argument("--gbps", type=float, default=1.0,
+                    help="link bandwidth in Gbps")
+    ap.add_argument("--latency-ms", type=float, default=0.0,
+                    help="per-hop latency")
+    ap.add_argument("--jitter", type=float, default=0.0,
+                    help="fractional sigma of step/bandwidth noise")
+    ap.add_argument("--params", type=float, default=1e9,
+                    help="model size the wire accounting models (e.g. 107e9)")
+    ap.add_argument("--compressor", default="diloco_x",
+                    choices=["identity", "fp16", "quant", "diloco_x",
+                             "topk", "random_sparse", "cocktail"])
+    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the §2.3 one-step-delay overlap")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--straggler", action="append", metavar="C:START:END:X")
+    ap.add_argument("--degrade", action="append", metavar="START:END:F[:C]")
+    ap.add_argument("--leave", action="append", metavar="C:ROUND")
+    ap.add_argument("--join", action="append", metavar="C:ROUND")
+    ap.add_argument("--numeric", action="store_true",
+                    help="run the real diloco_round per simulated round "
+                         "(tiny quadratic problem) and record losses")
+    ap.add_argument("--compare", action="store_true",
+                    help="run the Fig. 4 method comparison on this scenario")
+    ap.add_argument("--json", default="",
+                    help="also dump the timeline JSON to this path")
+    args = ap.parse_args()
+
+    from repro.sim import (LinkProfile, Scenario, compare_methods,
+                           make_quadratic_problem, simulate)
+
+    kw = {"rank": args.rank} if args.compressor in ("diloco_x",) else {}
+    sc = Scenario(
+        n_clusters=args.clusters, rounds=args.rounds, h_steps=args.h_steps,
+        t_step_s=args.t_step,
+        link=LinkProfile(bytes_per_s=args.gbps * 0.125e9,
+                         latency_s=args.latency_ms * 1e-3,
+                         jitter=args.jitter),
+        faults=parse_faults(args, ap), compressor=args.compressor,
+        compressor_kw=kw, delay=not args.no_overlap,
+        n_params=args.params, seed=args.seed)
+
+    if args.compare:
+        cmp = compare_methods(sc, rank=args.rank)
+        print(f"{'method':>12} {'tokens_per_s':>14} {'x_vs_allreduce':>15}")
+        for name, tps in cmp["tokens_per_s"].items():
+            print(f"{name:>12} {tps:>14.1f} "
+                  f"{cmp['speedup_vs_allreduce'][name]:>15.1f}")
+        if args.json:
+            blob = {k: tl.to_dict() for k, tl in cmp["timelines"].items()}
+            with open(args.json, "w") as f:
+                json.dump(blob, f, indent=1)
+            print(f"wrote {args.json}")
+        return
+
+    numeric = None
+    if args.numeric:
+        numeric = make_quadratic_problem(args.clusters,
+                                         h_steps=args.h_steps,
+                                         seed=args.seed)
+    tl = simulate(sc, numeric=numeric)
+    print(tl.table())
+    print(f"timeline fingerprint: {tl.fingerprint()[:16]}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(tl.to_dict(), f, indent=1)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

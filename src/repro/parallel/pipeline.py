@@ -35,6 +35,19 @@ from repro.models import model as M
 from repro.models.layers import apply_norm, embed_init, dense_init, init_norm, split
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: jax>=0.6 exposes ``jax.shard_map``
+    (``check_vma=``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
+    (``check_rep=``). Replication checking is off in both spellings — the
+    per-stage loss masking here is deliberately "unreplicated"."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 @dataclass(frozen=True)
 class PipelineConfig:
     n_stages: int = 4
@@ -205,8 +218,8 @@ def make_pp_loss(cfg: ModelConfig, mesh: Mesh, pcfg: PipelineConfig, *,
         mesh, cluster_stacked=cluster_stacked),
         P(*( ("clusters", "data", None) if cluster_stacked
              else ("data", None))))
-    loss_sm = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                            out_specs=P(), check_vma=False)
+    loss_sm = _shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                         out_specs=P())
     return loss_sm
 
 

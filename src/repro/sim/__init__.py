@@ -1,0 +1,20 @@
+"""Virtual decentralized-cluster simulator (fault injection + timing).
+
+Runs the full DiLoCoX round loop (core/diloco.py) over N *simulated*
+clusters connected by modeled slow links (core/comm.py arithmetic), with
+injectable faults: stragglers, link degradation, membership churn
+(core/membership.py semantics). See README.md in this directory.
+"""
+from repro.sim.faults import (FaultSchedule, Join, Leave, LinkDegradation,
+                              Straggler)
+from repro.sim.scenario import LinkProfile, Scenario, synthetic_shapes
+from repro.sim.simulator import (compare_methods, make_quadratic_problem,
+                                 simulate)
+from repro.sim.timeline import RoundEvent, Timeline
+
+__all__ = [
+    "FaultSchedule", "Join", "Leave", "LinkDegradation", "Straggler",
+    "LinkProfile", "Scenario", "synthetic_shapes",
+    "compare_methods", "make_quadratic_problem", "simulate",
+    "RoundEvent", "Timeline",
+]

@@ -1,0 +1,120 @@
+"""Injectable faults for the virtual decentralized cluster.
+
+Faults are plain frozen dataclasses collected in a ``FaultSchedule``; the
+simulator queries the schedule once per outer round.  Round intervals are
+half-open ``[start_round, end_round)`` — the operational vocabulary of
+OpenDiLoCo/NoLoCo's WAN setting:
+
+ - ``Straggler``: one cluster's local step time is multiplied by
+   ``slowdown`` (a slow/preempted site; the outer barrier waits for it).
+ - ``LinkDegradation``: link bandwidth multiplied by ``factor`` (<1), for
+   every link or only the links touching one cluster.
+ - ``Leave`` / ``Join``: membership churn.  A leaving cluster stops
+   participating in the outer average (mask-weighted mean,
+   ``core.membership``); a (re)joining cluster restarts from the current
+   global params with zeroed pending-delta/error buffers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Straggler:
+    cluster: int
+    start_round: int
+    end_round: int                 # exclusive
+    slowdown: float = 3.0          # multiplies t_step_s while active
+
+    def describe(self) -> str:
+        return (f"straggler(c{self.cluster} x{self.slowdown:g} "
+                f"@[{self.start_round},{self.end_round}))")
+
+
+@dataclass(frozen=True)
+class LinkDegradation:
+    start_round: int
+    end_round: int                 # exclusive
+    factor: float = 0.5            # multiplies link bandwidth while active
+    cluster: Optional[int] = None  # None: every link; else links of one site
+
+    def describe(self) -> str:
+        who = "all" if self.cluster is None else f"c{self.cluster}"
+        return (f"degrade({who} x{self.factor:g} "
+                f"@[{self.start_round},{self.end_round}))")
+
+
+@dataclass(frozen=True)
+class Leave:
+    cluster: int
+    round: int
+
+    def describe(self) -> str:
+        return f"leave(c{self.cluster} @r{self.round})"
+
+
+@dataclass(frozen=True)
+class Join:
+    cluster: int
+    round: int
+
+    def describe(self) -> str:
+        return f"join(c{self.cluster} @r{self.round})"
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    events: Tuple = field(default_factory=tuple)
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def step_multiplier(self, cluster: int, rnd: int) -> float:
+        """Product of active straggler slowdowns for one cluster."""
+        m = 1.0
+        for e in self.events:
+            if (isinstance(e, Straggler) and e.cluster == cluster
+                    and e.start_round <= rnd < e.end_round):
+                m *= e.slowdown
+        return m
+
+    def bandwidth_factor(self, cluster: int, rnd: int) -> float:
+        """Product of active degradation factors on one cluster's links."""
+        f = 1.0
+        for e in self.events:
+            if (isinstance(e, LinkDegradation)
+                    and e.start_round <= rnd < e.end_round
+                    and (e.cluster is None or e.cluster == cluster)):
+                f *= e.factor
+        return f
+
+    def membership(self, rnd: int, alive: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Apply this round's Leave/Join events.  Returns (alive', rejoined)
+        — rejoined marks clusters that were dead and came back this round
+        (their stale buffers must be reset before the outer average)."""
+        new = alive.copy()
+        rejoined = np.zeros_like(alive)
+        for e in self.events:
+            if isinstance(e, Leave) and e.round == rnd:
+                new[e.cluster] = False
+            elif isinstance(e, Join) and e.round == rnd:
+                if not new[e.cluster]:
+                    rejoined[e.cluster] = True
+                new[e.cluster] = True
+        return new, rejoined
+
+    def active(self, rnd: int) -> Tuple[str, ...]:
+        """Human-readable tags of everything firing/active at round rnd
+        (recorded on the event timeline)."""
+        tags = []
+        for e in self.events:
+            if isinstance(e, (Straggler, LinkDegradation)):
+                if e.start_round <= rnd < e.end_round:
+                    tags.append(e.describe())
+            elif e.round == rnd:
+                tags.append(e.describe())
+        return tuple(tags)

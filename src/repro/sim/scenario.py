@@ -1,0 +1,88 @@
+"""Scenario description for the virtual decentralized cluster.
+
+A ``Scenario`` is everything the simulator needs to replay a decentralized
+training run deterministically: cluster count, round/local-step budget,
+the link model, a fault schedule, and the compression method whose wire
+bytes (core.compression accounting — the same accounting the paper's
+Fig. 4 numbers come from) drive the comm times.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core import comm
+from repro.sim.faults import FaultSchedule
+
+
+@dataclass(frozen=True)
+class LinkProfile:
+    """Per-link WAN model.  ``jitter`` is the fractional sigma of the
+    deterministic per-(round, cluster) lognormal-ish noise applied to both
+    step time and bandwidth (0 = the paper's idealized constant link)."""
+    bytes_per_s: float = comm.GBPS       # 1 Gbps, the paper's setting
+    latency_s: float = 0.0               # per forwarding hop
+    jitter: float = 0.0
+
+
+def synthetic_shapes(n_params: float, n_mats: int = 8
+                     ) -> Dict[str, Tuple[int, ...]]:
+    """A stand-in parameter tree of ``n_mats`` square matrices totalling
+    ~n_params elements, so compressor wire accounting (incl. the low-rank
+    (m+n)*r arithmetic) behaves like a real model of that size without
+    building one."""
+    d = max(8, int(round((n_params / max(n_mats, 1)) ** 0.5)))
+    return {f"w{i}": (d, d) for i in range(n_mats)}
+
+
+@dataclass(frozen=True)
+class Scenario:
+    n_clusters: int = 4
+    rounds: int = 20
+    h_steps: int = 30                    # H local steps per outer round
+    t_step_s: float = 1.0                # §2.4.1 baseline local step time
+    tokens_per_step: int = 36_000        # global tokens per local step
+    link: LinkProfile = field(default_factory=LinkProfile)
+    faults: FaultSchedule = field(default_factory=FaultSchedule)
+
+    # method knobs (the Fig. 4 / Table 1 axes)
+    compressor: str = "diloco_x"
+    compressor_kw: Dict[str, Any] = field(default_factory=dict)
+    rank: Optional[int] = None           # wire-accounting rank r_t override
+    delay: bool = True                   # §2.3 one-step-delay overlap
+    allreduce_per_step: bool = False     # vanilla-DDP/CocktailSGD style:
+                                         # ring allreduce EVERY local step
+
+    # what is being shipped: explicit shapes win; else a synthetic tree
+    param_shapes: Optional[Dict[str, Tuple[int, ...]]] = None
+    n_params: float = 1.0e9
+
+    # initial membership (default: everyone alive)
+    initial_alive: Optional[Tuple[bool, ...]] = None
+
+    seed: int = 0
+
+    def shapes(self) -> Dict[str, Tuple[int, ...]]:
+        if self.param_shapes is not None:
+            return dict(self.param_shapes)
+        return synthetic_shapes(self.n_params)
+
+    def meta(self) -> Dict[str, Any]:
+        """JSON-serializable scenario header for the Timeline."""
+        return {
+            "n_clusters": self.n_clusters,
+            "rounds": self.rounds,
+            "h_steps": self.h_steps,
+            "t_step_s": self.t_step_s,
+            "tokens_per_step": self.tokens_per_step,
+            "link": {"bytes_per_s": self.link.bytes_per_s,
+                     "latency_s": self.link.latency_s,
+                     "jitter": self.link.jitter},
+            "faults": [e.describe() if hasattr(e, "describe") else repr(e)
+                       for e in self.faults.events],
+            "compressor": self.compressor,
+            "rank": self.rank,
+            "delay": self.delay,
+            "allreduce_per_step": self.allreduce_per_step,
+            "seed": self.seed,
+        }

@@ -1,0 +1,306 @@
+"""Deterministic virtual decentralized-cluster simulator.
+
+``simulate(scenario)`` replays ``scenario.rounds`` outer rounds of the
+DiLoCoX loop over N virtual clusters and returns an event ``Timeline``:
+
+ - **timing**: per-round compute time (H x the *slowest* alive cluster's
+   step — the outer sync is a barrier), wire time of the outer collective
+   from ``core.comm``'s analytic arithmetic over the *bottleneck* link,
+   and the §2.3 overlap rule ``exposed = max(0, T_comm - H*T_step)``;
+ - **faults** (``sim.faults``): stragglers inflate a cluster's step time,
+   link degradation shrinks bandwidth, Leave/Join drive the
+   ``core.membership`` mask semantics (mask-weighted outer mean, buffer
+   reset on rejoin);
+ - **numerics** (optional): pass ``numeric=make_quadratic_problem(...)``
+   (or any ``NumericProblem``) and each simulated round *actually runs*
+   ``core.diloco.diloco_round`` — compression, error feedback, one-step
+   delay, masked cluster mean — recording the realized loss per round.
+
+All randomness (link/step jitter) is drawn from ``numpy`` generators
+seeded by ``(scenario.seed, round)``: the same scenario always produces a
+bit-identical timeline (``Timeline.fingerprint()``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core import comm
+from repro.core.compression import make_compressor
+from repro.sim.scenario import Scenario
+from repro.sim.timeline import RoundEvent, Timeline
+
+
+# ---------------------------------------------------------------------------
+# optional numeric problem (runs the real diloco_round per simulated round)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NumericProblem:
+    params: Any                      # initial global params
+    inner_opt_stacked: Any           # per-cluster inner optimizer states
+    inner_fn: Callable               # diloco inner_fn(params, opt, t)
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.5
+    compress: bool = True
+    error_feedback: bool = True
+    eval_fn: Optional[Callable] = None   # params -> scalar loss (recorded)
+
+
+def make_quadratic_problem(n_clusters: int, *, d: int = 16, n_mats: int = 2,
+                           h_steps: int = 8, inner_lr: float = 3e-2,
+                           hetero: float = 0.1, seed: int = 0,
+                           outer_lr: float = 0.7, outer_momentum: float = 0.5
+                           ) -> NumericProblem:
+    """Tiny per-cluster least-squares problem: cluster c minimizes
+    0.5*||W - T_c||^2 with T_c = T* + hetero * offset_c.  Cheap enough for
+    tier-1, but it exercises the full round machinery (AdamW inner,
+    Nesterov outer, compression round-trips, error feedback, delay)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.optim import adamw
+
+    key = jax.random.PRNGKey(seed)
+    k_init, k_tgt, k_off = jax.random.split(key, 3)
+    params = {f"w{i}": 0.5 * jax.random.normal(
+        jax.random.fold_in(k_init, i), (d, d), jnp.float32)
+        for i in range(n_mats)}
+    target = {k: jax.random.normal(jax.random.fold_in(k_tgt, i), (d, d))
+              for i, k in enumerate(params)}
+    offsets = {k: hetero * jax.random.normal(
+        jax.random.fold_in(k_off, i), (n_clusters, d, d))
+        for i, k in enumerate(params)}
+
+    def cluster_loss(p, c):
+        per = [jnp.sum((p[k] - (target[k] + offsets[k][c])) ** 2)
+               for k in p]
+        return 0.5 * sum(per) / len(per)
+
+    opt0 = adamw.init(params)
+    inner_stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_clusters,) + x.shape).copy(), opt0)
+
+    def one_cluster(params_g, opt_state, c):
+        def step(carry, _):
+            p, o = carry
+            loss, g = jax.value_and_grad(lambda q: cluster_loss(q, c))(p)
+            p, o = adamw.update(g, o, p, lr=inner_lr)
+            return (p, o), loss
+
+        (p, o), losses = jax.lax.scan(step, (params_g, opt_state),
+                                      None, length=h_steps)
+        return p, o, losses
+
+    def inner_fn(params_g, inner_opt_stacked, t):
+        import jax as _jax
+        f = lambda opt, c: one_cluster(params_g, opt, c)
+        return _jax.vmap(f)(inner_opt_stacked, jnp.arange(n_clusters))
+
+    def eval_fn(p):
+        return float(np.mean([float(cluster_loss(p, c))
+                              for c in range(n_clusters)]))
+
+    return NumericProblem(params=params, inner_opt_stacked=inner_stacked,
+                          inner_fn=inner_fn, outer_lr=outer_lr,
+                          outer_momentum=outer_momentum, eval_fn=eval_fn)
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+def _jitter_factors(seed: int, rnd: int, n: int, sigma: float, salt: int
+                    ) -> np.ndarray:
+    """Deterministic positive per-(round, cluster) noise: exp(sigma * z)
+    with z ~ N(0,1) from a generator seeded by (seed, salt, round)."""
+    if sigma <= 0:
+        return np.ones(n)
+    rng = np.random.default_rng([seed, salt, rnd])
+    return np.exp(sigma * rng.standard_normal(n))
+
+
+def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
+             adaptive_cfg: Optional[Any] = None) -> Timeline:
+    """Run the scenario; returns the event Timeline.
+
+    ``adaptive_cfg`` (an ``adaptive.AdaGradCmpConfig``) enables the Alg. 3
+    controller: requires ``numeric`` (the rank signal is the effective rank
+    of the realized averaged pseudo-gradient, as in train/trainer.py)."""
+    C = sc.n_clusters
+    shapes = sc.shapes()
+    compressor = make_compressor(sc.compressor, **sc.compressor_kw)
+    alive = (np.ones(C, bool) if sc.initial_alive is None
+             else np.asarray(sc.initial_alive, bool).copy())
+    if alive.shape != (C,):
+        raise ValueError(f"initial_alive must have shape ({C},)")
+
+    # --- numeric state (real diloco rounds) --------------------------------
+    num = None
+    if numeric is not None:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import diloco, membership
+
+        state = diloco.init_state(numeric.params, numeric.inner_opt_stacked,
+                                  C, compressor)
+        rcfg = diloco.RoundConfig(
+            outer_lr=numeric.outer_lr, outer_momentum=numeric.outer_momentum,
+            delay=sc.delay, compress=numeric.compress,
+            error_feedback=numeric.error_feedback)
+
+        def _round(st, rank_scalar, alive_vec):
+            cm = lambda tree: membership.masked_cluster_mean(tree, alive_vec)
+            return diloco.diloco_round(st, numeric.inner_fn, compressor,
+                                       cm, rcfg, rank_scalar)
+
+        num = {"state": state, "round": jax.jit(_round), "jnp": jnp,
+               "membership": membership, "jax": jax}
+
+    ada_state = None
+    if adaptive_cfg is not None:
+        if numeric is None:
+            raise ValueError("adaptive_cfg requires a numeric problem "
+                             "(the rank signal comes from realized deltas)")
+        from repro.core import adaptive as _ada
+        ada_state = _ada.AdaGradCmpState.create(adaptive_cfg)
+
+    events = []
+    for r in range(sc.rounds):
+        alive, rejoined = sc.faults.membership(r, alive)
+        alive_ids = tuple(int(i) for i in np.flatnonzero(alive))
+        n_alive = len(alive_ids)
+
+        h_t = sc.h_steps
+        rank_t = sc.rank
+        if ada_state is not None and ada_state.t >= 1:
+            # Alg. 3 anneals the rank (wire bytes + the rank_scalar fed to
+            # the compressor).  Its H co-adaptation is NOT applied: the
+            # numeric inner loop executes the problem's fixed h_steps
+            # (train/trainer.py parity), and the timeline must charge the
+            # compute that actually ran.
+            rank_t = ada_state.r_t
+
+        # ---- compute leg: barrier on the slowest alive cluster -----------
+        step_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=1)
+        t_steps = np.array([sc.t_step_s * sc.faults.step_multiplier(c, r)
+                            * step_j[c] for c in range(C)])
+        if n_alive:
+            slowest = int(max(alive_ids, key=lambda c: t_steps[c]))
+            t_compute = h_t * float(t_steps[slowest])
+        else:
+            slowest, t_compute = -1, 0.0
+
+        # ---- comm leg: analytic collective over the bottleneck link ------
+        wire = int(compressor.wire_bytes(shapes, rank=rank_t))
+        bw_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=2)
+        bws = np.array([sc.link.bytes_per_s * sc.faults.bandwidth_factor(c, r)
+                        * bw_j[c] for c in range(C)])
+        if n_alive >= 2:
+            bottleneck = int(min(alive_ids, key=lambda c: bws[c]))
+            bw = float(bws[bottleneck])
+            csub = comm.CommScenario(n_clusters=n_alive, link_bytes_per_s=bw,
+                                     t_step_s=sc.t_step_s)
+            if sc.allreduce_per_step:
+                per_step = (comm.ring_allreduce_time(wire, csub)
+                            + 2 * (n_alive - 1) * sc.link.latency_s)
+                t_comm = h_t * per_step
+                exposed = t_comm                   # no overlap in DDP style
+            else:
+                t_comm = (comm.gather_time(wire, csub)
+                          + (n_alive - 1) * sc.link.latency_s)
+                exposed = (max(0.0, t_comm - t_compute) if sc.delay
+                           else t_comm)
+        else:
+            bottleneck, t_comm, exposed = -1, 0.0, 0.0
+
+        t_round = t_compute + exposed
+        tokens = sc.tokens_per_step * h_t * n_alive / max(C, 1)
+
+        # ---- numeric leg: one REAL diloco round over the alive set -------
+        loss = None
+        if num is not None:
+            jnp = num["jnp"]
+
+            def reset_buffers(st, mask_np):
+                """Zero per-cluster pending-delta/error for masked clusters
+                (comp_state is kept: a stale warm-start Q is harmless,
+                zeroing it would kill the PowerSGD subspace forever)."""
+                m = jnp.asarray(mask_np, jnp.float32)
+                return st._replace(
+                    delta_pending=num["membership"].reset_rejoining(
+                        st.delta_pending, m),
+                    error=num["membership"].reset_rejoining(st.error, m))
+
+            st = num["state"]
+            if rejoined.any():
+                st = reset_buffers(st, rejoined)
+            alive_vec = jnp.asarray(alive, jnp.float32)
+            rank_scalar = (None if rank_t is None
+                           else jnp.asarray(rank_t, jnp.int32))
+            st, aux = num["round"](st, rank_scalar, alive_vec)
+            # dead clusters neither train nor accumulate error
+            if (~alive).any():
+                st = reset_buffers(st, ~alive)
+            num["state"] = st
+            aux_np = np.asarray(aux)
+            if n_alive:
+                loss = float(np.mean(aux_np[np.asarray(alive)]))
+            if ada_state is not None:
+                from repro.core import adaptive as _ada
+                r_prime = float(_ada.tree_effective_rank(
+                    num["membership"].masked_cluster_mean(
+                        st.delta_pending, alive_vec)))
+                ada_state = _ada.adagradcmp_update(ada_state, r_prime,
+                                                   adaptive_cfg)
+
+        events.append(RoundEvent(
+            round=r, alive=alive_ids,
+            rejoined=tuple(int(i) for i in np.flatnonzero(rejoined)),
+            h_steps=h_t, rank=rank_t, t_compute_s=t_compute,
+            t_comm_s=t_comm, exposed_comm_s=exposed, t_round_s=t_round,
+            wire_bytes=wire, slowest_cluster=slowest,
+            bottleneck_cluster=bottleneck, tokens=tokens,
+            faults=sc.faults.active(r), loss=loss))
+
+    tl = Timeline(scenario=sc.meta(), events=events)
+    if num is not None:
+        tl.final_params = num["state"].params      # handy for callers/tests
+    return tl
+
+
+# ---------------------------------------------------------------------------
+# paper-method comparison (Fig. 4 / Table 1 / 357x as a runnable program)
+# ---------------------------------------------------------------------------
+
+def compare_methods(base: Scenario, rank: int = 64) -> Dict[str, Any]:
+    """Run the paper's four methods through the *same* scenario (same link
+    profile, same faults) and compare effective throughput.  Mirrors
+    benchmarks/throughput.py's method table, but simulated round-by-round —
+    so fault schedules change the ordering measurably instead of being
+    outside the model."""
+    H = base.h_steps
+    variants = {
+        "allreduce": replace(base, compressor="identity", compressor_kw={},
+                             allreduce_per_step=True, delay=False, h_steps=1),
+        "opendiloco": replace(base, compressor="fp16", compressor_kw={},
+                              delay=False, h_steps=4 * H),
+        "cocktail": replace(base, compressor="cocktail", compressor_kw={},
+                            allreduce_per_step=True, delay=False, h_steps=1),
+        "diloco_x": replace(base, compressor="diloco_x",
+                            compressor_kw=dict(base.compressor_kw,
+                                               rank=rank),
+                            delay=True, h_steps=H),
+    }
+    timelines = {name: simulate(v) for name, v in variants.items()}
+    tps = {name: tl.tokens_per_s for name, tl in timelines.items()}
+    ar = tps["allreduce"]
+    return {
+        "tokens_per_s": tps,
+        "speedup_vs_allreduce": {k: (v / ar if ar > 0 else float("inf"))
+                                 for k, v in tps.items()},
+        "timelines": timelines,
+    }

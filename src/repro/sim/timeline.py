@@ -1,0 +1,123 @@
+"""Event-timeline output of the simulator.
+
+One ``RoundEvent`` per outer round records who participated and where the
+time went (compute vs total vs *exposed* comm — the §2.3 overlap means
+exposed can be zero while the wire is busy).  ``Timeline`` aggregates to
+effective throughput and provides a stable ``fingerprint()`` so tests can
+assert determinism ("same seed => identical timeline") as an equality on
+one string.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class RoundEvent:
+    round: int
+    alive: Tuple[int, ...]             # participating cluster ids
+    rejoined: Tuple[int, ...]          # ids whose buffers were reset
+    h_steps: int
+    rank: Optional[int]                # compressor rank r_t (None: n/a)
+    t_compute_s: float                 # H * slowest alive cluster's step
+    t_comm_s: float                    # full wire time of the outer sync
+    exposed_comm_s: float              # comm not hidden behind compute
+    t_round_s: float                   # t_compute + exposed
+    wire_bytes: int
+    slowest_cluster: int               # argmax local step time (-1: none)
+    bottleneck_cluster: int            # argmin link bandwidth (-1: none)
+    tokens: float                      # tokens trained this round
+    faults: Tuple[str, ...] = ()
+    loss: Optional[float] = None       # numeric mode only
+
+
+@dataclass
+class Timeline:
+    scenario: Dict[str, Any]
+    events: List[RoundEvent] = field(default_factory=list)
+
+    # ---- aggregates -------------------------------------------------------
+    @property
+    def total_time_s(self) -> float:
+        return sum(e.t_round_s for e in self.events)
+
+    @property
+    def total_tokens(self) -> float:
+        return sum(e.tokens for e in self.events)
+
+    @property
+    def tokens_per_s(self) -> float:
+        t = self.total_time_s
+        return self.total_tokens / t if t > 0 else 0.0
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(e.wire_bytes for e in self.events)
+
+    @property
+    def exposed_comm_frac(self) -> float:
+        t = self.total_time_s
+        return (sum(e.exposed_comm_s for e in self.events) / t
+                if t > 0 else 0.0)
+
+    def losses(self) -> List[float]:
+        return [e.loss for e in self.events if e.loss is not None]
+
+    # ---- serialization ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario,
+            "summary": {
+                "total_time_s": round(self.total_time_s, 6),
+                "total_tokens": self.total_tokens,
+                "tokens_per_s": round(self.tokens_per_s, 3),
+                "total_wire_bytes": self.total_wire_bytes,
+                "exposed_comm_frac": round(self.exposed_comm_frac, 6),
+            },
+            "events": [asdict(e) for e in self.events],
+        }
+
+    def fingerprint(self) -> str:
+        """Stable hash of the full event timeline (floats canonicalized to
+        9 decimals).  Two runs are "identical" iff fingerprints match."""
+        def canon(x):
+            if isinstance(x, float):
+                return round(x, 9)
+            if isinstance(x, dict):
+                return {k: canon(v) for k, v in sorted(x.items())}
+            if isinstance(x, (list, tuple)):
+                return [canon(v) for v in x]
+            return x
+
+        blob = json.dumps(canon([asdict(e) for e in self.events]),
+                          sort_keys=True).encode("utf-8")
+        return hashlib.sha256(blob).hexdigest()
+
+    # ---- display ----------------------------------------------------------
+    def table(self, max_rows: int = 0) -> str:
+        hdr = (f"{'rnd':>4} {'alive':>10} {'H':>4} {'r_t':>5} "
+               f"{'compute_s':>10} {'comm_s':>9} {'exposed_s':>10} "
+               f"{'round_s':>9} {'wire_MB':>8} {'loss':>9}  faults")
+        lines = [hdr, "-" * len(hdr)]
+        events = self.events if not max_rows else self.events[:max_rows]
+        for e in events:
+            alive = (f"{len(e.alive)}/{self.scenario.get('n_clusters', '?')}")
+            loss = "" if e.loss is None else f"{e.loss:9.4f}"
+            lines.append(
+                f"{e.round:>4} {alive:>10} {e.h_steps:>4} "
+                f"{('-' if e.rank is None else e.rank):>5} "
+                f"{e.t_compute_s:>10.3f} {e.t_comm_s:>9.3f} "
+                f"{e.exposed_comm_s:>10.3f} {e.t_round_s:>9.3f} "
+                f"{e.wire_bytes / 1e6:>8.2f} {loss:>9}  "
+                f"{'; '.join(e.faults)}")
+        if max_rows and len(self.events) > max_rows:
+            lines.append(f"... ({len(self.events) - max_rows} more rounds)")
+        lines.append(
+            f"total {self.total_time_s:.2f}s  "
+            f"{self.total_tokens:.0f} tokens  "
+            f"{self.tokens_per_s:.1f} tok/s  "
+            f"exposed-comm {100 * self.exposed_comm_frac:.1f}%")
+        return "\n".join(lines)

@@ -1,0 +1,57 @@
+"""Tier-1 test configuration.
+
+Two jobs:
+ 1. Make ``hypothesis`` optional: when the real package is missing, install
+    ``tests/_hypothesis_compat.py`` (a deterministic fixed-example fallback)
+    into ``sys.modules`` *before* collection, so the property-test modules
+    import cleanly and still run meaningful fixed-seed cases.
+ 2. Keep tier-1 fast: tests marked ``@pytest.mark.slow`` (multi-minute
+    subprocess/integration runs) are skipped unless ``--runslow`` is given
+    or an explicit ``-m slow`` selection asks for them.
+"""
+import importlib.util
+import os
+import sys
+
+import pytest
+
+# --- shave XLA compile time -----------------------------------------------
+# Tier-1 is compile-bound (dozens of tiny-model jits); backend optimization
+# level 0 cuts compile ~30% with no effect on what the tests assert.  Set
+# REPRO_FULL_XLA_OPT=1 to opt out.  Must run before jax initializes.
+if not os.environ.get("REPRO_FULL_XLA_OPT"):
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_backend_optimization_level" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_backend_optimization_level=0").strip()
+
+# --- hypothesis fallback (must happen at import time, before collection) ---
+if importlib.util.find_spec("hypothesis") is None:
+    _here = os.path.dirname(__file__)
+    if _here not in sys.path:
+        sys.path.insert(0, _here)
+    import _hypothesis_compat
+    sys.modules["hypothesis"] = _hypothesis_compat
+    sys.modules["hypothesis.strategies"] = _hypothesis_compat.strategies
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked slow (multi-minute integration)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute integration test; deselected from "
+                   "tier-1 unless --runslow (or -m slow) is given")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    if "slow" in (config.getoption("-m") or ""):
+        return      # explicit -m selection wins
+    skip_slow = pytest.mark.skip(reason="slow: use --runslow or -m slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

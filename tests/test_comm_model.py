@@ -1,0 +1,88 @@
+"""core/comm.py analytic model: collective arithmetic, the §2.3 overlap
+rule, and the paper's §4.2.2 speedup reproduction (Fig. 4 / 357x)."""
+import numpy as np
+import pytest
+
+from repro.core import comm
+
+
+def test_ring_allreduce_arithmetic():
+    """Ring AllReduce moves 2(C-1)/C * bytes per link."""
+    sc = comm.CommScenario(n_clusters=4, link_bytes_per_s=1e9)
+    np.testing.assert_allclose(comm.ring_allreduce_time(8e9, sc),
+                               2 * 3 / 4 * 8e9 / 1e9, rtol=1e-12)
+    # C=2 degenerate ring: exactly one payload each way
+    sc2 = comm.CommScenario(n_clusters=2, link_bytes_per_s=1e9)
+    np.testing.assert_allclose(comm.ring_allreduce_time(8e9, sc2),
+                               8.0, rtol=1e-12)
+
+
+def test_gather_arithmetic():
+    """Ring all-gather forwards the per-cluster payload C-1 times."""
+    sc = comm.CommScenario(n_clusters=5, link_bytes_per_s=2e9)
+    np.testing.assert_allclose(comm.gather_time(4e9, sc),
+                               4 * 4e9 / 2e9, rtol=1e-12)
+    # gather moves (C-1)*payload; allreduce 2(C-1)/C*total — for the same
+    # total bytes the gather of a 1/C-share is cheaper by 2x exactly
+    total = 10e9
+    np.testing.assert_allclose(
+        comm.gather_time(total / 5, sc) / comm.ring_allreduce_time(total, sc),
+        0.5, rtol=1e-12)
+
+
+@pytest.mark.parametrize("h,overlap", [(10, True), (10, False), (1, True)])
+def test_overlap_rule(h, overlap):
+    """exposed = max(0, T_comm - H*T_step) iff overlap."""
+    sc = comm.CommScenario(n_clusters=3, link_bytes_per_s=1e8, t_step_s=2.0)
+    wire = 5e9
+    r = comm.method_throughput("m", param_bytes_fp32=1e9, wire_bytes=wire,
+                               h_steps=h, overlap=overlap, sc=sc)
+    t_comm = comm.gather_time(wire, sc)
+    expect = max(0.0, t_comm - h * sc.t_step_s) if overlap else t_comm
+    np.testing.assert_allclose(r.exposed_comm_s, expect, rtol=1e-12)
+    np.testing.assert_allclose(r.t_round_s, h * sc.t_step_s + expect,
+                               rtol=1e-12)
+    np.testing.assert_allclose(r.tokens_per_s,
+                               sc.tokens_per_step * h / r.t_round_s,
+                               rtol=1e-12)
+
+
+def test_fully_hidden_comm_costs_nothing():
+    sc = comm.CommScenario(n_clusters=2, link_bytes_per_s=1e12, t_step_s=1.0)
+    r = comm.method_throughput("m", param_bytes_fp32=1e9, wire_bytes=1e6,
+                               h_steps=100, overlap=True, sc=sc)
+    assert r.exposed_comm_s == 0.0
+    np.testing.assert_allclose(r.t_round_s, 100.0, rtol=1e-12)
+
+
+def test_allreduce_per_step_has_no_overlap():
+    sc = comm.CommScenario(n_clusters=2, link_bytes_per_s=1e9, t_step_s=1.0)
+    r = comm.method_throughput("ddp", param_bytes_fp32=4e9, wire_bytes=4e9,
+                               h_steps=1, overlap=False, sc=sc,
+                               allreduce_per_step=True)
+    np.testing.assert_allclose(r.comm_s_per_round,
+                               comm.ring_allreduce_time(4e9, sc), rtol=1e-12)
+    np.testing.assert_allclose(r.t_round_s, 1.0 + r.comm_s_per_round,
+                               rtol=1e-12)
+    assert r.exposed_comm_s == r.comm_s_per_round
+
+
+def test_paper_357x_speedup_reproduction():
+    """benchmarks/throughput.py end-to-end: real parameter shapes, real
+    compressor accounting, calibrated step time — the §4.2.2 speedups
+    must come out at the paper's order of magnitude, in the paper's
+    order."""
+    from benchmarks import throughput
+
+    r107 = throughput.run("qwen1.5-107b")
+    s = r107["speedup_vs_allreduce"]
+    assert s["diloco_x"] > s["cocktail"] > 1.0
+    assert 250 < s["diloco_x"] < 450           # paper: 357x
+    assert r107["diloco_x_vs_cocktail"] > 1.0  # paper: ~1.35x
+
+    r13 = throughput.run("opt-1.3b")
+    s13 = r13["speedup_vs_allreduce"]
+    assert 20 < s13["diloco_x"] < 60           # paper: 32x
+    # method ordering is scale-dependent only in magnitude, not in sign:
+    # DiLoCoX beats vanilla AllReduce everywhere
+    assert s13["diloco_x"] > 1.0

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import membership as mb
@@ -43,9 +44,12 @@ def test_effective_batch_scale():
         jnp.array([1.0, 0, 0, 0]), 4)) - 0.5) < 1e-6
 
 
+@pytest.mark.slow
 def test_dropout_training_still_converges():
     """DiLoCoX keeps learning when a cluster drops for some rounds: run the
-    simulator with a masked cluster_mean."""
+    simulator with a masked cluster_mean.  slow: a real (reduced) LM trains
+    for 8 rounds; tier-1 covers the same churn semantics cheaply via
+    tests/test_sim.py numeric scenarios."""
     import dataclasses
     from repro.configs.base import get_config
     from repro.core import diloco
@@ -54,8 +58,8 @@ def test_dropout_training_still_converges():
 
     cfg = dataclasses.replace(get_config("opt-1.3b").reduced(),
                               vocab_size=64)
-    tcfg = T.TrainConfig(n_clusters=2, local_batch=8, seq_len=32,
-                         inner_lr=3e-3, h_steps=6,
+    tcfg = T.TrainConfig(n_clusters=2, local_batch=8, seq_len=16,
+                         inner_lr=3e-3, h_steps=4,
                          outer_lr=0.5, outer_momentum=0.7)
     from repro.data.synthetic import SyntheticLM, with_frontend
     from repro.models import model as M
@@ -69,17 +73,22 @@ def test_dropout_training_still_converges():
         adamw.init(params))
     state = diloco.init_state(params, inner0, 2, comp)
     rcfg = diloco.RoundConfig(outer_lr=0.5, outer_momentum=0.7)
-    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+    data = SyntheticLM(cfg.vocab_size, 16, 8, seed=0)
     inner_fn = T.make_inner_fn(cfg, tcfg, data.table)
-    eval_b = SyntheticLM(cfg.vocab_size, 32, 16, seed=0,
+    eval_b = SyntheticLM(cfg.vocab_size, 16, 16, seed=0,
                          data_shard=9999).next_batch()
 
+    @jax.jit
+    def round_fn(state, alive):
+        cm = lambda t: mb.masked_cluster_mean(t, alive)
+        return diloco.diloco_round(state, inner_fn, comp, cm, rcfg,
+                                   jnp.asarray(16))
+
+    eval_jit = jax.jit(lambda p: M.loss_fn(p, cfg, eval_b)[0])
     losses = []
     for r in range(8):
         alive = jnp.array([1.0, 0.0 if r in (3, 4) else 1.0])
-        cm = lambda t: mb.masked_cluster_mean(t, alive)
-        state, _ = diloco.diloco_round(state, inner_fn, comp, cm, rcfg,
-                                       jnp.asarray(16))
-        losses.append(float(M.loss_fn(state.params, cfg, eval_b)[0]))
+        state, _ = round_fn(state, alive)
+        losses.append(float(eval_jit(state.params)))
     assert losses[-1] < losses[0] - 0.4, losses
     assert all(np.isfinite(losses))

@@ -1,0 +1,225 @@
+"""Virtual decentralized-cluster simulator (repro.sim): determinism,
+fault-injection semantics, the §2.3 overlap rule, membership churn, and
+agreement with the closed-form comm model / paper speedup ordering."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.sim import (FaultSchedule, Join, Leave, LinkDegradation,
+                       LinkProfile, Scenario, Straggler, compare_methods,
+                       make_quadratic_problem, simulate, synthetic_shapes)
+
+GBPS = comm.GBPS
+
+
+def clean_scenario(**kw):
+    base = dict(n_clusters=4, rounds=6, h_steps=10, t_step_s=1.0,
+                n_params=1e8, compressor="diloco_x",
+                compressor_kw={"rank": 32}, seed=3)
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_same_seed_identical_timeline():
+    sc = clean_scenario(link=LinkProfile(jitter=0.1))
+    a, b = simulate(sc), simulate(sc)
+    assert a.fingerprint() == b.fingerprint()
+    assert [e.t_round_s for e in a.events] == [e.t_round_s for e in b.events]
+
+
+def test_different_seed_different_jitter():
+    sc = clean_scenario(link=LinkProfile(jitter=0.1))
+    sc2 = dataclasses.replace(sc, seed=sc.seed + 1)
+    assert simulate(sc).fingerprint() != simulate(sc2).fingerprint()
+
+
+def test_numeric_run_is_deterministic():
+    faults = FaultSchedule((Straggler(1, 2, 4, 3.0), Leave(2, 3),
+                            Join(2, 5)))
+    sc = clean_scenario(rounds=6, h_steps=4, faults=faults,
+                        compressor_kw={"rank": 4, "min_dim_for_lowrank": 8})
+    fp = [simulate(sc, numeric=make_quadratic_problem(
+        4, h_steps=4, seed=0)).fingerprint() for _ in range(2)]
+    assert fp[0] == fp[1]
+
+
+# ---------------------------------------------------------------------------
+# timing semantics vs the closed-form model (core/comm.py)
+# ---------------------------------------------------------------------------
+
+def test_clean_run_matches_method_throughput():
+    """Fault-free, jitter-free simulation must equal core.comm's closed-form
+    method arithmetic exactly (same wire bytes, same overlap rule)."""
+    from repro.core.compression import make_compressor
+
+    sc = clean_scenario()
+    compressor = make_compressor(sc.compressor, **sc.compressor_kw)
+    wire = compressor.wire_bytes(sc.shapes())
+    ref = comm.method_throughput(
+        "x", param_bytes_fp32=4 * sc.n_params, wire_bytes=wire,
+        h_steps=sc.h_steps, overlap=True,
+        sc=comm.CommScenario(n_clusters=sc.n_clusters,
+                             t_step_s=sc.t_step_s,
+                             tokens_per_step=sc.tokens_per_step))
+    tl = simulate(sc)
+    e = tl.events[0]
+    assert e.wire_bytes == wire
+    np.testing.assert_allclose(e.t_comm_s, ref.comm_s_per_round, rtol=1e-12)
+    np.testing.assert_allclose(e.exposed_comm_s, ref.exposed_comm_s,
+                               rtol=1e-12)
+    np.testing.assert_allclose(e.t_round_s, ref.t_round_s, rtol=1e-12)
+    np.testing.assert_allclose(tl.tokens_per_s, ref.tokens_per_s, rtol=1e-9)
+
+
+def test_overlap_rule_exposed_comm():
+    """exposed = max(0, T_comm - H*T_step): shrink bandwidth until comm no
+    longer hides behind compute and check the exact excess is exposed."""
+    slow = clean_scenario(link=LinkProfile(bytes_per_s=GBPS / 500))
+    e = simulate(slow).events[0]
+    assert e.t_comm_s > e.t_compute_s
+    np.testing.assert_allclose(e.exposed_comm_s,
+                               e.t_comm_s - e.t_compute_s, rtol=1e-12)
+    # and with overlap disabled the full comm time is exposed
+    e2 = simulate(dataclasses.replace(slow, delay=False)).events[0]
+    np.testing.assert_allclose(e2.exposed_comm_s, e2.t_comm_s, rtol=1e-12)
+    # fast link: fully hidden
+    assert simulate(clean_scenario()).events[0].exposed_comm_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fault injection changes the timeline the way it should
+# ---------------------------------------------------------------------------
+
+def test_straggler_inflates_only_its_rounds():
+    base = clean_scenario()
+    strag = dataclasses.replace(
+        base, faults=FaultSchedule((Straggler(2, 2, 4, slowdown=3.0),)))
+    a, b = simulate(base), simulate(strag)
+    assert a.fingerprint() != b.fingerprint()
+    for r in range(base.rounds):
+        ea, eb = a.events[r], b.events[r]
+        if 2 <= r < 4:
+            np.testing.assert_allclose(eb.t_compute_s, 3.0 * ea.t_compute_s,
+                                       rtol=1e-12)
+            assert eb.slowest_cluster == 2
+            assert any("straggler" in f for f in eb.faults)
+        else:
+            np.testing.assert_allclose(eb.t_compute_s, ea.t_compute_s,
+                                       rtol=1e-12)
+
+
+def test_link_degradation_inflates_comm():
+    base = clean_scenario(link=LinkProfile(bytes_per_s=GBPS / 100))
+    deg = dataclasses.replace(
+        base, faults=FaultSchedule((LinkDegradation(1, 2, factor=0.25),)))
+    a, b = simulate(base), simulate(deg)
+    np.testing.assert_allclose(b.events[1].t_comm_s,
+                               4.0 * a.events[1].t_comm_s, rtol=1e-12)
+    np.testing.assert_allclose(b.events[0].t_comm_s, a.events[0].t_comm_s,
+                               rtol=1e-12)
+    # per-cluster degradation: that cluster becomes the bottleneck link
+    deg1 = dataclasses.replace(
+        base, faults=FaultSchedule((LinkDegradation(1, 2, factor=0.25,
+                                                    cluster=3),)))
+    assert simulate(deg1).events[1].bottleneck_cluster == 3
+
+
+def test_membership_churn_changes_participants_and_comm():
+    faults = FaultSchedule((Leave(1, 2), Join(1, 4)))
+    sc = clean_scenario(faults=faults)
+    tl = simulate(sc)
+    assert tl.events[1].alive == (0, 1, 2, 3)
+    assert tl.events[2].alive == (0, 2, 3)          # after the leave
+    assert tl.events[3].alive == (0, 2, 3)
+    assert tl.events[4].alive == (0, 1, 2, 3)       # rejoined
+    assert tl.events[4].rejoined == (1,)
+    # gather over 3 clusters moves (3-1)/3 of what 4 clusters' (4-1)/4 does
+    # per payload: t_comm scales as (c-1) at fixed payload
+    np.testing.assert_allclose(tl.events[2].t_comm_s / tl.events[1].t_comm_s,
+                               2.0 / 3.0, rtol=1e-12)
+    # fewer clusters train fewer global tokens per round
+    np.testing.assert_allclose(tl.events[2].tokens,
+                               0.75 * tl.events[1].tokens, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# numerics: the real round loop runs (and survives churn)
+# ---------------------------------------------------------------------------
+
+def test_numeric_quadratic_converges():
+    prob = make_quadratic_problem(4, h_steps=6, seed=0)
+    sc = clean_scenario(rounds=12, h_steps=6,
+                        compressor_kw={"rank": 4, "min_dim_for_lowrank": 8})
+    tl = simulate(sc, numeric=prob)
+    losses = tl.losses()
+    assert len(losses) == 12
+    assert all(np.isfinite(losses))
+    assert losses[-1] < 0.3 * losses[0]
+
+
+def test_numeric_survives_straggler_and_churn():
+    """A straggler plus a leave/rejoin cycle changes the round *timeline*
+    (timing) deterministically but training still converges (numerics)."""
+    faults = FaultSchedule((Straggler(1, 3, 6, slowdown=4.0),
+                            Leave(2, 4), Join(2, 9)))
+    sc = clean_scenario(rounds=14, h_steps=6, faults=faults,
+                        link=LinkProfile(jitter=0.05),
+                        compressor_kw={"rank": 4, "min_dim_for_lowrank": 8})
+    mk = lambda: make_quadratic_problem(4, h_steps=6, seed=0)
+    tl = simulate(sc, numeric=mk())
+    # timeline: straggler rounds are ~4x slower than their neighbours
+    assert tl.events[3].t_compute_s > 3.0 * tl.events[2].t_compute_s
+    # churn visible on the timeline
+    assert 2 not in tl.events[5].alive and 2 in tl.events[10].alive
+    assert tl.events[9].rejoined == (2,)
+    # numerics: still converges through all of it
+    losses = tl.losses()
+    assert all(np.isfinite(losses))
+    assert losses[-1] < 0.3 * losses[0]
+    # determinism of the full (timing + numeric) event stream
+    assert simulate(sc, numeric=mk()).fingerprint() == tl.fingerprint()
+
+
+def test_numeric_churn_vs_clean_losses_differ_only_after_leave():
+    """Dropping a cluster changes the numeric trajectory only once the
+    mask changes — before the Leave round both runs are identical."""
+    mk = lambda: make_quadratic_problem(3, h_steps=4, seed=1)
+    base = clean_scenario(n_clusters=3, rounds=8, h_steps=4,
+                          compressor_kw={"rank": 4,
+                                         "min_dim_for_lowrank": 8})
+    churn = dataclasses.replace(base,
+                                faults=FaultSchedule((Leave(0, 4),)))
+    la = simulate(base, numeric=mk()).losses()
+    lb = simulate(churn, numeric=mk()).losses()
+    np.testing.assert_allclose(la[:4], lb[:4], rtol=1e-6)
+    assert not np.allclose(la[4:], lb[4:], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the paper's speedup ordering, replayed through the simulator
+# ---------------------------------------------------------------------------
+
+def test_method_comparison_reproduces_paper_ordering():
+    """At the 107B operating point (calibrated t_step like
+    benchmarks/throughput.py) the simulator reproduces the §4.2.2
+    ordering and the ~357x headline within modeling slack."""
+    t_step = 6.0 * 107e9 * 36_000 / (160 * 312e12 * 0.045)
+    sc = Scenario(n_clusters=2, rounds=3, h_steps=125, t_step_s=t_step,
+                  n_params=107e9, tokens_per_step=36_000)
+    cmp = compare_methods(sc, rank=2048)
+    s = cmp["speedup_vs_allreduce"]
+    assert s["diloco_x"] > s["cocktail"] > s["allreduce"] == 1.0
+    assert s["diloco_x"] > s["opendiloco"]
+    assert 250 < s["diloco_x"] < 450          # paper: 357x
+
+
+def test_synthetic_shapes_total():
+    shapes = synthetic_shapes(1e8)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert abs(total - 1e8) / 1e8 < 0.01
