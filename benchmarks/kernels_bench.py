@@ -20,29 +20,38 @@ def _time(fn, *args, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> Dict[str, float]:
+def run(smoke: bool = False) -> Dict[str, float]:
+    """``smoke``: shrink inputs and skip the Pallas interpret paths (their
+    Python-executed kernel bodies are the slow part) — a seconds-scale
+    bit-rot check of every jnp reference path for CI."""
     from repro.kernels import ref
-    from repro.kernels.quant4 import quant4_pack_pallas
-    from repro.kernels.lowrank_mm import matmul_pallas
 
     out = {}
-    x = jax.random.normal(jax.random.PRNGKey(0), (1 << 20,))
-    out["quant4_pack_ref_1M"] = _time(
+    n = 1 << 16 if smoke else 1 << 20
+    tag = "64k" if smoke else "1M"
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    out[f"quant4_pack_ref_{tag}"] = _time(
         jax.jit(lambda v: ref.quant4_pack_ref(v)[0]), x)
-    out["quant4_pack_pallas_1M"] = _time(
-        lambda v: quant4_pack_pallas(v)[0], x, iters=2)
 
-    a = jax.random.normal(jax.random.PRNGKey(1), (1024, 1024))
-    b = jax.random.normal(jax.random.PRNGKey(2), (1024, 128))
-    out["powersgd_proj_ref_1024x1024xr128"] = _time(
+    d = 256 if smoke else 1024
+    a = jax.random.normal(jax.random.PRNGKey(1), (d, d))
+    b = jax.random.normal(jax.random.PRNGKey(2), (d, 128))
+    out[f"powersgd_proj_ref_{d}x{d}xr128"] = _time(
         jax.jit(ref.matmul_ref), a, b)
-    out["powersgd_proj_pallas"] = _time(matmul_pallas, a, b, iters=2)
 
-    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1024, 4, 64))
-    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1024, 1, 64))
-    out["flash_attn_ref_1k"] = _time(
+    s = 256 if smoke else 1024
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, s, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, s, 1, 64))
+    out[f"flash_attn_ref_{s}"] = _time(
         jax.jit(lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_)),
         q, k, k)
+
+    if not smoke:
+        from repro.kernels.lowrank_mm import matmul_pallas
+        from repro.kernels.quant4 import quant4_pack_pallas
+        out["quant4_pack_pallas_1M"] = _time(
+            lambda v: quant4_pack_pallas(v)[0], x, iters=2)
+        out["powersgd_proj_pallas"] = _time(matmul_pallas, a, b, iters=2)
     return out
 
 

@@ -1,6 +1,6 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
-  python -m benchmarks.run [--fast] [--skip-convergence]
+  python -m benchmarks.run [--fast] [--skip-convergence] [--smoke]
 
 Prints ``name,value,unit`` CSV lines per benchmark plus JSON blobs to
 benchmarks/out/. Mapping to the paper:
@@ -12,12 +12,20 @@ benchmarks/out/. Mapping to the paper:
                         dryrun_results.json from launch/dryrun.py --all)
   sim_scenarios      -> beyond-paper: Fig. 4 methods + fault/churn sweeps
                         replayed on the virtual cluster (repro.sim)
+
+``--smoke`` runs every cheap (analytic / tiny-jit) entrypoint and none of
+the training-based ones — CI's bit-rot check.  Any benchmark exception is
+reported, counted, and turns the exit status non-zero; one broken table no
+longer hides behind the ones that printed before it.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
+import traceback
+from typing import Callable, List
 
 
 def main() -> None:
@@ -25,84 +33,117 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--skip-convergence", action="store_true",
                     help="skip the (slow) training-based benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast bit-rot check: every analytic entrypoint, "
+                         "tiny kernel timings, no training (implies "
+                         "--skip-convergence)")
     ap.add_argument("--out-dir", default="benchmarks/out")
     args = ap.parse_args()
+    if args.smoke:
+        args.skip_convergence = True
     os.makedirs(args.out_dir, exist_ok=True)
 
-    from benchmarks import ablation, kernels_bench, throughput
-
     blobs = {}
+    failures: List[str] = []
+
+    def section(name: str, fn: Callable[[], None]) -> None:
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"benchmarks.failed.{name},1,bool")
 
     # Fig. 4 / 357x
-    for arch in ("opt-1.3b", "qwen1.5-107b"):
-        r = throughput.run(arch)
-        blobs[f"fig4_{arch}"] = r
-        for m, v in r["methods"].items():
-            print(f"fig4_throughput.{arch}.{m},{v['tokens_per_s']},"
-                  f"tokens_per_s")
-        print(f"fig4_speedup.{arch}.diloco_x,"
-              f"{r['speedup_vs_allreduce']['diloco_x']},x_vs_allreduce")
+    def fig4() -> None:
+        from benchmarks import throughput
+        for arch in ("opt-1.3b", "qwen1.5-107b"):
+            r = throughput.run(arch)
+            blobs[f"fig4_{arch}"] = r
+            for m, v in r["methods"].items():
+                print(f"fig4_throughput.{arch}.{m},{v['tokens_per_s']},"
+                      f"tokens_per_s")
+            print(f"fig4_speedup.{arch}.diloco_x,"
+                  f"{r['speedup_vs_allreduce']['diloco_x']},x_vs_allreduce")
+    section("fig4_throughput", fig4)
 
     # kernels
-    kb = kernels_bench.run()
-    blobs["kernels"] = kb
-    for k, v in kb.items():
-        print(f"kernels.{k},{v:.1f},us_per_call")
+    def kernels() -> None:
+        from benchmarks import kernels_bench
+        kb = kernels_bench.run(smoke=args.smoke)
+        blobs["kernels"] = kb
+        for k, v in kb.items():
+            print(f"kernels.{k},{v:.1f},us_per_call")
+    section("kernels", kernels)
 
     # Table 1 (throughput column always; loss column unless skipped)
-    if args.skip_convergence:
-        tp = ablation.throughput_column()
-        blobs["table1_throughput"] = tp
-        for k, v in tp.items():
-            print(f"table1_ablation.{k},{v:.1f},tokens_per_s")
-    else:
-        ab = ablation.run(fast=args.fast)
-        blobs["table1"] = ab
-        for k, v in ab["rows"].items():
-            print(f"table1_ablation.{k}.loss,{v['loss']},nll")
-            print(f"table1_ablation.{k}.throughput,{v['tokens_per_s']},"
-                  f"tokens_per_s")
-        print(f"table1_ablation.ordering_ok,"
-              f"{int(ab['throughput_ordering_ok'])},bool")
+    def table1() -> None:
+        from benchmarks import ablation
+        if args.skip_convergence:
+            tp = ablation.throughput_column()
+            blobs["table1_throughput"] = tp
+            for k, v in tp.items():
+                print(f"table1_ablation.{k},{v:.1f},tokens_per_s")
+        else:
+            ab = ablation.run(fast=args.fast)
+            blobs["table1"] = ab
+            for k, v in ab["rows"].items():
+                print(f"table1_ablation.{k}.loss,{v['loss']},nll")
+                print(f"table1_ablation.{k}.throughput,{v['tokens_per_s']},"
+                      f"tokens_per_s")
+            print(f"table1_ablation.ordering_ok,"
+                  f"{int(ab['throughput_ordering_ok'])},bool")
+    section("table1_ablation", table1)
 
     # Fig. 3 convergence
-    if not args.skip_convergence:
+    def fig3() -> None:
         from benchmarks import convergence
         cv = convergence.run(fast=args.fast)
         blobs["fig3"] = cv
         for m in ("allreduce", "diloco_x", "opendiloco", "cocktail"):
             print(f"fig3_convergence.{m}.final_loss,{cv[m]['final']:.3f},nll")
         print(f"fig3_convergence.ordering_ok,{int(cv['ordering_ok'])},bool")
+    if not args.skip_convergence:
+        section("fig3_convergence", fig3)
 
     # beyond-paper: decentralized scaling envelope
-    from benchmarks import scaling
-    sc = scaling.run()
-    blobs["scaling"] = sc
-    for k, v in sc["max_fully_hidden_clusters"].items():
-        print(f"scaling.max_hidden_clusters.{k},{v},clusters")
+    def scaling_env() -> None:
+        from benchmarks import scaling
+        sc = scaling.run()
+        blobs["scaling"] = sc
+        for k, v in sc["max_fully_hidden_clusters"].items():
+            print(f"scaling.max_hidden_clusters.{k},{v},clusters")
+    section("scaling", scaling_env)
 
     # beyond-paper: virtual-cluster fault/churn scenario sweep (sim/)
-    from benchmarks import sim_scenarios
-    ss = sim_scenarios.run(fast=args.fast or args.skip_convergence)
-    blobs["sim_scenarios"] = ss
-    for arch, m in ss["methods"].items():
-        print(f"sim_methods.{arch}.diloco_x,"
-              f"{m['speedup_vs_allreduce']['diloco_x']},x_vs_allreduce")
-    for tag, sweep in ss["fault_sweep"].items():
-        for case, row in sweep.items():
-            print(f"sim_faults.{tag}.{case},{row['retention']},retention")
+    def sim_sweep() -> None:
+        from benchmarks import sim_scenarios
+        ss = sim_scenarios.run(fast=args.fast or args.skip_convergence)
+        blobs["sim_scenarios"] = ss
+        for arch, m in ss["methods"].items():
+            print(f"sim_methods.{arch}.diloco_x,"
+                  f"{m['speedup_vs_allreduce']['diloco_x']},x_vs_allreduce")
+        for tag, sweep in ss["fault_sweep"].items():
+            for case, row in sweep.items():
+                print(f"sim_faults.{tag}.{case},{row['retention']},retention")
+    section("sim_scenarios", sim_sweep)
 
     # roofline (if the dry-run matrix has been produced)
-    if os.path.exists("dryrun_results.json"):
+    def roofline_rows() -> None:
         from benchmarks import roofline
         with open("dryrun_results.json") as f:
             rows = roofline.build_rows(json.load(f))
         blobs["roofline"] = rows
         ok = sum(1 for r in rows if r.get("status") == "ok")
         print(f"roofline.combos_ok,{ok},count")
+    if os.path.exists("dryrun_results.json"):
+        section("roofline", roofline_rows)
 
     with open(os.path.join(args.out_dir, "results.json"), "w") as f:
         json.dump(blobs, f, indent=1, default=str)
+    if failures:
+        print(f"benchmarks.done,0,bool  # FAILED: {', '.join(failures)}")
+        sys.exit(1)
     print("benchmarks.done,1,bool")
 
 

@@ -7,10 +7,14 @@ the Fig. 4 / §4.2.2 method comparison (357x at 107B, 32x at 1.3B) through
 the round-by-round simulator instead of closed-form arithmetic —
 the two must agree on clean links (tests/test_sim.py asserts it).
 
-  python -m benchmarks.sim_scenarios
+  python -m benchmarks.sim_scenarios                 # modeled sweeps
+  python -m benchmarks.sim_scenarios --backend proc  # real processes +
+                                     # rate-limited sockets, checked
+                                     # against the model (repro.sim.proc)
 """
 from __future__ import annotations
 
+import argparse
 import json
 from dataclasses import replace
 from typing import Dict
@@ -91,7 +95,52 @@ def run(fast: bool = True) -> Dict:
     return out
 
 
+def run_proc(rounds: int = 5, n_clusters: int = 2) -> Dict:
+    """The churn sweep's straggler+leave/join case on the *multi-process*
+    backend (``repro.sim.proc``): real worker processes, token-bucket
+    sockets, kill/respawn — asserted against the in-process model
+    (bit-for-bit outer state, timing within tolerance)."""
+    from repro.sim import QuadraticSpec
+    from repro.sim.proc import check_equivalence
+
+    sc = Scenario(
+        n_clusters=n_clusters, rounds=rounds, h_steps=4, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=50_000, jitter=0.1),
+        faults=FaultSchedule((Straggler(1, 1, min(3, rounds - 1), 2.5),
+                              Leave(1, rounds // 2),
+                              Join(1, rounds - 1))),
+        compressor="diloco_x",
+        compressor_kw={"rank": 8, "min_dim_for_lowrank": 8}, rank=8,
+        n_params=2e5, seed=0)
+    spec = QuadraticSpec(n_clusters=n_clusters, d=8, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    tls = rep.pop("timelines")
+    return {
+        "ok": rep["ok"],
+        "bitwise_equal": rep["hash_match"],
+        "timing_ok": rep["timing_ok"],
+        "max_abs_time_err_s": rep["max_abs_time_err_s"],
+        "max_rel_time_err": rep["max_rel_time_err"],
+        "tokens_per_s": {"proc_measured": round(tls["proc"].tokens_per_s, 1),
+                         "modeled": round(tls["model"].tokens_per_s, 1)},
+        "structural_fingerprint": rep["proc_fingerprint"],
+    }
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["model", "proc"], default="model")
+    args = ap.parse_args()
+
+    if args.backend == "proc":
+        r = run_proc()
+        print(f"sim_proc.bitwise_equal,{int(r['bitwise_equal'])},bool")
+        print(f"sim_proc.max_rel_time_err,{r['max_rel_time_err']},frac")
+        print(json.dumps(r, indent=1))
+        if not r["ok"]:
+            raise SystemExit(1)
+        return
+
     r = run(fast=True)
     for arch, m in r["methods"].items():
         for k, v in m["speedup_vs_allreduce"].items():

@@ -8,5 +8,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# absolute path: worker subprocesses (tests/test_sim_proc.py spawns real
+# processes via repro.sim.proc) must resolve the package from any cwd;
+# a pre-set PYTHONPATH is honored after ours
+export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 exec python -m pytest -x -q "$@"

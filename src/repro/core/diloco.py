@@ -72,6 +72,31 @@ class RoundConfig:
     error_vs_own: bool = False    # classic EF instead of Alg. 2's variant
 
 
+def per_cluster_compress(compressor: Compressor, stacked_tree, comp_state,
+                         rank_scalar=None):
+    """Compress each cluster's (cluster-stacked) tree with an unrolled
+    per-cluster loop rather than ``jax.vmap``.
+
+    A real cluster compresses its own delta with plain matmuls; vmap turns
+    them into batched matmuls whose accumulation order differs by ~1 ulp in
+    the PowerSGD warm-start Q.  Unrolling keeps the simulated stacked run
+    bit-identical to N independent workers (the sim/proc equivalence gate),
+    at the cost of C copies of the compressor in the HLO — C is the cluster
+    count (2-8 everywhere in this repo), not a batch dimension.
+    """
+    n = jax.tree.leaves(stacked_tree)[0].shape[0]
+    take = lambda tree, c: jax.tree.map(
+        lambda x: x[c] if hasattr(x, "shape") and x.ndim >= 1 else x, tree)
+    hats, states = [], []
+    for c in range(n):
+        hat, st = compressor.roundtrip(take(stacked_tree, c),
+                                       take(comp_state, c), rank_scalar)
+        hats.append(hat)
+        states.append(st)
+    stack = lambda trees: jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    return stack(hats), stack(states)
+
+
 def diloco_round(state: DiLoCoXState,
                  inner_fn: Callable,          # (params, inner_opt, round_idx)
                                               #   -> (params_H, inner_opt')
@@ -88,9 +113,9 @@ def diloco_round(state: DiLoCoXState,
         # ---- communication "thread": average LAST round's pseudo-grads.
         # Dataflow-independent of inner_fn below => overlappable by XLA.
         if cfg.compress:
-            comp_fn = lambda d, s: compressor.roundtrip(d, s, rank_scalar)
-            delta_hat, comp_state = jax.vmap(comp_fn)(state.delta_pending,
-                                                      state.comp_state)
+            delta_hat, comp_state = per_cluster_compress(
+                compressor, state.delta_pending, state.comp_state,
+                rank_scalar)
         else:
             delta_hat, comp_state = state.delta_pending, state.comp_state
         Delta = cluster_mean(delta_hat)
@@ -132,9 +157,8 @@ def diloco_round(state: DiLoCoXState,
                              - p.astype(jnp.float32)) + e,
             anchor, params_inner, state.error)
         if cfg.compress:
-            comp_fn = lambda d, s: compressor.roundtrip(d, s, rank_scalar)
-            delta_hat, comp_state = jax.vmap(comp_fn)(delta_raw,
-                                                      state.comp_state)
+            delta_hat, comp_state = per_cluster_compress(
+                compressor, delta_raw, state.comp_state, rank_scalar)
         else:
             delta_hat, comp_state = delta_raw, state.comp_state
         Delta = cluster_mean(delta_hat)

@@ -16,6 +16,16 @@ links, with injectable faults, and prints the event timeline:
   python -m repro.launch.sim --clusters 2 --h-steps 125 --rounds 4 \
       --params 107e9 --t-step 10.3 --rank 2048 --compare
 
+  # REAL processes + rate-limited sockets (repro.sim.proc): one OS process
+  # per cluster, straggler sleeps / token-bucket throttling / kill+respawn
+  # enforced by the transport; defaults scale down to wall-clock seconds
+  # and, with no fault flags, inject a demo straggler + leave/join:
+  python -m repro.launch.sim --backend proc --clusters 2
+
+  # ... and assert it against the in-process backend: per-round outer
+  # params bit-for-bit, measured vs modeled timeline within tolerance:
+  python -m repro.launch.sim --backend proc --clusters 2 --check-equivalence
+
 Fault grammar (repeatable flags):
   --straggler C:START:END:SLOWDOWN      step time x SLOWDOWN on cluster C
   --degrade START:END:FACTOR[:C]        bandwidth x FACTOR (all links or C)
@@ -25,6 +35,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
+
+# per-backend defaults: the model backend replays the paper's operating
+# point (simulated seconds are free); the proc backend runs real wall-clock
+# processes, so it defaults to a seconds-scale scenario that still exposes
+# every behavior (straggler barrier, throttled link, churn).
+_DEFAULTS = {
+    "model": dict(rounds=20, h_steps=30, t_step=1.0, gbps=1.0,
+                  params=1e9, rank=64),
+    "proc": dict(rounds=6, h_steps=4, t_step=0.05, gbps=4e-4,
+                 params=2e5, rank=8),
+}
 
 
 def parse_faults(args, ap):
@@ -57,29 +79,81 @@ def parse_faults(args, ap):
     return FaultSchedule(tuple(ev))
 
 
+def run_proc_cli(args, sc) -> None:
+    """Drive the multi-process backend (real sockets, token-bucket links)."""
+    from repro.sim import QuadraticSpec
+    from repro.sim.proc import check_equivalence, run_proc
+    from repro.sim.proc.equivalence import format_report
+
+    spec = None
+    if not args.timing_only:
+        spec = QuadraticSpec(n_clusters=args.clusters, d=args.problem_d,
+                             n_mats=2, h_steps=args.h_steps, seed=args.seed)
+
+    if args.check_equivalence:
+        report = check_equivalence(sc, spec)
+        print(format_report(report))
+        timelines = report.pop("timelines")
+        print("proc structural fingerprint: "
+              f"{report['proc_fingerprint']}")
+        if args.json:
+            blob = {"report": report,
+                    "proc": timelines["proc"].to_dict(),
+                    "model": timelines["model"].to_dict()}
+            with open(args.json, "w") as f:
+                json.dump(blob, f, indent=1)
+            print(f"wrote {args.json}")
+        if not report["ok"]:
+            sys.exit(1)
+        return
+
+    tl = run_proc(sc, spec)
+    print(tl.table())
+    print(f"proc structural fingerprint: {tl.structural_fingerprint()}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(tl.to_dict(), f, indent=1)
+        print(f"wrote {args.json}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--backend", choices=["model", "proc"], default="model",
+                    help="model: in-process clock-model replay; proc: real "
+                         "OS processes + rate-limited localhost sockets")
     ap.add_argument("--clusters", type=int, default=4)
-    ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--h-steps", type=int, default=30)
-    ap.add_argument("--t-step", type=float, default=1.0,
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--h-steps", type=int, default=None)
+    ap.add_argument("--t-step", type=float, default=None,
                     help="local step seconds (paper §2.4.1: 1.0)")
-    ap.add_argument("--gbps", type=float, default=1.0,
+    ap.add_argument("--gbps", type=float, default=None,
                     help="link bandwidth in Gbps")
     ap.add_argument("--latency-ms", type=float, default=0.0,
                     help="per-hop latency")
     ap.add_argument("--jitter", type=float, default=0.0,
                     help="fractional sigma of step/bandwidth noise")
-    ap.add_argument("--params", type=float, default=1e9,
+    ap.add_argument("--params", type=float, default=None,
                     help="model size the wire accounting models (e.g. 107e9)")
     ap.add_argument("--compressor", default="diloco_x",
                     choices=["identity", "fp16", "quant", "diloco_x",
                              "topk", "random_sparse", "cocktail"])
-    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--rank", type=int, default=None)
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the §2.3 one-step-delay overlap")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timing-only", action="store_true",
+                    help="proc backend: workers skip jax (membership/"
+                         "transport/timing only)")
+    ap.add_argument("--no-faults", action="store_true",
+                    help="proc backend: suppress the default demo "
+                         "straggler + leave/join when no fault flag given")
+    ap.add_argument("--check-equivalence", action="store_true",
+                    help="proc backend: also run the in-process simulator "
+                         "and assert bit-for-bit outer state + timing "
+                         "tolerance (exit 1 on mismatch)")
+    ap.add_argument("--problem-d", type=int, default=8,
+                    help="proc backend: quadratic problem matrix dim")
     ap.add_argument("--straggler", action="append", metavar="C:START:END:X")
     ap.add_argument("--degrade", action="append", metavar="START:END:F[:C]")
     ap.add_argument("--leave", action="append", metavar="C:ROUND")
@@ -92,20 +166,45 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="also dump the timeline JSON to this path")
     args = ap.parse_args()
+    for k, v in _DEFAULTS[args.backend].items():
+        if getattr(args, k) is None:
+            setattr(args, k, v)
 
-    from repro.sim import (LinkProfile, Scenario, compare_methods,
+    from repro.sim import (FaultSchedule, Join, Leave, LinkProfile,
+                           Scenario, Straggler, compare_methods,
                            make_quadratic_problem, simulate)
 
+    faults = parse_faults(args, ap)
+    if (args.backend == "proc" and not faults.events and not args.no_faults
+            and args.clusters >= 2 and args.rounds >= 4):
+        # the proc backend exists to exercise faults through the transport;
+        # default to a demo straggler + leave/join unless told otherwise
+        faults = FaultSchedule((
+            Straggler(1, 1, min(3, args.rounds - 1), 2.5),
+            Leave(1, args.rounds // 2), Join(1, args.rounds - 1)))
+        print(f"(no fault flags: demo faults "
+              f"{[e.describe() for e in faults.events]}; --no-faults to "
+              f"disable)")
+
     kw = {"rank": args.rank} if args.compressor in ("diloco_x",) else {}
+    if args.backend == "proc" and args.compressor == "diloco_x":
+        # the numeric problem tree is problem_d x problem_d; let the
+        # low-rank stage engage on it
+        kw["min_dim_for_lowrank"] = min(8, args.problem_d)
     sc = Scenario(
         n_clusters=args.clusters, rounds=args.rounds, h_steps=args.h_steps,
         t_step_s=args.t_step,
         link=LinkProfile(bytes_per_s=args.gbps * 0.125e9,
                          latency_s=args.latency_ms * 1e-3,
                          jitter=args.jitter),
-        faults=parse_faults(args, ap), compressor=args.compressor,
+        faults=faults, compressor=args.compressor,
         compressor_kw=kw, delay=not args.no_overlap,
+        rank=(args.rank if args.compressor == "diloco_x" else None),
         n_params=args.params, seed=args.seed)
+
+    if args.backend == "proc":
+        run_proc_cli(args, sc)
+        return
 
     if args.compare:
         cmp = compare_methods(sc, rank=args.rank)

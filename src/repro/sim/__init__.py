@@ -7,14 +7,15 @@ injectable faults: stragglers, link degradation, membership churn
 """
 from repro.sim.faults import (FaultSchedule, Join, Leave, LinkDegradation,
                               Straggler)
+from repro.sim.quadratic import QuadraticSpec
 from repro.sim.scenario import LinkProfile, Scenario, synthetic_shapes
-from repro.sim.simulator import (compare_methods, make_quadratic_problem,
-                                 simulate)
-from repro.sim.timeline import RoundEvent, Timeline
+from repro.sim.simulator import (NumericProblem, compare_methods,
+                                 make_quadratic_problem, simulate)
+from repro.sim.timeline import RoundEvent, Timeline, tree_hash
 
 __all__ = [
     "FaultSchedule", "Join", "Leave", "LinkDegradation", "Straggler",
-    "LinkProfile", "Scenario", "synthetic_shapes",
-    "compare_methods", "make_quadratic_problem", "simulate",
-    "RoundEvent", "Timeline",
+    "LinkProfile", "Scenario", "synthetic_shapes", "QuadraticSpec",
+    "NumericProblem", "compare_methods", "make_quadratic_problem",
+    "simulate", "RoundEvent", "Timeline", "tree_hash",
 ]

@@ -1,0 +1,22 @@
+"""Multi-process simulator backend (``backend="proc"``).
+
+Each virtual cluster is a real OS process; outer-step payloads move over
+localhost TCP sockets wrapped in a token-bucket rate limiter, so
+``LinkProfile`` bandwidth/latency and ``FaultSchedule`` events (straggler
+sleep, link throttle, leave/join by killing and respawning workers) are
+enforced by the *transport*, not a clock model.  The numeric round math is
+the same ``core/diloco.py`` / ``core/compression.py`` code the in-process
+simulator runs — per-round outer state is bit-identical between the two
+backends (see ``equivalence.py``).
+"""
+from repro.sim.proc.coordinator import run_proc
+from repro.sim.proc.equivalence import check_equivalence
+from repro.sim.proc.transport import (RateLimitedLink, TokenBucket,
+                                      pack_frame, recv_frame, send_frame,
+                                      unpack_frames)
+
+__all__ = [
+    "run_proc", "check_equivalence",
+    "RateLimitedLink", "TokenBucket",
+    "pack_frame", "unpack_frames", "send_frame", "recv_frame",
+]

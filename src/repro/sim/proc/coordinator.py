@@ -1,0 +1,404 @@
+"""Coordinator for the multi-process backend: spawns one OS process per
+virtual cluster, drives the outer rounds, and implements the gather-based
+outer sync as ``core.membership.masked_cluster_mean`` over the *live*
+connections.
+
+Per round it:
+ 1. applies the ``FaultSchedule`` membership events — ``Leave`` kills the
+    worker process (SIGKILL, abrupt), ``Join`` respawns a fresh process
+    bootstrapped from a surviving replica's (params, outer momentum);
+ 2. derives each worker's modeled targets (straggler-inflated compute
+    seconds, token-bucket rate from the degraded/jittered link, ring
+    all-gather charge ``(n_alive−1)·wire_bytes``) from the *same*
+    deterministic arithmetic the in-process simulator uses;
+ 3. gathers the compressed pseudo-gradient payloads (each throttled by the
+    sender's token bucket), masks out dead/crashed members, broadcasts the
+    mean, and collects round-done reports — asserting that every replica's
+    post-round param hash agrees (distributed consistency check);
+ 4. records a measured ``RoundEvent``: wall-clock compute/comm/round
+    seconds next to the deterministic structural fields (participants, wire
+    accounting, hashes) that ``Timeline.structural_fingerprint()`` covers.
+
+Unexpected worker death (socket EOF mid-round) is tolerated: the member is
+masked out of the mean exactly like a scheduled ``Leave`` and the round
+completes with the survivors — tagged ``crash(cN)`` on the timeline.
+
+Topology note: the hub gathers and re-broadcasts, but each member's bucket
+is charged the full ring-all-gather traffic ``(n_alive−1)·payload`` on its
+own (possibly degraded) link, so measured comm time reproduces the modeled
+ring collective over the bottleneck link; the hub's re-broadcast of the
+mean is bookkeeping, not priced wire.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import comm
+from repro.sim.scenario import Scenario
+from repro.sim.timeline import RoundEvent, Timeline, tree_hash
+
+# repro.core.compression (-> jax) is imported inside run_proc: the worker
+# module executes this package's __init__ on spawn, and timing-only workers
+# must not pay a jax import for it.
+
+
+def _src_root() -> str:
+    import repro
+    pkg_dir = (os.path.dirname(repro.__file__) if repro.__file__
+               else list(repro.__path__)[0])      # namespace package
+    return os.path.dirname(os.path.abspath(pkg_dir))
+
+
+class WorkerDied(Exception):
+    pass
+
+
+class _Handle:
+    """One worker: process, connection, and a reader thread that turns the
+    socket into a message queue (so the coordinator never blocks on one
+    member while another is ready)."""
+
+    def __init__(self, cluster: int, proc: subprocess.Popen):
+        self.cluster = cluster
+        self.proc = proc
+        self.conn: Optional[socket.socket] = None
+        self.q: "queue.Queue[Any]" = queue.Queue()
+        self.dead = False
+
+    def attach(self, conn: socket.socket) -> None:
+        self.conn = conn
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        t = threading.Thread(target=self._reader, daemon=True)
+        t.start()
+
+    def _reader(self) -> None:
+        from repro.sim.proc.transport import recv_frame
+        try:
+            while True:
+                self.q.put(recv_frame(self.conn))
+        except (ConnectionError, OSError, ValueError, EOFError):
+            self.q.put({"type": "_eof"})
+
+    def send(self, obj: Any) -> bool:
+        from repro.sim.proc.transport import send_frame
+        if self.dead or self.conn is None:
+            return False
+        try:
+            send_frame(self.conn, obj)
+            return True
+        except OSError:
+            self.dead = True
+            return False
+
+    def get(self, want: str, timeout: float) -> Optional[Dict[str, Any]]:
+        """Next message of type ``want``; None if the worker died/timed out
+        first (marks the handle dead)."""
+        if self.dead:
+            return None
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                msg = self.q.get(timeout=max(0.0, deadline - time.monotonic()))
+            except queue.Empty:
+                self.dead = True
+                return None
+            if msg.get("type") == "_eof":
+                self.dead = True
+                return None
+            if msg.get("type") == want:
+                return msg
+            # unexpected type: drop (stale frame from a killed round)
+
+    def kill(self) -> None:
+        self.dead = True
+        try:
+            self.proc.kill()
+        except OSError:
+            pass
+        if self.conn is not None:
+            try:
+                self.conn.close()
+            except OSError:
+                pass
+
+
+def _spawn(cluster: int, port: int, sc: Scenario, problem,
+           crash_at: Optional[Dict[int, int]]) -> subprocess.Popen:
+    cfg = {
+        "host": "127.0.0.1",
+        "port": port,
+        "cluster": cluster,
+        "problem": problem.to_dict() if problem is not None else None,
+        "compressor": {"name": sc.compressor, "kw": dict(sc.compressor_kw)},
+        "rank": sc.rank,
+        "crash_at_round": (crash_at or {}).get(cluster),
+    }
+    env = os.environ.copy()
+    src = _src_root()
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.sim.proc.worker", json.dumps(cfg)],
+        env=env)
+
+
+def _stack_rows(rows: List[Any]):
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                        *rows)
+
+
+def run_proc(sc: Scenario, problem=None, *,
+             crash_at: Optional[Dict[int, int]] = None,
+             spawn_timeout_s: float = 300.0,
+             round_timeout_s: float = 300.0) -> Timeline:
+    """Run the scenario on real processes + sockets; returns a Timeline
+    whose seconds are *measured* wall clock and whose structural fields
+    (participants, wire accounting, per-round param hashes) are
+    deterministic and bit-comparable with ``simulate()``.
+
+    ``problem`` is a ``sim.quadratic.QuadraticSpec`` (or None for
+    timing-only workers, which skip jax entirely).  ``crash_at`` maps
+    cluster -> round for injected hard crashes (``os._exit`` before the
+    delta send — the membership-recovery test hook).
+    """
+    from repro.core.compression import make_compressor
+    from repro.sim.simulator import _jitter_factors
+
+    if not sc.delay:
+        raise NotImplementedError(
+            "backend='proc' realizes the §2.3 one-step-delay overlapped "
+            "round (delay=True); the synchronous round is in-process only")
+    if sc.allreduce_per_step:
+        raise NotImplementedError(
+            "backend='proc' implements the gather-based outer sync, not "
+            "per-step allreduce baselines")
+    numeric = problem is not None
+    if numeric and problem.n_clusters != sc.n_clusters:
+        raise ValueError("problem.n_clusters != scenario.n_clusters")
+
+    C = sc.n_clusters
+    compressor = make_compressor(sc.compressor, **sc.compressor_kw)
+    wire = int(compressor.wire_bytes(sc.shapes(), rank=sc.rank))
+    alive = (np.ones(C, bool) if sc.initial_alive is None
+             else np.asarray(sc.initial_alive, bool).copy())
+
+    if numeric:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.membership import masked_cluster_mean
+        mean_j = jax.jit(masked_cluster_mean)
+        zeros_row = jax.tree.map(
+            lambda x: np.zeros(np.shape(x), np.float32),
+            problem.init_params())
+        # compile the gather-mean before round 0 so it isn't measured
+        jax.block_until_ready(mean_j(_stack_rows([zeros_row] * C),
+                                     jnp.ones((C,), jnp.float32)))
+
+    server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    server.bind(("127.0.0.1", 0))
+    server.listen(C + 2)
+    port = server.getsockname()[1]
+
+    handles: Dict[int, _Handle] = {}
+
+    def accept_one(expect: int, timeout: float) -> None:
+        """Accept until the worker for cluster ``expect`` says hello."""
+        from repro.sim.proc.transport import recv_frame
+        deadline = time.monotonic() + timeout
+        while handles[expect].conn is None:
+            server.settimeout(max(0.1, deadline - time.monotonic()))
+            conn, _ = server.accept()
+            hello = recv_frame(conn, timeout=30.0)
+            handles[int(hello["cluster"])].attach(conn)
+
+    def bootstrap(c: int, state: Optional[Dict[str, Any]]) -> None:
+        handles[c].send({"type": "bootstrap",
+                         "params": None if state is None
+                         else state["params"],
+                         "outer_opt": None if state is None
+                         else state["outer_opt"]})
+
+    def dump_state() -> Dict[str, Any]:
+        """Fetch the replicated outer state from the lowest live worker."""
+        for c in sorted(handles):
+            h = handles[c]
+            if alive[c] and not h.dead:
+                if h.send({"type": "dump"}):
+                    st = h.get("state", round_timeout_s)
+                    if st is not None:
+                        return st
+        raise WorkerDied("no live worker to bootstrap a rejoin from")
+
+    events: List[RoundEvent] = []
+    final_params = None
+    try:
+        for c in np.flatnonzero(alive):
+            handles[int(c)] = _Handle(int(c), _spawn(int(c), port, sc,
+                                                     problem, crash_at))
+        for c in sorted(handles):
+            if handles[c].conn is None:
+                accept_one(c, spawn_timeout_s)
+        for c in sorted(handles):
+            bootstrap(c, None)
+
+        for r in range(sc.rounds):
+            alive, rejoined = sc.faults.membership(r, alive)
+            crash_tags: List[str] = []
+
+            # --- membership enforcement: kill leavers, respawn joiners ----
+            for c in range(C):
+                if not alive[c] and c in handles and not handles[c].dead:
+                    handles[c].kill()
+            for c in np.flatnonzero(rejoined):
+                c = int(c)
+                state = dump_state() if numeric else None
+                handles[c] = _Handle(c, _spawn(c, port, sc, problem,
+                                               crash_at))
+                accept_one(c, spawn_timeout_s)
+                bootstrap(c, state)
+
+            alive_ids = [int(i) for i in np.flatnonzero(alive)]
+            n_alive = len(alive_ids)
+            if n_alive == 0:
+                if numeric:
+                    raise WorkerDied(
+                        "all clusters dead in numeric mode: the proc "
+                        "backend has no replica left to carry the outer "
+                        "state (the in-process simulator keeps applying "
+                        "momentum-only rounds; run that instead)")
+                events.append(RoundEvent(
+                    round=r, alive=(), rejoined=(), h_steps=sc.h_steps,
+                    rank=sc.rank, t_compute_s=0.0, t_comm_s=0.0,
+                    exposed_comm_s=0.0, t_round_s=0.0, wire_bytes=wire,
+                    slowest_cluster=-1, bottleneck_cluster=-1, tokens=0.0,
+                    faults=sc.faults.active(r)))
+                continue
+
+            # --- modeled targets: same arithmetic as simulate() -----------
+            h_t = sc.h_steps
+            step_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=1)
+            t_steps = np.array([sc.t_step_s * sc.faults.step_multiplier(c, r)
+                                * step_j[c] for c in range(C)])
+            slowest = int(max(alive_ids, key=lambda c: t_steps[c]))
+            bw_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=2)
+            bws = np.array([sc.link.bytes_per_s
+                            * sc.faults.bandwidth_factor(c, r) * bw_j[c]
+                            for c in range(C)])
+            if n_alive >= 2:
+                bottleneck = int(min(alive_ids, key=lambda c: bws[c]))
+                charge = (n_alive - 1) * wire
+                latency = (n_alive - 1) * sc.link.latency_s
+            else:
+                bottleneck, charge, latency = -1, 0, 0.0
+
+            # --- drive the round ------------------------------------------
+            t0 = time.monotonic()
+            for c in alive_ids:
+                ok = handles[c].send({
+                    "type": "round", "round": r,
+                    "compute_target_s": float(h_t * t_steps[c]),
+                    "charge_bytes": float(charge),
+                    "rate_bytes_per_s": (float(bws[c]) if charge else None),
+                    "latency_s": float(latency),
+                })
+                if not ok:
+                    alive[c] = False
+                    crash_tags.append(f"crash(c{c})")
+
+            hats: Dict[int, Any] = {}
+            for c in list(alive_ids):
+                if not alive[c]:
+                    continue
+                msg = handles[c].get("delta", round_timeout_s)
+                if msg is None:
+                    alive[c] = False
+                    crash_tags.append(f"crash(c{c})")
+                    handles[c].kill()
+                else:
+                    hats[c] = msg["hat"]
+            t_comm_meas = time.monotonic() - t0
+
+            contributors = [int(i) for i in np.flatnonzero(alive)]
+            delta_np = None
+            if numeric:
+                if not contributors:
+                    raise WorkerDied("every worker crashed mid-round")
+                stacked = _stack_rows([hats.get(c, zeros_row)
+                                       for c in range(C)])
+                Delta = mean_j(stacked, jnp.asarray(alive, jnp.float32))
+                delta_np = jax.tree.map(lambda x: np.asarray(x), Delta)
+            for c in contributors:
+                if not handles[c].send({"type": "avg", "delta": delta_np}):
+                    alive[c] = False
+                    crash_tags.append(f"crash(c{c})")
+
+            t_compute_meas = 0.0
+            losses, hashes = [], []
+            for c in list(contributors):
+                if not alive[c]:
+                    continue
+                msg = handles[c].get("done", round_timeout_s)
+                if msg is None:
+                    alive[c] = False
+                    crash_tags.append(f"crash(c{c})")
+                    handles[c].kill()
+                    continue
+                t_compute_meas = max(t_compute_meas,
+                                     float(msg["t_compute"]))
+                if msg.get("loss") is not None:
+                    losses.append(float(msg["loss"]))
+                if msg.get("param_hash") is not None:
+                    hashes.append(msg["param_hash"])
+            t_round_meas = time.monotonic() - t0
+
+            if numeric and len(set(hashes)) > 1:
+                raise WorkerDied(
+                    f"replica divergence at round {r}: param hashes "
+                    f"{sorted(set(hashes))}")
+
+            tokens = sc.tokens_per_step * h_t * len(contributors) / max(C, 1)
+            events.append(RoundEvent(
+                round=r, alive=tuple(contributors),
+                rejoined=tuple(int(i) for i in np.flatnonzero(rejoined)),
+                h_steps=h_t, rank=sc.rank,
+                t_compute_s=t_compute_meas, t_comm_s=t_comm_meas,
+                exposed_comm_s=max(0.0, t_round_meas - t_compute_meas),
+                t_round_s=t_round_meas, wire_bytes=wire,
+                slowest_cluster=slowest, bottleneck_cluster=bottleneck,
+                tokens=tokens,
+                faults=sc.faults.active(r) + tuple(crash_tags),
+                loss=(float(np.mean(losses)) if losses else None),
+                param_hash=(hashes[0] if hashes else None)))
+
+        if numeric and alive.any():
+            final_params = dump_state()["params"]
+    finally:
+        for h in handles.values():
+            h.send({"type": "stop"})
+        time.sleep(0.05)
+        for h in handles.values():
+            h.kill()
+        server.close()
+        for h in handles.values():
+            try:
+                h.proc.wait(timeout=10.0)
+            except Exception:
+                pass
+
+    tl = Timeline(scenario={**sc.meta(), "backend": "proc"}, events=events)
+    if final_params is not None:
+        tl.final_params = final_params
+    return tl

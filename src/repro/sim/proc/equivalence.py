@@ -1,0 +1,132 @@
+"""Equivalence harness: proc backend vs in-process simulator.
+
+Two guarantees, checked per round on the same ``Scenario`` + seeds:
+
+ 1. **Numerics, bit-for-bit**: the proc backend's per-round outer state —
+    hence every averaged pseudo-gradient Δ^t that produced it — must hash
+    identically to the in-process simulator's (``RoundEvent.param_hash``,
+    sha256 over raw float bytes).  This holds because both backends execute
+    the same per-cluster compiled computations
+    (``core.diloco.per_cluster_compress``, the per-cluster inner slice,
+    ``membership.masked_cluster_mean``, the Nesterov outer update) — no
+    tolerance, equality of bytes.
+ 2. **Timing, within tolerance**: the proc backend's *measured* wall-clock
+    round times must agree with the in-process *modeled* ones.  Rounds with
+    rejoins are excluded (process spawn + XLA warmup is real time the clock
+    model deliberately does not price).
+
+``check_equivalence`` returns a JSON-able report; ``ok`` is the CI gate.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.sim.proc.coordinator import run_proc
+from repro.sim.scenario import Scenario
+
+
+def check_equivalence(sc: Scenario, problem=None, *,
+                      time_rtol: float = 0.5, time_atol: float = 0.3,
+                      crash_at: Optional[Dict[int, int]] = None
+                      ) -> Dict[str, Any]:
+    """Run both backends; compare structure bit-for-bit and timing within
+    ``atol + rtol * modeled`` per round.  ``problem`` is a
+    ``QuadraticSpec`` (None: timing-only).  ``crash_at`` injects crashes in
+    the proc run only — then numeric equality is *expected to fail* and
+    callers should not assert ``ok`` (used by the recovery tests)."""
+    from repro.sim.simulator import simulate
+
+    tl_proc = run_proc(sc, problem, crash_at=crash_at)
+    tl_model = simulate(sc, numeric=problem.problem() if problem else None)
+
+    numeric = problem is not None
+    report: Dict[str, Any] = {
+        "rounds": [], "ok": True,
+        "structural_match": True,
+        # None = not applicable (timing-only run has no numerics to hash);
+        # never report bitwise equality that was not actually checked
+        "hash_match": True if numeric else None,
+        "timing_ok": True,
+        "max_abs_time_err_s": 0.0, "max_rel_time_err": 0.0,
+        "proc_fingerprint": tl_proc.structural_fingerprint(),
+        "model_fingerprint": tl_model.structural_fingerprint(),
+    }
+    if len(tl_proc.events) != len(tl_model.events):
+        report["ok"] = report["structural_match"] = False
+        report["error"] = (f"round count {len(tl_proc.events)} != "
+                           f"{len(tl_model.events)}")
+        return report
+
+    for ep, em in zip(tl_proc.events, tl_model.events):
+        row: Dict[str, Any] = {"round": ep.round}
+        struct_ok = (ep.alive == em.alive and ep.rejoined == em.rejoined
+                     and ep.h_steps == em.h_steps and ep.rank == em.rank
+                     and ep.wire_bytes == em.wire_bytes
+                     and ep.slowest_cluster == em.slowest_cluster
+                     and ep.bottleneck_cluster == em.bottleneck_cluster)
+        row["structural"] = struct_ok
+        report["structural_match"] &= struct_ok
+
+        row["param_hash_proc"] = ep.param_hash
+        row["param_hash_model"] = em.param_hash
+        if numeric:
+            hash_ok = (ep.param_hash is not None
+                       and ep.param_hash == em.param_hash)
+            row["hash_match"] = hash_ok
+            report["hash_match"] &= hash_ok
+        else:
+            row["hash_match"] = None
+
+        row["t_round_measured_s"] = round(ep.t_round_s, 6)
+        row["t_round_modeled_s"] = round(em.t_round_s, 6)
+        if ep.rejoined:
+            row["timing_checked"] = False     # spawn/warmup not modeled
+        else:
+            row["timing_checked"] = True
+            err = abs(ep.t_round_s - em.t_round_s)
+            rel = err / em.t_round_s if em.t_round_s > 0 else 0.0
+            report["max_abs_time_err_s"] = max(
+                report["max_abs_time_err_s"], round(err, 6))
+            report["max_rel_time_err"] = max(
+                report["max_rel_time_err"], round(rel, 6))
+            if err > time_atol + time_rtol * em.t_round_s:
+                row["timing_ok"] = False
+                report["timing_ok"] = False
+        report["rounds"].append(row)
+
+    if numeric and not crash_at:
+        fp = getattr(tl_proc, "final_params", None)
+        fm = getattr(tl_model, "final_params", None)
+        same = (fp is not None and fm is not None and all(
+            np.array_equal(np.asarray(fp[k]), np.asarray(fm[k]))
+            for k in fp))
+        report["final_params_bitwise_equal"] = bool(same)
+        report["hash_match"] &= bool(same)
+
+    report["ok"] = (report["structural_match"] and report["timing_ok"]
+                    and report["hash_match"] is not False)
+    report["timelines"] = {"proc": tl_proc, "model": tl_model}
+    return report
+
+
+def format_report(report: Dict[str, Any]) -> str:
+    lines = []
+    for row in report["rounds"]:
+        tick = {True: "==", False: "!=", None: "--"}[row["hash_match"]]
+        t = ("  t_meas={:.3f}s t_model={:.3f}s{}".format(
+            row["t_round_measured_s"], row["t_round_modeled_s"],
+            "" if row.get("timing_checked") else " (rejoin: not checked)"))
+        h = (row["param_hash_proc"] or "-")[:12]
+        lines.append(f"round {row['round']:>3}: params[proc] {tick} "
+                     f"params[model] ({h}){t}")
+    bitwise = ("n/a (timing-only)" if report["hash_match"] is None
+               else report["hash_match"])
+    lines.append(
+        "equivalence: structural={structural_match} bitwise={bitwise} "
+        "timing={timing_ok} (max err {max_abs_time_err_s:.3f}s / "
+        "{max_rel_time_err:.1%})  => {verdict}".format(
+            bitwise=bitwise,
+            verdict="OK" if report["ok"] else "MISMATCH", **report))
+    return "\n".join(lines)

@@ -1,0 +1,190 @@
+"""Socket transport for the multi-process backend.
+
+Three layers, each separately testable:
+
+ - **frame codec**: length-prefixed frames (``>I`` byte count + pickled
+   body).  Pickle is acceptable here — both endpoints are processes *we*
+   spawned on 127.0.0.1; nothing listens on external interfaces.
+ - **TokenBucket**: classic token-bucket rate limiter over a monotonic
+   clock.  ``consume(n)`` blocks until n tokens drained at
+   ``rate_bytes_per_s`` (burst bounded by ``capacity_bytes``), so sustained
+   measured throughput converges to the configured rate.
+ - **RateLimitedLink**: a connected socket + bucket.  ``send`` charges the
+   bucket with ``charge_bytes`` — by default the actual frame length, but
+   the simulator passes the *modeled* wire bytes of the payload
+   (``core.compression`` accounting): compression in this repo is
+   value-faithful simulation, the pickled fp32 factors are bigger than the
+   int4-packed wire format they stand for, and the link must price what the
+   real wire would carry.
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import socket
+import struct
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+_LEN = struct.Struct(">I")
+MAX_FRAME_BYTES = 1 << 30        # sanity bound against corrupt prefixes
+
+
+# ---------------------------------------------------------------------------
+# frame codec
+# ---------------------------------------------------------------------------
+
+def pack_frame(obj: Any) -> bytes:
+    """Serialize one message to a length-prefixed frame."""
+    body = pickle.dumps(obj, protocol=4)
+    if len(body) > MAX_FRAME_BYTES:
+        raise ValueError(f"frame too large: {len(body)} bytes")
+    return _LEN.pack(len(body)) + body
+
+
+def unpack_frames(buf: bytes) -> Tuple[List[Any], bytes]:
+    """Decode every complete frame in ``buf``; returns (messages, rest).
+    ``rest`` is the trailing partial frame (stream codec: callers may feed
+    arbitrary chunk boundaries)."""
+    msgs = []
+    view = memoryview(buf)
+    off = 0
+    while len(view) - off >= _LEN.size:
+        (n,) = _LEN.unpack_from(view, off)
+        if n > MAX_FRAME_BYTES:
+            raise ValueError(f"corrupt frame length {n}")
+        if len(view) - off - _LEN.size < n:
+            break
+        body = bytes(view[off + _LEN.size:off + _LEN.size + n])
+        msgs.append(pickle.loads(body))
+        off += _LEN.size + n
+    return msgs, bytes(view[off:])
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = io.BytesIO()
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            raise ConnectionError("peer closed while reading frame")
+        buf.write(chunk)
+        got += len(chunk)
+    return buf.getvalue()
+
+
+def send_frame(sock: socket.socket, obj: Any) -> int:
+    data = pack_frame(obj)
+    sock.sendall(data)
+    return len(data)
+
+
+def recv_frame(sock: socket.socket, timeout: Optional[float] = None) -> Any:
+    if timeout is not None:
+        prev = sock.gettimeout()
+        sock.settimeout(timeout)
+    try:
+        (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+        if n > MAX_FRAME_BYTES:
+            raise ValueError(f"corrupt frame length {n}")
+        return pickle.loads(_recv_exact(sock, n))
+    finally:
+        if timeout is not None:
+            sock.settimeout(prev)    # a one-off timeout must not leak into
+                                     # later blocking reads (idle waits
+                                     # during a respawn can exceed it)
+
+
+# ---------------------------------------------------------------------------
+# token bucket
+# ---------------------------------------------------------------------------
+
+class TokenBucket:
+    """Blocking token bucket: tokens accrue at ``rate_bytes_per_s`` up to
+    ``capacity_bytes`` (default: 20 ms of rate — small, so short transfers
+    can't ride a free burst and measured throughput tracks the rate)."""
+
+    def __init__(self, rate_bytes_per_s: float,
+                 capacity_bytes: Optional[float] = None):
+        if rate_bytes_per_s <= 0:
+            raise ValueError("rate must be positive")
+        self.rate = float(rate_bytes_per_s)
+        self.capacity = float(capacity_bytes if capacity_bytes is not None
+                              else max(1.0, self.rate * 0.02))
+        self._tokens = self.capacity
+        self._stamp = time.monotonic()
+        self._lock = threading.Lock()
+
+    def _refill(self) -> None:
+        now = time.monotonic()
+        self._tokens = min(self.capacity,
+                           self._tokens + (now - self._stamp) * self.rate)
+        self._stamp = now
+
+    def consume(self, n_bytes: float) -> float:
+        """Drain ``n_bytes`` tokens, sleeping as needed; returns seconds
+        blocked.  n may exceed capacity (drained in capacity-sized gulps)."""
+        t0 = time.monotonic()
+        remaining = float(n_bytes)
+        with self._lock:
+            while remaining > 0:
+                self._refill()
+                take = min(remaining, self._tokens)
+                self._tokens -= take
+                remaining -= take
+                if remaining > 0:
+                    need = min(remaining, self.capacity) - self._tokens
+                    time.sleep(max(need / self.rate, 1e-4))
+        return time.monotonic() - t0
+
+
+# ---------------------------------------------------------------------------
+# rate-limited link
+# ---------------------------------------------------------------------------
+
+class RateLimitedLink:
+    """A connected socket whose sends are paced by a token bucket plus a
+    fixed per-send latency.  ``configure()`` swaps rate/latency between
+    rounds (link degradation = a smaller bucket rate — enforced by the
+    transport, not by a clock model)."""
+
+    def __init__(self, sock: socket.socket,
+                 rate_bytes_per_s: Optional[float] = None,
+                 latency_s: float = 0.0):
+        self.sock = sock
+        self.latency_s = float(latency_s)
+        self._bucket = (TokenBucket(rate_bytes_per_s)
+                        if rate_bytes_per_s else None)
+        self._send_lock = threading.Lock()
+
+    def configure(self, rate_bytes_per_s: Optional[float],
+                  latency_s: float = 0.0) -> None:
+        self._bucket = (TokenBucket(rate_bytes_per_s)
+                        if rate_bytes_per_s else None)
+        self.latency_s = float(latency_s)
+
+    def send(self, obj: Any, charge_bytes: Optional[float] = None) -> float:
+        """Frame + send ``obj``; charge the bucket ``charge_bytes`` (default:
+        the actual frame length).  Returns elapsed seconds (throttle +
+        latency + the send itself)."""
+        data = pack_frame(obj)
+        charge = len(data) if charge_bytes is None else float(charge_bytes)
+        t0 = time.monotonic()
+        with self._send_lock:
+            if self.latency_s > 0:
+                time.sleep(self.latency_s)
+            if self._bucket is not None and charge > 0:
+                self._bucket.consume(charge)
+            self.sock.sendall(data)
+        return time.monotonic() - t0
+
+    def recv(self, timeout: Optional[float] = None) -> Any:
+        return recv_frame(self.sock, timeout)
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()

@@ -1,0 +1,225 @@
+"""Worker process for the multi-process backend: ONE virtual cluster.
+
+Runs the real DiLoCoX round math for its cluster — the per-cluster slice of
+``core/diloco.py``'s delayed round, with ``core/compression.py`` payloads:
+
+ - **comm thread**: compress last round's pending pseudo-gradient
+   (``compressor.roundtrip``, warm-started) and push it to the coordinator
+   through the token-bucket-limited socket.  This literally runs while the
+   inner steps run — the §2.3 one-step-delay overlap as two OS threads, not
+   a clock model.
+ - **train thread** (main): H local AdamW steps from the current global
+   params, then sleep-padded to the round's modeled compute target (the
+   quadratic problem is microseconds; the pad is what makes stragglers
+   *actually* slow).
+ - **join**: receive the masked cluster mean Δ, compute Alg. 2 error
+   feedback (e = δ − Δ), the next pending delta, and apply the Nesterov
+   outer update locally — every worker holds an identical replica of
+   (params, outer momentum), asserted round-by-round via param hashes.
+
+Timing-only mode (``problem: null``) skips jax entirely (fast spawn) and
+exercises just membership/transport/timing.
+
+Invocation (by the coordinator): ``python -m repro.sim.proc.worker '<json>'``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import sys
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.sim.proc.transport import RateLimitedLink
+from repro.sim.timeline import tree_hash
+
+
+def _connect(host: str, port: int, timeout_s: float = 30.0) -> socket.socket:
+    deadline = time.monotonic() + timeout_s
+    while True:
+        try:
+            sock = socket.create_connection((host, port), timeout=5.0)
+            sock.settimeout(None)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return sock
+        except OSError:
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.05)
+
+
+class _NumericRuntime:
+    """The jitted per-cluster round functions + replicated state."""
+
+    def __init__(self, cfg: Dict[str, Any]):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.compression import make_compressor
+        from repro.optim import adamw, nesterov
+        from repro.sim.quadratic import QuadraticSpec
+
+        self.jax, self.jnp = jax, jnp
+        self.nesterov = nesterov
+        spec = QuadraticSpec.from_dict(cfg["problem"])
+        self.cluster = jnp.asarray(cfg["cluster"], jnp.int32)
+        self.compressor = make_compressor(cfg["compressor"]["name"],
+                                          **cfg["compressor"]["kw"])
+        rank = cfg.get("rank")
+        rank_scalar = None if rank is None else jnp.asarray(rank, jnp.int32)
+
+        self.params = spec.init_params()
+        self.inner_opt = adamw.init(self.params)
+        self.outer_opt = nesterov.init(self.params)
+        self.pending = jax.tree.map(
+            lambda x: jnp.zeros_like(x, jnp.float32), self.params)
+        self.comp_state = self.compressor.init_state(self.params)
+
+        one_cluster = spec.one_cluster_fn()
+        self.inner_j = jax.jit(one_cluster)
+        self.compress_j = jax.jit(
+            lambda d, s: self.compressor.roundtrip(d, s, rank_scalar))
+
+        def err_and_delta(pending, Delta, anchor, params_inner):
+            # Alg. 2 error feedback vs the global average: e = δ^{t-1} − Δ
+            err = jax.tree.map(lambda d, D: d - D, pending, Delta)
+            return jax.tree.map(
+                lambda a, p, e: (a.astype(jnp.float32)
+                                 - p.astype(jnp.float32)) + e,
+                anchor, params_inner, err)
+
+        self.ed_j = jax.jit(err_and_delta)
+        self.outer_j = jax.jit(lambda D, o, p: nesterov.update(
+            D, o, p, lr=spec.outer_lr, momentum=spec.outer_momentum))
+
+    def warmup(self) -> None:
+        """Compile every jitted function on the real shapes so round 0's
+        measured time is transport+sleep, not XLA compile."""
+        jax = self.jax
+        hat, _ = self.compress_j(self.pending, self.comp_state)
+        p_inner, _, losses = self.inner_j(self.params, self.inner_opt,
+                                          self.cluster)
+        pend = self.ed_j(self.pending, hat, self.params, p_inner)
+        out = self.outer_j(hat, self.outer_opt, self.params)
+        jax.block_until_ready((pend, out))
+
+    def load(self, params_np: Any, outer_np: Optional[Dict[str, Any]]):
+        """Bootstrap a (re)spawned worker from the coordinator's replica:
+        current global params + outer momentum; inner/compressor state stays
+        freshly initialized (a rejoining cluster missed the interim)."""
+        jax, jnp = self.jax, self.jnp
+        self.params = jax.tree.map(jnp.asarray, params_np)
+        if outer_np is not None:
+            self.outer_opt = self.nesterov.NesterovState(
+                step=jnp.asarray(outer_np["step"]),
+                momentum=jax.tree.map(jnp.asarray, outer_np["momentum"]))
+
+
+def _to_np(tree: Any) -> Any:
+    if tree is None:
+        return None
+    import jax
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    cfg = json.loads(argv[0])
+    cluster = int(cfg["cluster"])
+    crash_at = cfg.get("crash_at_round")
+
+    rt = _NumericRuntime(cfg) if cfg.get("problem") is not None else None
+    if rt is not None:
+        rt.warmup()
+
+    sock = _connect(cfg.get("host", "127.0.0.1"), int(cfg["port"]))
+    link = RateLimitedLink(sock)
+    link.send({"type": "hello", "cluster": cluster, "pid": os.getpid()})
+    boot = link.recv(timeout=60.0)
+    assert boot["type"] == "bootstrap", boot
+    if rt is not None and boot.get("params") is not None:
+        rt.load(boot["params"], boot.get("outer_opt"))
+
+    while True:
+        msg = link.recv()
+        if msg["type"] == "stop":
+            break
+        if msg["type"] == "dump":
+            # coordinator wants the replicated outer state (to bootstrap a
+            # respawning worker); reply and keep waiting for the next round
+            state = {"type": "state", "params": None, "outer_opt": None}
+            if rt is not None:
+                state["params"] = _to_np(rt.params)
+                state["outer_opt"] = {
+                    "step": np.asarray(rt.outer_opt.step),
+                    "momentum": _to_np(rt.outer_opt.momentum)}
+            link.send(state)
+            continue
+        assert msg["type"] == "round", msg
+        r = int(msg["round"])
+        if crash_at is not None and r == int(crash_at):
+            os._exit(17)          # injected hard crash, before any send
+
+        link.configure(msg.get("rate_bytes_per_s"),
+                       msg.get("latency_s", 0.0))
+        comm_out: Dict[str, Any] = {}
+
+        def comm_leg():
+            t0 = time.monotonic()
+            if rt is not None:
+                hat, comp_new = rt.compress_j(rt.pending, rt.comp_state)
+                comm_out["comp_state"] = comp_new
+                payload = _to_np(hat)
+            else:
+                payload = None
+            link.send({"type": "delta", "round": r, "cluster": cluster,
+                       "hat": payload},
+                      charge_bytes=msg.get("charge_bytes"))
+            comm_out["t_comm"] = time.monotonic() - t0
+
+        tx = threading.Thread(target=comm_leg, daemon=True)
+        tx.start()
+
+        t0 = time.monotonic()
+        loss = None
+        p_inner = inner_new = None
+        if rt is not None:
+            p_inner, inner_new, losses = rt.inner_j(rt.params, rt.inner_opt,
+                                                    rt.cluster)
+            rt.jax.block_until_ready(p_inner)
+            loss = float(np.mean(np.asarray(losses)))
+        pad = float(msg.get("compute_target_s", 0.0)) \
+            - (time.monotonic() - t0)
+        if pad > 0:
+            time.sleep(pad)
+        t_compute = time.monotonic() - t0
+
+        tx.join()
+        avg = link.recv()
+        assert avg["type"] == "avg", avg
+
+        param_hash = None
+        if rt is not None:
+            jnp = rt.jnp
+            Delta = rt.jax.tree.map(jnp.asarray, avg["delta"])
+            anchor = rt.params
+            rt.pending = rt.ed_j(rt.pending, Delta, anchor, p_inner)
+            rt.params, rt.outer_opt = rt.outer_j(Delta, rt.outer_opt,
+                                                 anchor)
+            rt.inner_opt = inner_new
+            rt.comp_state = comm_out["comp_state"]
+            param_hash = tree_hash(rt.params)
+
+        link.send({"type": "done", "round": r, "cluster": cluster,
+                   "t_compute": t_compute, "t_comm": comm_out["t_comm"],
+                   "param_hash": param_hash, "loss": loss})
+
+    link.close()
+
+
+if __name__ == "__main__":
+    main()

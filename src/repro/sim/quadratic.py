@@ -1,0 +1,153 @@
+"""Serializable quadratic test problem for the simulator backends.
+
+``make_quadratic_problem`` (re-exported from ``repro.sim``) historically
+built the tiny per-cluster least-squares instance as opaque closures.  The
+multi-process backend needs to rebuild the *same* problem inside a worker
+subprocess from a JSON-able description, so the construction now lives in
+``QuadraticSpec``:
+
+ - ``spec.problem()``          -> the in-process ``NumericProblem`` (vmapped
+   inner_fn), exactly what ``simulate(sc, numeric=...)`` consumes;
+ - ``spec.one_cluster_fn()``   -> the single-cluster H-step inner function a
+   proc worker jits for itself;
+ - ``spec.init_params()``      -> deterministic initial global params.
+
+Both views are built from the same PRNG derivations, and the single-cluster
+function is the exact per-cluster slice of the vmapped one — together with
+``core.diloco.per_cluster_compress`` this is what makes the proc backend's
+outer deltas bit-identical to the in-process simulator.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Any, Dict
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QuadraticSpec:
+    """Cluster c minimizes 0.5*||W - T_c||^2 with T_c = T* + hetero*off_c.
+    Cheap enough for tier-1, but it exercises the full round machinery
+    (AdamW inner, Nesterov outer, compression round-trips, error feedback,
+    one-step delay)."""
+    n_clusters: int
+    d: int = 16
+    n_mats: int = 2
+    h_steps: int = 8
+    inner_lr: float = 3e-2
+    hetero: float = 0.1
+    seed: int = 0
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.5
+
+    # ---- serialization (worker subprocess bootstrap) ----------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": "quadratic", **asdict(self)}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "QuadraticSpec":
+        d = dict(d)
+        if d.pop("kind", "quadratic") != "quadratic":
+            raise ValueError(f"unknown problem kind {d!r}")
+        return QuadraticSpec(**d)
+
+    # ---- deterministic construction ---------------------------------------
+    def _arrays(self):
+        import jax
+        import jax.numpy as jnp
+
+        key = jax.random.PRNGKey(self.seed)
+        k_init, k_tgt, k_off = jax.random.split(key, 3)
+        params = {f"w{i}": 0.5 * jax.random.normal(
+            jax.random.fold_in(k_init, i), (self.d, self.d), jnp.float32)
+            for i in range(self.n_mats)}
+        target = {k: jax.random.normal(jax.random.fold_in(k_tgt, i),
+                                       (self.d, self.d))
+                  for i, k in enumerate(params)}
+        offsets = {k: self.hetero * jax.random.normal(
+            jax.random.fold_in(k_off, i), (self.n_clusters, self.d, self.d))
+            for i, k in enumerate(params)}
+        return params, target, offsets
+
+    def init_params(self):
+        return self._arrays()[0]
+
+    def cluster_loss_fn(self):
+        import jax.numpy as jnp
+
+        _, target, offsets = self._arrays()
+
+        def cluster_loss(p, c):
+            per = [jnp.sum((p[k] - (target[k] + offsets[k][c])) ** 2)
+                   for k in p]
+            return 0.5 * sum(per) / len(per)
+
+        return cluster_loss
+
+    def one_cluster_fn(self):
+        """(params_global, inner_opt, c) -> (params_H, inner_opt', losses):
+        H AdamW steps for one cluster — what a proc worker runs, and the
+        exact per-cluster slice of ``problem()``'s vmapped inner_fn."""
+        import jax
+
+        from repro.optim import adamw
+
+        cluster_loss = self.cluster_loss_fn()
+        h, lr = self.h_steps, self.inner_lr
+
+        def one_cluster(params_g, opt_state, c):
+            def step(carry, _):
+                p, o = carry
+                loss, g = jax.value_and_grad(
+                    lambda q: cluster_loss(q, c))(p)
+                p, o = adamw.update(g, o, p, lr=lr)
+                return (p, o), loss
+
+            (p, o), losses = jax.lax.scan(step, (params_g, opt_state),
+                                          None, length=h)
+            return p, o, losses
+
+        return one_cluster
+
+    def problem(self):
+        """The in-process ``NumericProblem`` (vmapped over clusters)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.optim import adamw
+        from repro.sim.simulator import NumericProblem
+
+        params = self.init_params()
+        cluster_loss = self.cluster_loss_fn()
+        one_cluster = self.one_cluster_fn()
+        n = self.n_clusters
+
+        opt0 = adamw.init(params)
+        inner_stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), opt0)
+
+        def inner_fn(params_g, inner_opt_stacked, t):
+            f = lambda opt, c: one_cluster(params_g, opt, c)
+            return jax.vmap(f)(inner_opt_stacked, jnp.arange(n))
+
+        def eval_fn(p):
+            return float(np.mean([float(cluster_loss(p, c))
+                                  for c in range(n)]))
+
+        return NumericProblem(params=params, inner_opt_stacked=inner_stacked,
+                              inner_fn=inner_fn, outer_lr=self.outer_lr,
+                              outer_momentum=self.outer_momentum,
+                              eval_fn=eval_fn)
+
+
+def make_quadratic_problem(n_clusters: int, *, d: int = 16, n_mats: int = 2,
+                           h_steps: int = 8, inner_lr: float = 3e-2,
+                           hetero: float = 0.1, seed: int = 0,
+                           outer_lr: float = 0.7, outer_momentum: float = 0.5):
+    """Back-compat wrapper: build the spec and return the in-process
+    ``NumericProblem`` (the historical return type)."""
+    return QuadraticSpec(n_clusters=n_clusters, d=d, n_mats=n_mats,
+                         h_steps=h_steps, inner_lr=inner_lr, hetero=hetero,
+                         seed=seed, outer_lr=outer_lr,
+                         outer_momentum=outer_momentum).problem()

@@ -28,9 +28,12 @@ from typing import Any, Callable, Dict, Optional
 import numpy as np
 
 from repro.core import comm
-from repro.core.compression import make_compressor
 from repro.sim.scenario import Scenario
-from repro.sim.timeline import RoundEvent, Timeline
+from repro.sim.timeline import RoundEvent, Timeline, tree_hash
+
+# NOTE: repro.core.compression (and with it jax) is imported lazily inside
+# simulate() — `import repro.sim` must stay jax-free so the proc backend's
+# timing-only workers really do spawn without paying the jax import.
 
 
 # ---------------------------------------------------------------------------
@@ -49,63 +52,12 @@ class NumericProblem:
     eval_fn: Optional[Callable] = None   # params -> scalar loss (recorded)
 
 
-def make_quadratic_problem(n_clusters: int, *, d: int = 16, n_mats: int = 2,
-                           h_steps: int = 8, inner_lr: float = 3e-2,
-                           hetero: float = 0.1, seed: int = 0,
-                           outer_lr: float = 0.7, outer_momentum: float = 0.5
-                           ) -> NumericProblem:
-    """Tiny per-cluster least-squares problem: cluster c minimizes
-    0.5*||W - T_c||^2 with T_c = T* + hetero * offset_c.  Cheap enough for
-    tier-1, but it exercises the full round machinery (AdamW inner,
-    Nesterov outer, compression round-trips, error feedback, delay)."""
-    import jax
-    import jax.numpy as jnp
-
-    from repro.optim import adamw
-
-    key = jax.random.PRNGKey(seed)
-    k_init, k_tgt, k_off = jax.random.split(key, 3)
-    params = {f"w{i}": 0.5 * jax.random.normal(
-        jax.random.fold_in(k_init, i), (d, d), jnp.float32)
-        for i in range(n_mats)}
-    target = {k: jax.random.normal(jax.random.fold_in(k_tgt, i), (d, d))
-              for i, k in enumerate(params)}
-    offsets = {k: hetero * jax.random.normal(
-        jax.random.fold_in(k_off, i), (n_clusters, d, d))
-        for i, k in enumerate(params)}
-
-    def cluster_loss(p, c):
-        per = [jnp.sum((p[k] - (target[k] + offsets[k][c])) ** 2)
-               for k in p]
-        return 0.5 * sum(per) / len(per)
-
-    opt0 = adamw.init(params)
-    inner_stacked = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (n_clusters,) + x.shape).copy(), opt0)
-
-    def one_cluster(params_g, opt_state, c):
-        def step(carry, _):
-            p, o = carry
-            loss, g = jax.value_and_grad(lambda q: cluster_loss(q, c))(p)
-            p, o = adamw.update(g, o, p, lr=inner_lr)
-            return (p, o), loss
-
-        (p, o), losses = jax.lax.scan(step, (params_g, opt_state),
-                                      None, length=h_steps)
-        return p, o, losses
-
-    def inner_fn(params_g, inner_opt_stacked, t):
-        import jax as _jax
-        f = lambda opt, c: one_cluster(params_g, opt, c)
-        return _jax.vmap(f)(inner_opt_stacked, jnp.arange(n_clusters))
-
-    def eval_fn(p):
-        return float(np.mean([float(cluster_loss(p, c))
-                              for c in range(n_clusters)]))
-
-    return NumericProblem(params=params, inner_opt_stacked=inner_stacked,
-                          inner_fn=inner_fn, outer_lr=outer_lr,
-                          outer_momentum=outer_momentum, eval_fn=eval_fn)
+def make_quadratic_problem(n_clusters: int, **kw) -> NumericProblem:
+    """Tiny per-cluster least-squares problem (see ``sim.quadratic``).
+    Kept here for back-compat; the construction now lives in
+    ``QuadraticSpec`` so the proc backend can rebuild it in a subprocess."""
+    from repro.sim.quadratic import make_quadratic_problem as _mk
+    return _mk(n_clusters, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +81,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
     ``adaptive_cfg`` (an ``adaptive.AdaGradCmpConfig``) enables the Alg. 3
     controller: requires ``numeric`` (the rank signal is the effective rank
     of the realized averaged pseudo-gradient, as in train/trainer.py)."""
+    from repro.core.compression import make_compressor
+
     C = sc.n_clusters
     shapes = sc.shapes()
     compressor = make_compressor(sc.compressor, **sc.compressor_kw)
@@ -158,7 +112,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                                        cm, rcfg, rank_scalar)
 
         num = {"state": state, "round": jax.jit(_round), "jnp": jnp,
-               "membership": membership, "jax": jax}
+               "membership": membership, "jax": jax,
+               "comp0": compressor.init_state(numeric.params)}
 
     ada_state = None
     if adaptive_cfg is not None:
@@ -222,22 +177,47 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
 
         # ---- numeric leg: one REAL diloco round over the alive set -------
         loss = None
+        param_hash = None
         if num is not None:
             jnp = num["jnp"]
+            _jax = num["jax"]
 
             def reset_buffers(st, mask_np):
                 """Zero per-cluster pending-delta/error for masked clusters
-                (comp_state is kept: a stale warm-start Q is harmless,
-                zeroing it would kill the PowerSGD subspace forever)."""
+                (dead sites neither train nor accumulate error)."""
                 m = jnp.asarray(mask_np, jnp.float32)
                 return st._replace(
                     delta_pending=num["membership"].reset_rejoining(
                         st.delta_pending, m),
                     error=num["membership"].reset_rejoining(st.error, m))
 
+            def reset_rejoined(st, mask_np):
+                """A rejoining cluster is a *fresh worker* (the proc backend
+                respawns the process): pending/error zeroed, inner-optimizer
+                moments zeroed (== adamw.init), and the compressor warm
+                start RE-INITIALIZED to its deterministic init value — never
+                zeroed, a zero Q bricks PowerSGD (P = M @ 0 forever)."""
+                st = reset_buffers(st, mask_np)
+                m = jnp.asarray(mask_np, bool)
+
+                def row(x):
+                    return m.reshape((-1,) + (1,) * (max(x.ndim, 1) - 1))
+
+                inner = _jax.tree.map(
+                    lambda x: (jnp.where(row(x), jnp.zeros_like(x), x)
+                               if hasattr(x, "ndim") and x.ndim >= 1 else x),
+                    st.inner_opt)
+                comp = _jax.tree.map(
+                    lambda x, x0: (jnp.where(
+                        row(x),
+                        jnp.broadcast_to(x0, x.shape).astype(x.dtype), x)
+                        if hasattr(x, "ndim") and x.ndim >= 1 else x),
+                    st.comp_state, num["comp0"])
+                return st._replace(inner_opt=inner, comp_state=comp)
+
             st = num["state"]
             if rejoined.any():
-                st = reset_buffers(st, rejoined)
+                st = reset_rejoined(st, rejoined)
             alive_vec = jnp.asarray(alive, jnp.float32)
             rank_scalar = (None if rank_t is None
                            else jnp.asarray(rank_t, jnp.int32))
@@ -246,6 +226,7 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             if (~alive).any():
                 st = reset_buffers(st, ~alive)
             num["state"] = st
+            param_hash = tree_hash(st.params)
             aux_np = np.asarray(aux)
             if n_alive:
                 loss = float(np.mean(aux_np[np.asarray(alive)]))
@@ -264,7 +245,7 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             t_comm_s=t_comm, exposed_comm_s=exposed, t_round_s=t_round,
             wire_bytes=wire, slowest_cluster=slowest,
             bottleneck_cluster=bottleneck, tokens=tokens,
-            faults=sc.faults.active(r), loss=loss))
+            faults=sc.faults.active(r), loss=loss, param_hash=param_hash))
 
     tl = Timeline(scenario=sc.meta(), events=events)
     if num is not None:

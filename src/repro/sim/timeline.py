@@ -15,6 +15,33 @@ from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 
+def tree_hash(tree: Any) -> str:
+    """Canonical sha256 of a pytree of arrays: dicts by sorted key,
+    lists/tuples (incl. NamedTuples) positionally; each leaf contributes its
+    dtype, shape, and raw bytes.  Pure numpy/python so the proc worker can
+    hash without importing jax; jax arrays go through ``np.asarray`` and
+    hash to the same digest as their numpy copies — this is the bit-for-bit
+    equality the proc-vs-in-process equivalence gate asserts on."""
+    import numpy as np
+
+    h = hashlib.sha256()
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}", node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            a = np.asarray(node)
+            h.update(f"{prefix}:{a.dtype.str}:{a.shape}".encode())
+            h.update(np.ascontiguousarray(a).tobytes())
+
+    walk("", tree)
+    return h.hexdigest()
+
+
 @dataclass(frozen=True)
 class RoundEvent:
     round: int
@@ -32,6 +59,9 @@ class RoundEvent:
     tokens: float                      # tokens trained this round
     faults: Tuple[str, ...] = ()
     loss: Optional[float] = None       # numeric mode only
+    param_hash: Optional[str] = None   # tree_hash of global params after the
+                                       # round (numeric mode; the proc/
+                                       # in-process equivalence currency)
 
 
 @dataclass
@@ -76,6 +106,7 @@ class Timeline:
                 "tokens_per_s": round(self.tokens_per_s, 3),
                 "total_wire_bytes": self.total_wire_bytes,
                 "exposed_comm_frac": round(self.exposed_comm_frac, 6),
+                "structural_fingerprint": self.structural_fingerprint(),
             },
             "events": [asdict(e) for e in self.events],
         }
@@ -94,6 +125,20 @@ class Timeline:
 
         blob = json.dumps(canon([asdict(e) for e in self.events]),
                           sort_keys=True).encode("utf-8")
+        return hashlib.sha256(blob).hexdigest()
+
+    STRUCTURAL_FIELDS = ("round", "alive", "rejoined", "h_steps", "rank",
+                         "wire_bytes", "faults", "param_hash")
+
+    def structural_fingerprint(self) -> str:
+        """Like ``fingerprint()`` but over the *stable* per-round fields only
+        (participants, budgets, wire accounting, fault tags, param hashes) —
+        no measured/modeled seconds.  A proc-backend run is wall-clock-noisy,
+        yet two runs of the same scenario must produce the same structural
+        fingerprint; CI fails on drift."""
+        rows = [[getattr(e, f) for f in self.STRUCTURAL_FIELDS]
+                for e in self.events]
+        blob = json.dumps(rows, sort_keys=True).encode("utf-8")
         return hashlib.sha256(blob).hexdigest()
 
     # ---- display ----------------------------------------------------------

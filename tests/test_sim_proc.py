@@ -1,0 +1,186 @@
+"""Multi-process simulator backend (repro.sim.proc): token-bucket rate
+limiter, frame codec, end-to-end process runs with crash -> membership-mask
+recovery, and (slow) bit-for-bit equivalence with the in-process backend."""
+import dataclasses
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.sim import (FaultSchedule, Join, Leave, LinkProfile, QuadraticSpec,
+                       Scenario, Straggler, simulate)
+from repro.sim.proc import (RateLimitedLink, TokenBucket, pack_frame,
+                            recv_frame, run_proc, send_frame, unpack_frames)
+from repro.sim.proc.equivalence import check_equivalence
+
+
+def proc_scenario(**kw):
+    base = dict(n_clusters=3, rounds=5, h_steps=2, t_step_s=0.02,
+                link=LinkProfile(bytes_per_s=200_000), compressor="diloco_x",
+                compressor_kw={"rank": 8, "min_dim_for_lowrank": 8}, rank=8,
+                n_params=1e5, seed=0)
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ---------------------------------------------------------------------------
+# token bucket: measured throughput tracks the configured rate
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_throughput_within_10pct():
+    rate = 200_000.0
+    bucket = TokenBucket(rate, capacity_bytes=20_000)
+    bucket.consume(bucket.capacity)        # drain the free initial burst
+    total, chunk = 100_000, 5_000          # 0.5 s nominal, sustained
+    t0 = time.monotonic()
+    sent = 0
+    while sent < total:
+        bucket.consume(chunk)
+        sent += chunk
+    measured = total / (time.monotonic() - t0)
+    assert 0.9 * rate <= measured <= 1.1 * rate
+
+
+def test_token_bucket_burst_capacity_bounds_free_bytes():
+    bucket = TokenBucket(1e6, capacity_bytes=1000)
+    t0 = time.monotonic()
+    bucket.consume(1000)                    # burst: free
+    assert time.monotonic() - t0 < 0.05
+    t0 = time.monotonic()
+    bucket.consume(50_000)                  # must be paced: >= ~50 ms
+    assert time.monotonic() - t0 >= 0.04
+
+
+def test_rate_limited_link_charges_modeled_bytes():
+    a, b = socket.socketpair()
+    try:
+        link = RateLimitedLink(a, rate_bytes_per_s=1e6)
+        got = []
+        rx = threading.Thread(target=lambda: got.append(recv_frame(b)),
+                              daemon=True)
+        rx.start()
+        # tiny frame, charged as 100 KB of modeled wire -> ~0.1 s throttle
+        dur = link.send({"round": 0, "hat": b"x"}, charge_bytes=100_000)
+        rx.join(timeout=5.0)
+        assert got and got[0]["round"] == 0
+        assert 0.06 <= dur <= 0.6
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# frame codec
+# ---------------------------------------------------------------------------
+
+def test_frame_codec_roundtrip_arbitrary_chunking():
+    msgs = [{"type": "round", "n": 1},
+            {"arr": np.arange(17, dtype=np.float32).reshape(1, 17)},
+            {"blob": b"\x00" * 1000, "s": "x" * 333}]
+    stream = b"".join(pack_frame(m) for m in msgs)
+    out, rest = [], b""
+    for i in range(0, len(stream), 13):     # deliberately misaligned chunks
+        got, rest = unpack_frames(rest + stream[i:i + 13])
+        out.extend(got)
+    assert rest == b""
+    assert len(out) == len(msgs)
+    assert out[0] == msgs[0]
+    np.testing.assert_array_equal(out[1]["arr"], msgs[1]["arr"])
+    assert out[2] == msgs[2]
+
+
+def test_send_recv_frame_over_socket():
+    a, b = socket.socketpair()
+    try:
+        send_frame(a, {"arr": np.ones((4, 4)), "id": 7})
+        msg = recv_frame(b, timeout=5.0)
+        assert msg["id"] == 7
+        np.testing.assert_array_equal(msg["arr"], np.ones((4, 4)))
+        a.close()                           # EOF must raise, not hang
+        with pytest.raises((ConnectionError, OSError)):
+            recv_frame(b, timeout=5.0)
+    finally:
+        b.close()
+
+
+def test_frame_codec_rejects_corrupt_length():
+    with pytest.raises(ValueError):
+        unpack_frames(b"\xff\xff\xff\xff" + b"junk")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over real processes (timing-only workers: no jax, fast spawn)
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_recovers_membership_mask():
+    """Kill worker 2 mid-run (os._exit at round 2, before its delta): the
+    coordinator must mask it out of that round's collective and finish the
+    remaining rounds with the survivors."""
+    sc = proc_scenario()
+    tl = run_proc(sc, None, crash_at={2: 2})
+    assert len(tl.events) == sc.rounds
+    assert [e.alive for e in tl.events] == [
+        (0, 1, 2), (0, 1, 2), (0, 1), (0, 1), (0, 1)]
+    assert any("crash(c2)" in f for f in tl.events[2].faults)
+    # masked membership shows up in the token accounting too
+    np.testing.assert_allclose(tl.events[2].tokens,
+                               tl.events[1].tokens * 2 / 3, rtol=1e-12)
+
+
+def test_leave_join_kills_and_respawns_processes():
+    sc = proc_scenario(rounds=5, faults=FaultSchedule((Leave(1, 1),
+                                                       Join(1, 3))))
+    tl = run_proc(sc, None)
+    assert [e.alive for e in tl.events] == [
+        (0, 1, 2), (0, 2), (0, 2), (0, 1, 2), (0, 1, 2)]
+    assert tl.events[3].rejoined == (1,)
+
+
+def test_timing_only_equivalence_with_model():
+    """Measured proc timeline (straggler enforced by actual sleep, link by
+    the token bucket) agrees with the in-process clock model; structural
+    fingerprints match exactly."""
+    sc = proc_scenario(rounds=4, h_steps=3, t_step_s=0.03,
+                       faults=FaultSchedule((Straggler(1, 1, 3, 3.0),)))
+    rep = check_equivalence(sc, None)
+    assert rep["structural_match"]
+    assert rep["timing_ok"], rep
+    assert rep["proc_fingerprint"] == rep["model_fingerprint"]
+    # the straggler rounds must actually be ~3x slower on the wall clock
+    tl = rep["timelines"]["proc"]
+    assert tl.events[1].t_compute_s > 2.0 * tl.events[0].t_compute_s
+
+
+def test_structural_fingerprint_ignores_wall_clock():
+    """Same scenario, different step time: measured/modeled seconds change,
+    the structural fingerprint (participants/budgets/wire/hashes) doesn't."""
+    sc_fast = proc_scenario(rounds=3)
+    sc_slow = proc_scenario(rounds=3, t_step_s=0.1)
+    a, b = simulate(sc_fast), simulate(sc_slow)
+    assert a.fingerprint() != b.fingerprint()
+    assert a.structural_fingerprint() == b.structural_fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# the headline guarantee (slow: spawns jax workers; CI runs it in the
+# dedicated sim-proc job and via the launch CLI --check-equivalence)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_proc_numeric_bitwise_equivalence_through_churn():
+    sc = proc_scenario(
+        n_clusters=2, rounds=6, h_steps=4, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=50_000, jitter=0.1),
+        faults=FaultSchedule((Straggler(1, 1, 3, 2.5), Leave(1, 3),
+                              Join(1, 5))),
+        n_params=2e5)
+    spec = QuadraticSpec(n_clusters=2, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep           # bit-for-bit, incl. post-rejoin
+    assert rep["structural_match"]
+    assert rep["timing_ok"], rep
+    assert rep["final_params_bitwise_equal"]
+    losses = rep["timelines"]["proc"].losses()
+    assert losses[-1] < losses[0]           # it actually trains
