@@ -1,0 +1,193 @@
+"""Gossip vs gather: what does dropping the hub cost, and what does it buy?
+
+Runs the SAME 8-cluster scenario (same link model, same churn schedule,
+same quadratic problem through the real ``core/diloco.py`` rounds) under
+the hub/gather outer sync (``star``, the paper's setting) and under
+neighbor-gossip mixing graphs (``ring``/``torus``/``random``), and reports:
+
+ - **bytes-on-wire per round** (all links): gossip ships each compressed
+   pseudo-gradient to ``deg`` neighbors instead of relaying ``n-1``
+   payloads per member through the hub — strictly less for every
+   connected graph with max degree < n-1;
+ - **convergence gap**: final consensus loss (the quadratic evaluated at
+   the alive-mean outer params) vs the gather baseline, with the pass
+   tolerance stated in the output;
+ - **timeline under churn**: per-round time/loss/disagreement while a
+   straggler fires and a cluster leaves and rejoins.
+
+  python -m benchmarks.gossip_vs_gather [--fast] [--json out.json]
+  python -m benchmarks.gossip_vs_gather --proc-equivalence   # + the proc
+                                  # backend's ring run, gated bit-for-bit
+
+Exit status is non-zero if either acceptance criterion fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.sim import (FaultSchedule, Join, Leave, LinkProfile,
+                       QuadraticSpec, Scenario, Straggler, simulate)
+from repro.topology import MixingMatrix, make_topology
+
+N_CLUSTERS = 8
+# stated acceptance tolerance: the gossip final consensus loss may differ
+# from gather's by at most this relative margin (plus a small absolute
+# floor for near-zero losses)
+LOSS_TOL_REL = 0.10
+LOSS_TOL_ABS = 1e-3
+
+
+def build_scenario(topology: str, rounds: int) -> Scenario:
+    return Scenario(
+        n_clusters=N_CLUSTERS, rounds=rounds, h_steps=4, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=200_000),
+        faults=FaultSchedule((
+            Straggler(3, 2, 5, 2.5),
+            Leave(5, rounds // 3), Join(5, (2 * rounds) // 3),
+        )),
+        compressor="diloco_x",
+        compressor_kw={"rank": 8, "min_dim_for_lowrank": 8}, rank=8,
+        n_params=2e5, topology=topology, seed=0)
+
+
+def _final_consensus_loss(tl, spec: QuadraticSpec) -> float:
+    """Quadratic loss at the final *consensus* params: gather keeps one
+    global replica; gossip replicas disagree, so evaluate the mean over
+    the finally-alive rows (what 'the model' is in a hubless run)."""
+    from repro.topology import GOSSIP_KINDS
+
+    eval_fn = spec.problem().eval_fn
+    fp = {k: np.asarray(v) for k, v in tl.final_params.items()}
+    if tl.scenario["topology"] in GOSSIP_KINDS:        # stacked rows
+        alive = list(tl.events[-1].alive)
+        fp = {k: v[alive].mean(axis=0) for k, v in fp.items()}
+    return float(eval_fn(fp))
+
+
+def run(fast: bool = False) -> Dict[str, Any]:
+    rounds = 6 if fast else 14
+    topologies = ["star", "ring"] if fast else ["star", "ring", "torus",
+                                                "random"]
+    spec = QuadraticSpec(n_clusters=N_CLUSTERS, d=16, n_mats=2, h_steps=4,
+                         seed=0)
+    out: Dict[str, Any] = {"rounds": rounds, "topologies": {},
+                           "loss_tol_rel": LOSS_TOL_REL,
+                           "loss_tol_abs": LOSS_TOL_ABS}
+    for topo in topologies:
+        sc = build_scenario(topo, rounds)
+        tl = simulate(sc, numeric=spec.problem())
+        gap = MixingMatrix.metropolis(make_topology(
+            topo, N_CLUSTERS)).spectral_gap()
+        out["topologies"][topo] = {
+            "spectral_gap": round(gap, 6),
+            "bytes_per_round": [e.wire_bytes_total for e in tl.events],
+            "total_bytes_on_links": tl.total_wire_bytes_on_links,
+            "round_s": [round(e.t_round_s, 6) for e in tl.events],
+            "losses": [None if e.loss is None else round(e.loss, 6)
+                       for e in tl.events],
+            "disagreement": [None if e.disagreement is None
+                             else round(e.disagreement, 8)
+                             for e in tl.events],
+            "final_consensus_loss": _final_consensus_loss(tl, spec),
+            "timeline_table": tl.table(),
+        }
+
+    star = out["topologies"]["star"]
+    ring = out["topologies"]["ring"]
+    # criterion (a): per-round bytes-on-wire strictly below gather, every
+    # round where anyone communicated at all
+    pairs = [(g, s) for g, s in zip(ring["bytes_per_round"],
+                                    star["bytes_per_round"]) if s > 0]
+    bytes_below = bool(pairs) and all(g < s for g, s in pairs)
+    # criterion (b): final consensus loss within the stated tolerance —
+    # one-sided: gossip may not be WORSE than gather by more than the
+    # margin (being better is not a failure)
+    l_star, l_ring = star["final_consensus_loss"], ring["final_consensus_loss"]
+    loss_gap = l_ring - l_star
+    loss_ok = loss_gap <= LOSS_TOL_ABS + LOSS_TOL_REL * abs(l_star)
+    out["criteria"] = {
+        "bytes_below_gather": bytes_below,
+        "bytes_saved_frac": round(
+            1.0 - ring["total_bytes_on_links"]
+            / max(star["total_bytes_on_links"], 1), 6),
+        "final_loss_star": l_star,
+        "final_loss_ring": l_ring,
+        "final_loss_gap": loss_gap,
+        "loss_within_tol": loss_ok,
+        "ok": bytes_below and loss_ok,
+    }
+    return out
+
+
+def check_proc_equivalence(fast: bool = True) -> Dict[str, Any]:
+    """Ring gossip on the proc backend (real processes + p2p sockets),
+    gated bit-for-bit against the in-process run — scaled down to 4
+    clusters so the gate stays cheap enough to run anywhere."""
+    from repro.sim.proc.equivalence import check_equivalence
+
+    n = 4
+    sc = Scenario(
+        n_clusters=n, rounds=4 if fast else 6, h_steps=4, t_step_s=0.04,
+        link=LinkProfile(bytes_per_s=100_000), topology="ring",
+        compressor="diloco_x",
+        compressor_kw={"rank": 4, "min_dim_for_lowrank": 8}, rank=4,
+        n_params=1e5, seed=0)
+    spec = QuadraticSpec(n_clusters=n, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    rep.pop("timelines", None)
+    return rep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="")
+    ap.add_argument("--proc-equivalence", action="store_true",
+                    help="also run ring gossip on the proc backend and "
+                         "gate it bit-for-bit against the model")
+    args = ap.parse_args()
+
+    out = run(fast=args.fast)
+    print(f"{'topology':>8} {'spectral_gap':>13} {'MB_on_links':>12} "
+          f"{'final_loss':>11}")
+    for topo, row in out["topologies"].items():
+        print(f"{topo:>8} {row['spectral_gap']:>13.4f} "
+              f"{row['total_bytes_on_links'] / 1e6:>12.2f} "
+              f"{row['final_consensus_loss']:>11.4f}")
+    print("\n--- ring timeline under churn ---")
+    print(out["topologies"]["ring"]["timeline_table"])
+    crit = out["criteria"]
+    print(f"\nbytes-on-wire: ring {'<' if crit['bytes_below_gather'] else '>='} "
+          f"gather every round "
+          f"({100 * crit['bytes_saved_frac']:.1f}% saved)  "
+          f"=> {'PASS' if crit['bytes_below_gather'] else 'FAIL'}")
+    print(f"final consensus loss: ring {crit['final_loss_ring']:.4f} vs "
+          f"gather {crit['final_loss_star']:.4f} (signed gap "
+          f"{crit['final_loss_gap']:+.4f}, tol "
+          f"{LOSS_TOL_ABS} + {LOSS_TOL_REL:.0%} rel, one-sided)  "
+          f"=> {'PASS' if crit['loss_within_tol'] else 'FAIL'}")
+
+    if args.proc_equivalence:
+        rep = check_proc_equivalence(fast=args.fast)
+        out["proc_equivalence"] = rep
+        print(f"proc ring-gossip equivalence: bitwise={rep['hash_match']} "
+              f"timing={rep['timing_ok']} => "
+              f"{'PASS' if rep['ok'] else 'FAIL'}")
+        crit["ok"] = crit["ok"] and rep["ok"]
+
+    if args.json:
+        for row in out["topologies"].values():
+            row.pop("timeline_table", None)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json}")
+    sys.exit(0 if crit["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

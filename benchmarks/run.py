@@ -128,6 +128,24 @@ def main() -> None:
                 print(f"sim_faults.{tag}.{case},{row['retention']},retention")
     section("sim_scenarios", sim_sweep)
 
+    # beyond-paper: gossip vs gather over the topology subsystem
+    def gossip() -> None:
+        from benchmarks import gossip_vs_gather
+        gg = gossip_vs_gather.run(fast=args.fast or args.skip_convergence)
+        for row in gg["topologies"].values():
+            row.pop("timeline_table", None)
+        blobs["gossip_vs_gather"] = gg
+        crit = gg["criteria"]
+        print(f"gossip_vs_gather.bytes_saved_frac,"
+              f"{crit['bytes_saved_frac']},frac")
+        print(f"gossip_vs_gather.final_loss_gap,"
+              f"{crit['final_loss_gap']:.4f},nll")
+        print(f"gossip_vs_gather.ok,{int(crit['ok'])},bool")
+        if not crit["ok"]:
+            raise AssertionError("gossip-vs-gather acceptance criteria "
+                                 "failed")
+    section("gossip_vs_gather", gossip)
+
     # roofline (if the dry-run matrix has been produced)
     def roofline_rows() -> None:
         from benchmarks import roofline

@@ -3,7 +3,9 @@
 This module is the *algorithm*, independent of how clusters are realised:
 ``cluster_mean`` is injected (a stacked-axis mean in the single-host
 simulation; an ``all_gather``+mean over the pod/data mesh axis in the
-distributed runtime — see repro/train/trainer.py and launch/).
+distributed runtime — see repro/train/trainer.py and launch/; a
+neighbor-gossip mix from ``repro.topology.mixing`` in the decentralized
+non-hub setting).
 
 Semantics implemented (and their provenance):
  - Dual optimizer: inner AdamW for H local steps, outer Nesterov on averaged
@@ -20,6 +22,15 @@ Semantics implemented (and their provenance):
    e = delta - C(delta), used in an ablation).
  - Compression: any ``core.compression.Compressor``; rank annealed by
    ``core.adaptive`` between rounds.
+ - Gossip topologies: when the injected averaging op is tagged
+   ``returns_stacked=True`` (see ``repro.topology.mixing.mixing_op``) the
+   round runs in *gossip mode*: ``state.params`` carries one row per
+   cluster, each cluster averages compressed pseudo-gradients over its
+   graph neighborhood only, and the outer Nesterov update applies
+   row-wise.  Per-cluster params are no longer identical after the outer
+   step — consensus lives in the (membership-masked) row mean, which
+   evolves exactly like the gather trajectory because the mixing matrix
+   is doubly stochastic.
 """
 from __future__ import annotations
 
@@ -34,20 +45,50 @@ from repro.optim import nesterov
 
 
 class DiLoCoXState(NamedTuple):
-    params: Any               # global params theta_t (post outer updates)
+    params: Any               # global params theta_t (post outer updates);
+                              # gossip mode: one row per cluster (stacked)
     inner_opt: Any            # per-cluster inner AdamW state (stacked)
-    outer_opt: Any            # outer Nesterov state (fp32, param-shaped)
+    outer_opt: Any            # outer Nesterov state (fp32, param-shaped;
+                              # gossip mode: stacked like params)
     delta_pending: Any        # per-cluster pseudo-grads awaiting averaging
     error: Any                # per-cluster error-feedback buffers
     comp_state: Any           # compressor warm starts (per cluster)
     t: jnp.ndarray            # outer step
 
 
+def take_row(tree: Any, c: int) -> Any:
+    """Cluster c's slice of a cluster-stacked pytree (non-arrays pass
+    through)."""
+    return jax.tree.map(
+        lambda x: x[c] if hasattr(x, "shape") and x.ndim >= 1 else x, tree)
+
+
+def stack_replicas(tree: Any, n_clusters: int) -> Any:
+    """Broadcast an unstacked tree to one identical row per cluster (the
+    gossip-mode initial state: every cluster starts from the same params)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_clusters,) + x.shape).copy(), tree)
+
+
 def init_state(params, inner_opt_state, n_clusters: int,
-               compressor: Compressor) -> DiLoCoXState:
-    stack = lambda tree: jax.tree.map(
-        lambda x: jnp.zeros((n_clusters,) + x.shape, jnp.float32), tree)
-    comp0 = compressor.init_state(params)
+               compressor: Compressor, *,
+               stacked_params: bool = False) -> DiLoCoXState:
+    """Round-0 state.  ``stacked_params=True`` is gossip mode: ``params``
+    already carries the (n_clusters, ...) leading axis (see
+    ``stack_replicas``) and the outer optimizer state is stacked with it."""
+    if stacked_params:
+        lead = jax.tree.leaves(params)[0].shape[0]
+        if lead != n_clusters:
+            raise ValueError(f"stacked params lead dim {lead} != "
+                             f"n_clusters {n_clusters}")
+        buf = lambda: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        comp0 = compressor.init_state(take_row(params, 0))
+    else:
+        buf = lambda: jax.tree.map(
+            lambda x: jnp.zeros((n_clusters,) + x.shape, jnp.float32),
+            params)
+        comp0 = compressor.init_state(params)
     comp_stacked = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n_clusters,) + x.shape).copy()
         if hasattr(x, "shape") else x, comp0)
@@ -55,8 +96,8 @@ def init_state(params, inner_opt_state, n_clusters: int,
         params=params,
         inner_opt=inner_opt_state,
         outer_opt=nesterov.init(params),
-        delta_pending=stack(params),
-        error=stack(params),
+        delta_pending=buf(),
+        error=buf(),
         comp_state=comp_stacked,
         t=jnp.zeros((), jnp.int32),
     )
@@ -85,29 +126,80 @@ def per_cluster_compress(compressor: Compressor, stacked_tree, comp_state,
     count (2-8 everywhere in this repo), not a batch dimension.
     """
     n = jax.tree.leaves(stacked_tree)[0].shape[0]
-    take = lambda tree, c: jax.tree.map(
-        lambda x: x[c] if hasattr(x, "shape") and x.ndim >= 1 else x, tree)
     hats, states = [], []
     for c in range(n):
-        hat, st = compressor.roundtrip(take(stacked_tree, c),
-                                       take(comp_state, c), rank_scalar)
+        hat, st = compressor.roundtrip(take_row(stacked_tree, c),
+                                       take_row(comp_state, c), rank_scalar)
         hats.append(hat)
         states.append(st)
     stack = lambda trees: jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
     return stack(hats), stack(states)
 
 
+def _per_cluster_view(Delta, gossip: bool):
+    """Delta as one row per cluster: gossip mixes already return stacked
+    rows; the gather mean broadcasts (bitwise identical to the historical
+    ``D[None]`` arithmetic)."""
+    if gossip:
+        return Delta
+    return jax.tree.map(lambda D: D[None], Delta)
+
+
+def _error_feedback(cfg: "RoundConfig", delta_ref, delta_hat, Delta_rows,
+                    error_like, gossip: bool):
+    """Alg. 2 EF ``e = delta - Delta`` (vs the average actually applied),
+    or classic ``e = delta - C(delta)`` with ``error_vs_own`` — one
+    implementation for the delay and sync arms.
+
+    Gossip mode ALWAYS uses the classic compressor-local form: Alg. 2's
+    ``delta - Delta`` telescopes only when Delta is the global mean; under
+    partial neighborhood mixing it re-injects the ``(I - W) delta``
+    deviation every round, and ``I - W`` has spectral radius > 1 on
+    bipartite-ish graphs (ring), which blows the replicas apart
+    exponentially.  Classic EF compensates exactly the compression
+    residual and stays bounded.
+    """
+    if not cfg.error_feedback:
+        return jax.tree.map(jnp.zeros_like, error_like)
+    if cfg.error_vs_own or gossip:
+        return jax.tree.map(lambda d, dh: d - dh, delta_ref, delta_hat)
+    return jax.tree.map(lambda d, D: d - D, delta_ref, Delta_rows)
+
+
+def _pseudo_grad(anchor, params_inner, err, gossip: bool):
+    """delta = (theta_anchor - theta_local) + e, per cluster."""
+    if gossip:
+        return jax.tree.map(
+            lambda a, p, e: (a.astype(jnp.float32)
+                             - p.astype(jnp.float32)) + e,
+            anchor, params_inner, err)
+    return jax.tree.map(
+        lambda a, p, e: (a.astype(jnp.float32)[None]
+                         - p.astype(jnp.float32)) + e,
+        anchor, params_inner, err)
+
+
 def diloco_round(state: DiLoCoXState,
                  inner_fn: Callable,          # (params, inner_opt, round_idx)
                                               #   -> (params_H, inner_opt')
                  compressor: Compressor,
-                 cluster_mean: Callable,      # stacked tree -> mean tree
+                 cluster_mean: Callable,      # stacked tree -> mean tree, or
+                                              # (returns_stacked=True) a
+                                              # stacked gossip mix
                  cfg: RoundConfig,
                  rank_scalar: Optional[jnp.ndarray] = None,
                  ):
     """One outer round (H inner steps + overlapped communication).
-    Returns (new_state, aux) where aux comes from inner_fn (e.g. losses)."""
+    Returns (new_state, aux) where aux comes from inner_fn (e.g. losses).
+
+    ``cluster_mean`` decides the communication pattern: a plain callable is
+    the global (possibly membership-masked) mean — the hub/gather outer
+    step; a callable tagged ``returns_stacked=True`` (from
+    ``repro.topology.mixing.mixing_op``) is a neighbor gossip mix and the
+    state must have been built with ``init_state(..., stacked_params=True)``.
+    """
     anchor = state.params
+    gossip = bool(getattr(cluster_mean, "returns_stacked", False))
 
     if cfg.delay:
         # ---- communication "thread": average LAST round's pseudo-grads.
@@ -119,65 +211,45 @@ def diloco_round(state: DiLoCoXState,
         else:
             delta_hat, comp_state = state.delta_pending, state.comp_state
         Delta = cluster_mean(delta_hat)
-        if cfg.error_feedback:
-            if cfg.error_vs_own:
-                err = jax.tree.map(lambda d, dh: d - dh,
-                                   state.delta_pending, delta_hat)
-            else:   # Alg. 2: e = delta^{t-1} - Delta^{t-1}
-                err = jax.tree.map(lambda d, D: d - D[None],
-                                   state.delta_pending, Delta)
-        else:
-            err = jax.tree.map(jnp.zeros_like, state.error)
+        Delta_rows = _per_cluster_view(Delta, gossip)
+        err = _error_feedback(cfg, state.delta_pending, delta_hat,
+                              Delta_rows, state.error, gossip)
 
         # ---- training "thread": H local steps from the current params.
         params_inner, inner_opt, aux = inner_fn(state.params,
                                                 state.inner_opt, state.t)
 
         # ---- join: next round's pending pseudo-grads (+ error comp.)
-        delta_new = jax.tree.map(
-            lambda a, p, e: (a.astype(jnp.float32)[None]
-                             - p.astype(jnp.float32)) + e,
-            anchor, params_inner, err)
+        delta_new = _pseudo_grad(anchor, params_inner, err, gossip)
 
-        # ---- delayed outer update on the ANCHOR (theta^{t-1})
-        def outer_apply(params, outer_opt):
-            return nesterov.update(Delta, outer_opt, params,
-                                   lr=cfg.outer_lr,
-                                   momentum=cfg.outer_momentum)
-
-        # skip the very first round (no averaged Delta yet): Delta==0 anyway
-        params_new, outer_opt = outer_apply(anchor, state.outer_opt)
+        # ---- delayed outer update on the ANCHOR (theta^{t-1}); round 0
+        # applies Delta==0 (no pending delta yet), i.e. a no-op step.
+        params_new, outer_opt = nesterov.update(
+            Delta, state.outer_opt, anchor,
+            lr=cfg.outer_lr, momentum=cfg.outer_momentum)
     else:
         # ---- synchronous DiLoCo/OpenDiLoCo: train, then average THIS
         # round's pseudo-grads and apply immediately (no overlap).
         params_inner, inner_opt, aux = inner_fn(state.params,
                                                 state.inner_opt, state.t)
-        delta_raw = jax.tree.map(
-            lambda a, p, e: (a.astype(jnp.float32)[None]
-                             - p.astype(jnp.float32)) + e,
-            anchor, params_inner, state.error)
+        delta_raw = _pseudo_grad(anchor, params_inner, state.error, gossip)
         if cfg.compress:
             delta_hat, comp_state = per_cluster_compress(
                 compressor, delta_raw, state.comp_state, rank_scalar)
         else:
             delta_hat, comp_state = delta_raw, state.comp_state
         Delta = cluster_mean(delta_hat)
-        if cfg.error_feedback:
-            if cfg.error_vs_own:
-                err = jax.tree.map(lambda d, dh: d - dh, delta_raw, delta_hat)
-            else:
-                err = jax.tree.map(lambda d, D: d - D[None], delta_raw, Delta)
-        else:
-            err = jax.tree.map(jnp.zeros_like, state.error)
-        delta_new = jax.tree.map(jnp.zeros_like, state.delta_pending)
+        Delta_rows = _per_cluster_view(Delta, gossip)
+        err = _error_feedback(cfg, delta_raw, delta_hat, Delta_rows,
+                              state.error, gossip)
+        delta_new = None          # pending stays zero in sync mode; error
+                                  # carries to next round
         params_new, outer_opt = nesterov.update(
             Delta, state.outer_opt, anchor,
             lr=cfg.outer_lr, momentum=cfg.outer_momentum)
-        # pending stays zero in sync mode; error carries to next round
-        delta_new = delta_new if cfg.delay else delta_new
 
     return DiLoCoXState(
         params=params_new, inner_opt=inner_opt, outer_opt=outer_opt,
-        delta_pending=(delta_new if cfg.delay else
+        delta_pending=(delta_new if delta_new is not None else
                        jax.tree.map(jnp.zeros_like, state.delta_pending)),
         error=err, comp_state=comp_state, t=state.t + 1), aux

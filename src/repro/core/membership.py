@@ -32,6 +32,30 @@ def masked_cluster_mean(stacked_tree: Any, alive: jnp.ndarray) -> Any:
     return jax.tree.map(one, stacked_tree)
 
 
+def masked_mixing_matrix(W: jnp.ndarray, alive: jnp.ndarray) -> jnp.ndarray:
+    """Membership-masked row renormalization of a mixing matrix.
+
+    Zeroes every row/column of a dead cluster and folds the lost off-
+    diagonal mass back into each alive row's *self*-weight, so the alive
+    block keeps rows summing to 1 while staying symmetric whenever ``W``
+    is — i.e. it remains doubly stochastic over the alive set, which is
+    what makes gossip still contract to the (alive) mean under churn.
+    Dead rows become identity rows: a dead cluster's state passes through
+    a mix untouched (it is masked out of every alive row anyway).
+
+    Works on numpy or jax inputs (returns a jax array); the simulator and
+    the proc coordinator both derive the per-round matrix through this one
+    function so the two backends can never disagree on the weights.
+    """
+    W = jnp.asarray(W, jnp.float32)
+    n = W.shape[0]
+    m = jnp.asarray(alive, jnp.float32).reshape(n)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    off = W * (1.0 - eye) * m[None, :] * m[:, None]
+    diag = jnp.diag(1.0 - off.sum(axis=1))
+    return jnp.where(m[:, None] > 0, off + diag, eye)
+
+
 def reset_rejoining(stacked_tree: Any, rejoined: jnp.ndarray,
                     fill_value: float = 0.0) -> Any:
     """Zero per-cluster buffers (pending deltas, error feedback) of clusters

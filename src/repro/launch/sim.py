@@ -26,6 +26,13 @@ links, with injectable faults, and prints the event timeline:
   # params bit-for-bit, measured vs modeled timeline within tolerance:
   python -m repro.launch.sim --backend proc --clusters 2 --check-equivalence
 
+  # NON-HUB outer sync: ring gossip — each cluster mixes compressed
+  # pseudo-gradients with its graph neighbors only (NoLoCo-style).  On the
+  # proc backend the payloads move over direct worker<->worker p2p links;
+  # the coordinator only orchestrates membership/faults:
+  python -m repro.launch.sim --backend proc --clusters 4 --topology ring \
+      --check-equivalence
+
 Fault grammar (repeatable flags):
   --straggler C:START:END:SLOWDOWN      step time x SLOWDOWN on cluster C
   --degrade START:END:FACTOR[:C]        bandwidth x FACTOR (all links or C)
@@ -141,6 +148,14 @@ def main() -> None:
     ap.add_argument("--rank", type=int, default=None)
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the §2.3 one-step-delay overlap")
+    ap.add_argument("--topology", default="star",
+                    choices=["ring", "torus", "random", "star", "full"],
+                    help="outer-sync pattern: star/full = exact global "
+                         "average (hub/all-gather, the paper's setting); "
+                         "ring/torus/random = neighbor gossip mixing")
+    ap.add_argument("--topology-degree", type=int, default=0,
+                    help="random topology: k of the k-regular graph "
+                         "(0 = auto)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--timing-only", action="store_true",
                     help="proc backend: workers skip jax (membership/"
@@ -200,6 +215,8 @@ def main() -> None:
         faults=faults, compressor=args.compressor,
         compressor_kw=kw, delay=not args.no_overlap,
         rank=(args.rank if args.compressor == "diloco_x" else None),
+        topology=args.topology, topology_degree=args.topology_degree,
+        topology_seed=args.seed,
         n_params=args.params, seed=args.seed)
 
     if args.backend == "proc":
@@ -207,6 +224,10 @@ def main() -> None:
         return
 
     if args.compare:
+        if args.topology not in ("star", "full"):
+            ap.error("--compare replays the paper's hub-based methods; "
+                     "use benchmarks/gossip_vs_gather.py for the "
+                     "gossip-vs-gather comparison")
         cmp = compare_methods(sc, rank=args.rank)
         print(f"{'method':>12} {'tokens_per_s':>14} {'x_vs_allreduce':>15}")
         for name, tps in cmp["tokens_per_s"].items():

@@ -11,11 +11,12 @@ from repro.sim.quadratic import QuadraticSpec
 from repro.sim.scenario import LinkProfile, Scenario, synthetic_shapes
 from repro.sim.simulator import (NumericProblem, compare_methods,
                                  make_quadratic_problem, simulate)
-from repro.sim.timeline import RoundEvent, Timeline, tree_hash
+from repro.sim.timeline import (RoundEvent, Timeline, combine_row_hashes,
+                                tree_hash)
 
 __all__ = [
     "FaultSchedule", "Join", "Leave", "LinkDegradation", "Straggler",
     "LinkProfile", "Scenario", "synthetic_shapes", "QuadraticSpec",
     "NumericProblem", "compare_methods", "make_quadratic_problem",
-    "simulate", "RoundEvent", "Timeline", "tree_hash",
+    "simulate", "RoundEvent", "Timeline", "tree_hash", "combine_row_hashes",
 ]

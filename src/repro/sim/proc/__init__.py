@@ -8,15 +8,23 @@ enforced by the *transport*, not a clock model.  The numeric round math is
 the same ``core/diloco.py`` / ``core/compression.py`` code the in-process
 simulator runs — per-round outer state is bit-identical between the two
 backends (see ``equivalence.py``).
+
+Topologies: gather kinds (star/full) route payloads through the
+coordinator's masked mean; gossip kinds (ring/torus/random) exchange them
+over direct worker<->worker ``PeerMesh`` links (``p2p.py``) along the
+topology's edges — the coordinator only orchestrates membership and
+faults.  Both the §2.3 delayed round and the synchronous ``delay=False``
+round are supported on every topology.
 """
 from repro.sim.proc.coordinator import run_proc
 from repro.sim.proc.equivalence import check_equivalence
+from repro.sim.proc.p2p import PeerMesh
 from repro.sim.proc.transport import (RateLimitedLink, TokenBucket,
                                       pack_frame, recv_frame, send_frame,
                                       unpack_frames)
 
 __all__ = [
-    "run_proc", "check_equivalence",
+    "run_proc", "check_equivalence", "PeerMesh",
     "RateLimitedLink", "TokenBucket",
     "pack_frame", "unpack_frames", "send_frame", "recv_frame",
 ]

@@ -1,33 +1,44 @@
 """Coordinator for the multi-process backend: spawns one OS process per
-virtual cluster, drives the outer rounds, and implements the gather-based
-outer sync as ``core.membership.masked_cluster_mean`` over the *live*
-connections.
+virtual cluster, drives the outer rounds, and realizes the outer sync for
+the scenario's topology.
+
+Gather kinds (star/full): implements the hub outer sync as
+``core.membership.masked_cluster_mean`` over the *live* connections — the
+coordinator gathers each worker's compressed pseudo-gradient, masks out
+dead/crashed members, and broadcasts the mean.  Both the §2.3 delayed round
+and the synchronous (``delay=False``) round are supported: the protocol is
+identical (round → delta → avg → done); a sync worker simply trains before
+shipping.
+
+Gossip kinds (ring/torus/random): the coordinator does NOT touch payloads.
+Workers exchange compressed deltas directly over ``PeerMesh`` p2p links
+along the topology's edges and mix them through their row of the masked
+Metropolis-Hastings matrix; the coordinator only orchestrates membership
+and faults — it hands out each round's peer addresses (+ spawn epochs, so
+respawned neighbors are re-dialed), mixing-matrix rows, and modeled
+rate/latency/compute targets, then collects per-replica ``done`` reports.
+Per-cluster outer params legitimately diverge under gossip, so the round's
+``param_hash`` is ``combine_row_hashes`` over the alive replicas' row
+hashes, and a rejoiner bootstraps from the masked *mean* of the survivors'
+(params, outer momentum) — the same arithmetic the in-process simulator
+uses, keeping the two backends bit-for-bit comparable.
 
 Per round it:
  1. applies the ``FaultSchedule`` membership events — ``Leave`` kills the
-    worker process (SIGKILL, abrupt), ``Join`` respawns a fresh process
-    bootstrapped from a surviving replica's (params, outer momentum);
+    worker process (SIGKILL, abrupt), ``Join`` respawns a fresh process;
  2. derives each worker's modeled targets (straggler-inflated compute
-    seconds, token-bucket rate from the degraded/jittered link, ring
-    all-gather charge ``(n_alive−1)·wire_bytes``) from the *same*
-    deterministic arithmetic the in-process simulator uses;
- 3. gathers the compressed pseudo-gradient payloads (each throttled by the
-    sender's token bucket), masks out dead/crashed members, broadcasts the
-    mean, and collects round-done reports — asserting that every replica's
-    post-round param hash agrees (distributed consistency check);
- 4. records a measured ``RoundEvent``: wall-clock compute/comm/round
-    seconds next to the deterministic structural fields (participants, wire
-    accounting, hashes) that ``Timeline.structural_fingerprint()`` covers.
+    seconds, token-bucket rate from the degraded/jittered link, and the
+    topology's wire charge: ring all-gather ``(n_alive−1)·wire`` for
+    gather, ``deg·wire`` on the own uplink for gossip) from the *same*
+    deterministic arithmetic the in-process simulator uses
+    (``repro.topology.accounting``);
+ 3. records a measured ``RoundEvent`` next to the deterministic structural
+    fields that ``Timeline.structural_fingerprint()`` covers.
 
 Unexpected worker death (socket EOF mid-round) is tolerated: the member is
-masked out of the mean exactly like a scheduled ``Leave`` and the round
-completes with the survivors — tagged ``crash(cN)`` on the timeline.
-
-Topology note: the hub gathers and re-broadcasts, but each member's bucket
-is charged the full ring-all-gather traffic ``(n_alive−1)·payload`` on its
-own (possibly degraded) link, so measured comm time reproduces the modeled
-ring collective over the bottleneck link; the hub's re-broadcast of the
-mean is bookkeeping, not priced wire.
+masked out exactly like a scheduled ``Leave`` and the round completes with
+the survivors — tagged ``crash(cN)`` on the timeline (gossip neighbors mix
+zeros for the silent peer that round, tagged ``p2pmiss``).
 """
 from __future__ import annotations
 
@@ -45,7 +56,8 @@ import numpy as np
 
 from repro.core import comm
 from repro.sim.scenario import Scenario
-from repro.sim.timeline import RoundEvent, Timeline, tree_hash
+from repro.sim.timeline import (RoundEvent, Timeline, combine_row_hashes,
+                                tree_hash)
 
 # repro.core.compression (-> jax) is imported inside run_proc: the worker
 # module executes this package's __init__ on spawn, and timing-only workers
@@ -72,6 +84,7 @@ class _Handle:
         self.cluster = cluster
         self.proc = proc
         self.conn: Optional[socket.socket] = None
+        self.p2p_port: Optional[int] = None
         self.q: "queue.Queue[Any]" = queue.Queue()
         self.dead = False
 
@@ -132,15 +145,19 @@ class _Handle:
                 pass
 
 
-def _spawn(cluster: int, port: int, sc: Scenario, problem,
-           crash_at: Optional[Dict[int, int]]) -> subprocess.Popen:
+def _spawn(cluster: int, port: int, sc: Scenario, problem, gossip: bool,
+           epoch: int, crash_at: Optional[Dict[int, int]]) -> subprocess.Popen:
     cfg = {
         "host": "127.0.0.1",
         "port": port,
         "cluster": cluster,
+        "n_clusters": sc.n_clusters,
         "problem": problem.to_dict() if problem is not None else None,
         "compressor": {"name": sc.compressor, "kw": dict(sc.compressor_kw)},
         "rank": sc.rank,
+        "delay": sc.delay,
+        "gossip": gossip,
+        "epoch": epoch,
         "crash_at_round": (crash_at or {}).get(cluster),
     }
     env = os.environ.copy()
@@ -162,7 +179,8 @@ def _stack_rows(rows: List[Any]):
 def run_proc(sc: Scenario, problem=None, *,
              crash_at: Optional[Dict[int, int]] = None,
              spawn_timeout_s: float = 300.0,
-             round_timeout_s: float = 300.0) -> Timeline:
+             round_timeout_s: float = 300.0,
+             p2p_timeout_s: float = 30.0) -> Timeline:
     """Run the scenario on real processes + sockets; returns a Timeline
     whose seconds are *measured* wall clock and whose structural fields
     (participants, wire accounting, per-round param hashes) are
@@ -175,15 +193,15 @@ def run_proc(sc: Scenario, problem=None, *,
     """
     from repro.core.compression import make_compressor
     from repro.sim.simulator import _jitter_factors
+    from repro.topology import (MixingMatrix, gossip_round_comm,
+                                round_wire_total)
 
-    if not sc.delay:
-        raise NotImplementedError(
-            "backend='proc' realizes the §2.3 one-step-delay overlapped "
-            "round (delay=True); the synchronous round is in-process only")
     if sc.allreduce_per_step:
         raise NotImplementedError(
-            "backend='proc' implements the gather-based outer sync, not "
-            "per-step allreduce baselines")
+            "backend='proc' implements the outer-round syncs (gather and "
+            "gossip), not per-step allreduce baselines")
+    topo = sc.topo()
+    gossip = topo.is_gossip
     numeric = problem is not None
     if numeric and problem.n_clusters != sc.n_clusters:
         raise ValueError("problem.n_clusters != scenario.n_clusters")
@@ -193,6 +211,9 @@ def run_proc(sc: Scenario, problem=None, *,
     wire = int(compressor.wire_bytes(sc.shapes(), rank=sc.rank))
     alive = (np.ones(C, bool) if sc.initial_alive is None
              else np.asarray(sc.initial_alive, bool).copy())
+    base_mm = (MixingMatrix.metropolis(topo)
+               if (gossip and numeric) else None)
+    epochs = {c: 0 for c in range(C)}
 
     if numeric:
         import jax
@@ -222,7 +243,14 @@ def run_proc(sc: Scenario, problem=None, *,
             server.settimeout(max(0.1, deadline - time.monotonic()))
             conn, _ = server.accept()
             hello = recv_frame(conn, timeout=30.0)
-            handles[int(hello["cluster"])].attach(conn)
+            h = handles[int(hello["cluster"])]
+            h.p2p_port = hello.get("p2p_port")
+            h.attach(conn)
+
+    def spawn(c: int) -> None:
+        epochs[c] += 1
+        handles[c] = _Handle(c, _spawn(c, port, sc, problem, gossip,
+                                       epochs[c], crash_at))
 
     def bootstrap(c: int, state: Optional[Dict[str, Any]]) -> None:
         handles[c].send({"type": "bootstrap",
@@ -231,23 +259,53 @@ def run_proc(sc: Scenario, problem=None, *,
                          "outer_opt": None if state is None
                          else state["outer_opt"]})
 
+    def dump_one(c: int) -> Optional[Dict[str, Any]]:
+        h = handles.get(c)
+        if h is None or h.dead or not h.send({"type": "dump"}):
+            return None
+        return h.get("state", round_timeout_s)
+
     def dump_state() -> Dict[str, Any]:
-        """Fetch the replicated outer state from the lowest live worker."""
+        """Gather mode: every worker replicates the outer state — fetch it
+        from the lowest live one."""
         for c in sorted(handles):
-            h = handles[c]
-            if alive[c] and not h.dead:
-                if h.send({"type": "dump"}):
-                    st = h.get("state", round_timeout_s)
-                    if st is not None:
-                        return st
+            if alive[c] and not handles[c].dead:
+                st = dump_one(c)
+                if st is not None:
+                    return st
         raise WorkerDied("no live worker to bootstrap a rejoin from")
+
+    def consensus_state(alive_prev: np.ndarray) -> Dict[str, Any]:
+        """Gossip mode: per-replica params differ, so a rejoiner restarts
+        from the masked MEAN of the survivors' (params, outer momentum) —
+        zeros-padded rows through the same jitted ``masked_cluster_mean``
+        the in-process simulator's consensus bootstrap uses."""
+        rows_p, rows_m, step = [], [], None
+        states = {c: dump_one(c) for c in np.flatnonzero(alive_prev)}
+        for c in range(C):
+            st = states.get(c)
+            if st is not None and st.get("params") is not None:
+                rows_p.append(st["params"])
+                rows_m.append(st["outer_opt"]["momentum"])
+                step = st["outer_opt"]["step"]
+            else:
+                rows_p.append(zeros_row)
+                rows_m.append(zeros_row)
+        if step is None:
+            raise WorkerDied("no live worker to bootstrap a rejoin from")
+        m = jnp.asarray(
+            [1.0 if states.get(c) is not None else 0.0 for c in range(C)],
+            jnp.float32)
+        params = jax.tree.map(np.asarray, mean_j(_stack_rows(rows_p), m))
+        mom = jax.tree.map(np.asarray, mean_j(_stack_rows(rows_m), m))
+        return {"params": params,
+                "outer_opt": {"step": step, "momentum": mom}}
 
     events: List[RoundEvent] = []
     final_params = None
     try:
         for c in np.flatnonzero(alive):
-            handles[int(c)] = _Handle(int(c), _spawn(int(c), port, sc,
-                                                     problem, crash_at))
+            spawn(int(c))
         for c in sorted(handles):
             if handles[c].conn is None:
                 accept_one(c, spawn_timeout_s)
@@ -255,6 +313,7 @@ def run_proc(sc: Scenario, problem=None, *,
             bootstrap(c, None)
 
         for r in range(sc.rounds):
+            prev_alive = alive.copy()
             alive, rejoined = sc.faults.membership(r, alive)
             crash_tags: List[str] = []
 
@@ -262,13 +321,21 @@ def run_proc(sc: Scenario, problem=None, *,
             for c in range(C):
                 if not alive[c] and c in handles and not handles[c].dead:
                     handles[c].kill()
-            for c in np.flatnonzero(rejoined):
-                c = int(c)
-                state = dump_state() if numeric else None
-                handles[c] = _Handle(c, _spawn(c, port, sc, problem,
-                                               crash_at))
-                accept_one(c, spawn_timeout_s)
-                bootstrap(c, state)
+            if rejoined.any():
+                # one bootstrap state serves every rejoiner this round
+                # (the survivors' consensus doesn't depend on which
+                # rejoiner asks) — matches the in-process simulator's
+                # single consensus_bootstrap call
+                if numeric:
+                    state = (consensus_state(prev_alive & alive) if gossip
+                             else dump_state())
+                else:
+                    state = None
+                for c in np.flatnonzero(rejoined):
+                    c = int(c)
+                    spawn(c)
+                    accept_one(c, spawn_timeout_s)
+                    bootstrap(c, state)
 
             alive_ids = [int(i) for i in np.flatnonzero(alive)]
             n_alive = len(alive_ids)
@@ -284,7 +351,7 @@ def run_proc(sc: Scenario, problem=None, *,
                     rank=sc.rank, t_compute_s=0.0, t_comm_s=0.0,
                     exposed_comm_s=0.0, t_round_s=0.0, wire_bytes=wire,
                     slowest_cluster=-1, bottleneck_cluster=-1, tokens=0.0,
-                    faults=sc.faults.active(r)))
+                    faults=sc.faults.active(r), wire_bytes_total=0))
                 continue
 
             # --- modeled targets: same arithmetic as simulate() -----------
@@ -297,56 +364,88 @@ def run_proc(sc: Scenario, problem=None, *,
             bws = np.array([sc.link.bytes_per_s
                             * sc.faults.bandwidth_factor(c, r) * bw_j[c]
                             for c in range(C)])
-            if n_alive >= 2:
+            if gossip:
+                gc = gossip_round_comm(topo, alive, wire, bws,
+                                       sc.link.latency_s)
+                bottleneck = gc.bottleneck_cluster
+                wire_total = gc.wire_bytes_total
+                W_r = (base_mm.masked(alive).W if base_mm is not None
+                       else None)
+            elif n_alive >= 2:
                 bottleneck = int(min(alive_ids, key=lambda c: bws[c]))
-                charge = (n_alive - 1) * wire
-                latency = (n_alive - 1) * sc.link.latency_s
+                wire_total = round_wire_total("gather", n_alive, wire)
             else:
-                bottleneck, charge, latency = -1, 0, 0.0
+                bottleneck, wire_total = -1, 0
 
             # --- drive the round ------------------------------------------
             t0 = time.monotonic()
             for c in alive_ids:
-                ok = handles[c].send({
+                rmsg: Dict[str, Any] = {
                     "type": "round", "round": r,
                     "compute_target_s": float(h_t * t_steps[c]),
-                    "charge_bytes": float(charge),
-                    "rate_bytes_per_s": (float(bws[c]) if charge else None),
-                    "latency_s": float(latency),
-                })
-                if not ok:
-                    alive[c] = False
-                    crash_tags.append(f"crash(c{c})")
-
-            hats: Dict[int, Any] = {}
-            for c in list(alive_ids):
-                if not alive[c]:
-                    continue
-                msg = handles[c].get("delta", round_timeout_s)
-                if msg is None:
-                    alive[c] = False
-                    crash_tags.append(f"crash(c{c})")
-                    handles[c].kill()
+                    "latency_s": float(sc.link.latency_s),
+                }
+                if gossip:
+                    nbrs = topo.alive_neighbors(c, alive)
+                    rmsg.update({
+                        "charge_bytes": float(wire) if nbrs else None,
+                        "rate_bytes_per_s": (float(bws[c]) if nbrs
+                                             else None),
+                        "peers": {int(j): ("127.0.0.1",
+                                           handles[j].p2p_port,
+                                           epochs[j]) for j in nbrs},
+                        "w_row": (np.asarray(W_r[c], np.float32)
+                                  if W_r is not None else None),
+                        "p2p_timeout_s": float(p2p_timeout_s),
+                    })
                 else:
-                    hats[c] = msg["hat"]
-            t_comm_meas = time.monotonic() - t0
-
-            contributors = [int(i) for i in np.flatnonzero(alive)]
-            delta_np = None
-            if numeric:
-                if not contributors:
-                    raise WorkerDied("every worker crashed mid-round")
-                stacked = _stack_rows([hats.get(c, zeros_row)
-                                       for c in range(C)])
-                Delta = mean_j(stacked, jnp.asarray(alive, jnp.float32))
-                delta_np = jax.tree.map(lambda x: np.asarray(x), Delta)
-            for c in contributors:
-                if not handles[c].send({"type": "avg", "delta": delta_np}):
+                    charge = (n_alive - 1) * wire if n_alive >= 2 else 0
+                    rmsg.update({
+                        "charge_bytes": float(charge),
+                        "rate_bytes_per_s": (float(bws[c]) if charge
+                                             else None),
+                        "latency_s": float((n_alive - 1)
+                                           * sc.link.latency_s),
+                    })
+                if not handles[c].send(rmsg):
                     alive[c] = False
                     crash_tags.append(f"crash(c{c})")
 
-            t_compute_meas = 0.0
-            losses, hashes = [], []
+            if not gossip:
+                # central gather -> masked mean -> broadcast
+                hats: Dict[int, Any] = {}
+                for c in list(alive_ids):
+                    if not alive[c]:
+                        continue
+                    msg = handles[c].get("delta", round_timeout_s)
+                    if msg is None:
+                        alive[c] = False
+                        crash_tags.append(f"crash(c{c})")
+                        handles[c].kill()
+                    else:
+                        hats[c] = msg["hat"]
+                t_gather_meas = time.monotonic() - t0
+
+                contributors = [int(i) for i in np.flatnonzero(alive)]
+                delta_np = None
+                if numeric:
+                    if not contributors:
+                        raise WorkerDied("every worker crashed mid-round")
+                    stacked = _stack_rows([hats.get(c, zeros_row)
+                                           for c in range(C)])
+                    Delta = mean_j(stacked, jnp.asarray(alive, jnp.float32))
+                    delta_np = jax.tree.map(lambda x: np.asarray(x), Delta)
+                for c in contributors:
+                    if not handles[c].send({"type": "avg",
+                                            "delta": delta_np}):
+                        alive[c] = False
+                        crash_tags.append(f"crash(c{c})")
+            else:
+                contributors = list(alive_ids)
+
+            # --- collect round-done reports -------------------------------
+            t_compute_meas, t_comm_workers = 0.0, 0.0
+            losses, hash_rows, miss_tags = [], [], []
             for c in list(contributors):
                 if not alive[c]:
                     continue
@@ -358,20 +457,38 @@ def run_proc(sc: Scenario, problem=None, *,
                     continue
                 t_compute_meas = max(t_compute_meas,
                                      float(msg["t_compute"]))
+                t_comm_workers = max(t_comm_workers,
+                                     float(msg.get("t_comm", 0.0)))
                 if msg.get("loss") is not None:
                     losses.append(float(msg["loss"]))
                 if msg.get("param_hash") is not None:
-                    hashes.append(msg["param_hash"])
+                    hash_rows.append((c, msg["param_hash"]))
+                for j in msg.get("missing", []):
+                    miss_tags.append(f"p2pmiss(c{c}<-c{j})")
             t_round_meas = time.monotonic() - t0
 
-            if numeric and len(set(hashes)) > 1:
-                raise WorkerDied(
-                    f"replica divergence at round {r}: param hashes "
-                    f"{sorted(set(hashes))}")
+            # measured comm time: the central gather phase for the
+            # overlapped hub round; otherwise the slowest worker's own
+            # comm leg (sync trains first; gossip never routes through us)
+            t_comm_meas = (t_gather_meas if (not gossip and sc.delay)
+                           else t_comm_workers)
 
-            tokens = sc.tokens_per_step * h_t * len(contributors) / max(C, 1)
+            param_hash = None
+            if numeric and hash_rows:
+                if gossip:
+                    param_hash = combine_row_hashes(hash_rows)
+                else:
+                    uniq = sorted({h for _, h in hash_rows})
+                    if len(uniq) > 1:
+                        raise WorkerDied(
+                            f"replica divergence at round {r}: param "
+                            f"hashes {uniq}")
+                    param_hash = uniq[0]
+
+            survivors = [int(i) for i in np.flatnonzero(alive)]
+            tokens = sc.tokens_per_step * h_t * len(survivors) / max(C, 1)
             events.append(RoundEvent(
-                round=r, alive=tuple(contributors),
+                round=r, alive=tuple(survivors),
                 rejoined=tuple(int(i) for i in np.flatnonzero(rejoined)),
                 h_steps=h_t, rank=sc.rank,
                 t_compute_s=t_compute_meas, t_comm_s=t_comm_meas,
@@ -379,12 +496,20 @@ def run_proc(sc: Scenario, problem=None, *,
                 t_round_s=t_round_meas, wire_bytes=wire,
                 slowest_cluster=slowest, bottleneck_cluster=bottleneck,
                 tokens=tokens,
-                faults=sc.faults.active(r) + tuple(crash_tags),
+                faults=(sc.faults.active(r) + tuple(crash_tags)
+                        + tuple(sorted(miss_tags))),
                 loss=(float(np.mean(losses)) if losses else None),
-                param_hash=(hashes[0] if hashes else None)))
+                param_hash=param_hash, wire_bytes_total=wire_total))
 
         if numeric and alive.any():
-            final_params = dump_state()["params"]
+            if gossip:
+                final_params = {}
+                for c in np.flatnonzero(alive):
+                    st = dump_one(int(c))
+                    if st is not None and st.get("params") is not None:
+                        final_params[int(c)] = st["params"]
+            else:
+                final_params = dump_state()["params"]
     finally:
         for h in handles.values():
             h.send({"type": "stop"})

@@ -1,15 +1,20 @@
 """Equivalence harness: proc backend vs in-process simulator.
 
-Two guarantees, checked per round on the same ``Scenario`` + seeds:
+Two guarantees, checked per round on the same ``Scenario`` + seeds — for
+EVERY topology (gather kinds and gossip kinds) and both the §2.3 delayed
+and the synchronous (``delay=False``) round:
 
  1. **Numerics, bit-for-bit**: the proc backend's per-round outer state —
-    hence every averaged pseudo-gradient Δ^t that produced it — must hash
-    identically to the in-process simulator's (``RoundEvent.param_hash``,
-    sha256 over raw float bytes).  This holds because both backends execute
-    the same per-cluster compiled computations
-    (``core.diloco.per_cluster_compress``, the per-cluster inner slice,
-    ``membership.masked_cluster_mean``, the Nesterov outer update) — no
-    tolerance, equality of bytes.
+    hence every averaged/mixed pseudo-gradient Δ^t that produced it — must
+    hash identically to the in-process simulator's
+    (``RoundEvent.param_hash``, sha256 over raw float bytes).  This holds
+    because both backends execute the same per-cluster compiled
+    computations (``core.diloco.per_cluster_compress``, the per-cluster
+    inner slice, ``membership.masked_cluster_mean`` /
+    ``topology.mixing.mix_row``, the Nesterov outer update) — no
+    tolerance, equality of bytes.  Under gossip the per-round hash is
+    ``combine_row_hashes`` over the alive replicas (per-cluster params
+    legitimately differ), so equality still certifies every replica.
  2. **Timing, within tolerance**: the proc backend's *measured* wall-clock
     round times must agree with the in-process *modeled* ones.  Rounds with
     rejoins are excluded (process spawn + XLA warmup is real time the clock
@@ -64,6 +69,8 @@ def check_equivalence(sc: Scenario, problem=None, *,
         struct_ok = (ep.alive == em.alive and ep.rejoined == em.rejoined
                      and ep.h_steps == em.h_steps and ep.rank == em.rank
                      and ep.wire_bytes == em.wire_bytes
+                     and ep.wire_bytes_total == em.wire_bytes_total
+                     and ep.faults == em.faults
                      and ep.slowest_cluster == em.slowest_cluster
                      and ep.bottleneck_cluster == em.bottleneck_cluster)
         row["structural"] = struct_ok
@@ -99,9 +106,20 @@ def check_equivalence(sc: Scenario, problem=None, *,
     if numeric and not crash_at:
         fp = getattr(tl_proc, "final_params", None)
         fm = getattr(tl_model, "final_params", None)
-        same = (fp is not None and fm is not None and all(
-            np.array_equal(np.asarray(fp[k]), np.asarray(fm[k]))
-            for k in fp))
+        if sc.is_gossip:
+            # proc: {cluster: row tree} for the finally-alive replicas;
+            # model: the stacked tree — compare row-by-row (dead rows have
+            # no worker to compare against and are masked out of every
+            # mix/bootstrap anyway)
+            same = (fp is not None and fm is not None and len(fp) > 0
+                    and all(
+                        np.array_equal(np.asarray(row[k]),
+                                       np.asarray(fm[k])[c])
+                        for c, row in fp.items() for k in row))
+        else:
+            same = (fp is not None and fm is not None and all(
+                np.array_equal(np.asarray(fp[k]), np.asarray(fm[k]))
+                for k in fp))
         report["final_params_bitwise_equal"] = bool(same)
         report["hash_match"] &= bool(same)
 

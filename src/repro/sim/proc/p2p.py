@@ -1,0 +1,233 @@
+"""Peer-to-peer worker<->worker links for gossip topologies.
+
+Under a gossip topology the outer-step payloads do NOT pass through the
+coordinator: each worker ships its compressed pseudo-gradient directly to
+its graph neighbors over TCP, throttled by ONE shared token bucket per
+worker — its uplink: sends to different neighbors serialize on it, exactly
+like the ``deg * wire / bw`` clock-model charge.
+
+``PeerMesh`` owns:
+ - a listening socket (opened before the worker says hello, so its port
+   rides in the hello frame and the coordinator can hand out addresses);
+ - a dial rule: for an edge (i, j) with i < j, *i* dials — deterministic,
+   so both endpoints agree who connects without a rendezvous protocol;
+ - per-peer *epochs* (the coordinator's spawn counter): a respawned
+   neighbor gets a fresh epoch, which invalidates the cached link and
+   triggers a re-dial / re-accept instead of talking to a dead socket;
+ - per-link reader threads feeding one inbox queue, so a worker can keep
+   receiving while its own sends are blocked in the token bucket (no
+   distributed deadlock).
+
+The coordinator never sees these frames; it only orchestrates membership
+and faults (which peers exist this round, and at what rate/latency).
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import threading
+import time
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+from repro.sim.proc.transport import TokenBucket, recv_frame, send_frame
+
+
+class PeerMesh:
+    def __init__(self, my_id: int, host: str = "127.0.0.1"):
+        self.my_id = int(my_id)
+        self.host = host
+        self._server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._server.bind((host, 0))
+        self._server.listen(16)
+        self.port = self._server.getsockname()[1]
+        self._links: Dict[int, Tuple[int, socket.socket]] = {}  # id->(epoch,
+        self._lock = threading.Lock()                           #     sock)
+        self._ready = threading.Condition(self._lock)
+        self.inbox: "queue.Queue[Tuple[int, Any]]" = queue.Queue()
+        self._stash: Dict[Tuple[int, int], Any] = {}  # (round, peer) -> msg
+        self._bucket: Optional[TokenBucket] = None
+        self.latency_s = 0.0
+        self._send_lock = threading.Lock()
+        self._closing = False
+        threading.Thread(target=self._accept_loop, daemon=True).start()
+
+    # ---- connection management -------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn, _ = self._server.accept()
+            except OSError:
+                return
+            try:
+                hello = recv_frame(conn, timeout=30.0)
+                peer = int(hello["cluster"])
+                epoch = int(hello.get("epoch", 0))
+            except Exception:
+                conn.close()
+                continue
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._install(peer, epoch, conn)
+
+    def _install(self, peer: int, epoch: int, conn: socket.socket) -> None:
+        with self._ready:
+            old = self._links.pop(peer, None)
+            if old is not None:
+                try:
+                    old[1].close()
+                except OSError:
+                    pass
+            self._links[peer] = (epoch, conn)
+            self._ready.notify_all()
+        threading.Thread(target=self._reader, args=(peer, conn),
+                         daemon=True).start()
+
+    def _reader(self, peer: int, conn: socket.socket) -> None:
+        try:
+            while True:
+                self.inbox.put((peer, recv_frame(conn)))
+        except (ConnectionError, OSError, ValueError, EOFError):
+            with self._ready:
+                if peer in self._links and self._links[peer][1] is conn:
+                    del self._links[peer]
+                self._ready.notify_all()
+
+    def _dial(self, peer: int, host: str, port: int, epoch: int,
+              my_epoch: int, timeout_s: float) -> None:
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                conn = socket.create_connection((host, port), timeout=5.0)
+                break
+            except OSError:
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.05)
+        conn.settimeout(None)
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        send_frame(conn, {"type": "p2p_hello", "cluster": self.my_id,
+                          "epoch": my_epoch})
+        self._install(peer, epoch, conn)
+
+    def set_peers(self, peers: Dict[int, Tuple[str, int, int]],
+                  my_epoch: int, timeout_s: float = 30.0) -> set:
+        """Reconcile links with this round's peer set: {id: (host, port,
+        epoch)}.  Stale epochs are dropped; missing links are dialed (by
+        the lower id) or awaited (inbound, from the higher id).
+
+        Best-effort, never raises: a peer that cannot be reached within
+        the (shared) deadline — e.g. it crashed between the coordinator's
+        round message and our dial — is simply absent from the returned
+        ready set; the caller mixes zeros for its silence, exactly like a
+        mid-round crash."""
+        deadline = time.monotonic() + timeout_s
+        ready = set()
+        for peer, (host, port, epoch) in peers.items():
+            peer = int(peer)
+            with self._ready:
+                cur = self._links.get(peer)
+                if cur is not None and cur[0] != epoch:
+                    try:
+                        cur[1].close()
+                    except OSError:
+                        pass
+                    del self._links[peer]
+                    cur = None
+                have = cur is not None
+            if have:
+                ready.add(peer)
+            elif self.my_id < peer:
+                try:
+                    self._dial(peer, host, port, epoch, my_epoch,
+                               max(0.0, deadline - time.monotonic()))
+                    ready.add(peer)
+                except OSError:
+                    pass                    # crashed/unreachable: zeros
+        # inbound side: wait (bounded) for the higher->me links
+        with self._ready:
+            for peer, (_, _, epoch) in peers.items():
+                peer = int(peer)
+                if self.my_id < peer or peer in ready:
+                    continue
+                while (peer not in self._links
+                       or self._links[peer][0] != epoch):
+                    left = deadline - time.monotonic()
+                    if left <= 0 or not self._ready.wait(timeout=left):
+                        break               # silent peer: zeros
+                else:
+                    ready.add(peer)
+        return ready
+
+    # ---- data plane -------------------------------------------------------
+
+    def configure(self, rate_bytes_per_s: Optional[float],
+                  latency_s: float = 0.0) -> None:
+        """Per-round uplink model: ONE bucket shared by all peer sends."""
+        self._bucket = (TokenBucket(rate_bytes_per_s)
+                        if rate_bytes_per_s else None)
+        self.latency_s = float(latency_s)
+
+    def send(self, peer: int, obj: Any,
+             charge_bytes: Optional[float] = None) -> float:
+        """Charge the shared uplink bucket, then frame+send to ``peer``.
+        Returns elapsed seconds.  Raises ConnectionError if the link is
+        gone (caller decides whether that peer's silence is tolerable)."""
+        with self._ready:
+            link = self._links.get(int(peer))
+        if link is None:
+            raise ConnectionError(f"no link to peer c{peer}")
+        t0 = time.monotonic()
+        with self._send_lock:
+            if self.latency_s > 0:
+                time.sleep(self.latency_s)
+            if self._bucket is not None and charge_bytes:
+                self._bucket.consume(float(charge_bytes))
+            send_frame(link[1], obj)
+        return time.monotonic() - t0
+
+    def gather(self, rnd: int, expect: Iterable[int],
+               timeout_s: float) -> Dict[int, Any]:
+        """Collect one ``{"type": "gossip", "round": rnd}`` frame from each
+        expected peer.  A peer that stays silent past the deadline (crash)
+        is simply absent from the result — the caller substitutes zeros.
+        Frames for other rounds are stashed, never dropped."""
+        expect = {int(p) for p in expect}
+        got: Dict[int, Any] = {}
+        # prune stale stash entries: a frame for a PAST round (a straggler
+        # that missed its gather deadline) can never be consumed again —
+        # dropping it bounds the stash to the current round's lookahead
+        for key in [k for k in self._stash if k[0] < rnd]:
+            del self._stash[key]
+        for p in list(expect):
+            msg = self._stash.pop((rnd, p), None)
+            if msg is not None:
+                got[p] = msg
+        deadline = time.monotonic() + timeout_s
+        while len(got) < len(expect):
+            try:
+                peer, msg = self.inbox.get(
+                    timeout=max(0.0, deadline - time.monotonic()))
+            except queue.Empty:
+                break
+            if msg.get("type") != "gossip":
+                continue
+            r = int(msg.get("round", -1))
+            if r == rnd and peer in expect and peer not in got:
+                got[peer] = msg
+            elif r != rnd:
+                self._stash[(r, peer)] = msg
+        return got
+
+    def close(self) -> None:
+        self._closing = True
+        try:
+            self._server.close()
+        except OSError:
+            pass
+        with self._ready:
+            for _, conn in self._links.values():
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            self._links.clear()

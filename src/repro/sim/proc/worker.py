@@ -1,24 +1,27 @@
 """Worker process for the multi-process backend: ONE virtual cluster.
 
 Runs the real DiLoCoX round math for its cluster — the per-cluster slice of
-``core/diloco.py``'s delayed round, with ``core/compression.py`` payloads:
+``core/diloco.py``'s round, with ``core/compression.py`` payloads.  Four
+modes, the cross product of overlap x topology:
 
- - **comm thread**: compress last round's pending pseudo-gradient
-   (``compressor.roundtrip``, warm-started) and push it to the coordinator
-   through the token-bucket-limited socket.  This literally runs while the
-   inner steps run — the §2.3 one-step-delay overlap as two OS threads, not
-   a clock model.
- - **train thread** (main): H local AdamW steps from the current global
-   params, then sleep-padded to the round's modeled compute target (the
-   quadratic problem is microseconds; the pad is what makes stragglers
-   *actually* slow).
- - **join**: receive the masked cluster mean Δ, compute Alg. 2 error
-   feedback (e = δ − Δ), the next pending delta, and apply the Nesterov
-   outer update locally — every worker holds an identical replica of
-   (params, outer momentum), asserted round-by-round via param hashes.
+ - **delay + gather** (the seed mode): a comm thread compresses LAST
+   round's pending pseudo-gradient and pushes it to the coordinator
+   through the token-bucket-limited socket while the main thread runs the
+   H local AdamW steps (§2.3's one-step-delay overlap as two OS threads);
+   the coordinator broadcasts the masked mean back.
+ - **sync + gather** (``delay=False``, DiLoCo/OpenDiLoCo): train first,
+   then compress THIS round's pseudo-gradient (with the carried error
+   buffer), ship it, and apply the returned mean — nothing overlaps.
+ - **delay/sync + gossip** (ring/torus/random topologies): payloads go
+   over direct worker<->worker ``PeerMesh`` links instead of the
+   coordinator; each worker mixes its own and its neighbors' compressed
+   deltas through its row of the doubly-stochastic mixing matrix
+   (``repro.topology.mixing.mix_row`` — the same unrolled multiply-add
+   chain the in-process simulator runs, hence bit-identical rows).  The
+   coordinator only orchestrates membership and faults.
 
 Timing-only mode (``problem: null``) skips jax entirely (fast spawn) and
-exercises just membership/transport/timing.
+exercises membership/transport/timing, including the p2p exchange.
 
 Invocation (by the coordinator): ``python -m repro.sim.proc.worker '<json>'``.
 """
@@ -34,6 +37,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.sim.proc.p2p import PeerMesh
 from repro.sim.proc.transport import RateLimitedLink
 from repro.sim.timeline import tree_hash
 
@@ -62,10 +66,12 @@ class _NumericRuntime:
         from repro.core.compression import make_compressor
         from repro.optim import adamw, nesterov
         from repro.sim.quadratic import QuadraticSpec
+        from repro.topology.mixing import mix_row
 
         self.jax, self.jnp = jax, jnp
         self.nesterov = nesterov
         spec = QuadraticSpec.from_dict(cfg["problem"])
+        self.n_clusters = int(cfg.get("n_clusters", spec.n_clusters))
         self.cluster = jnp.asarray(cfg["cluster"], jnp.int32)
         self.compressor = make_compressor(cfg["compressor"]["name"],
                                           **cfg["compressor"]["kw"])
@@ -75,8 +81,10 @@ class _NumericRuntime:
         self.params = spec.init_params()
         self.inner_opt = adamw.init(self.params)
         self.outer_opt = nesterov.init(self.params)
-        self.pending = jax.tree.map(
+        self.zeros = jax.tree.map(
             lambda x: jnp.zeros_like(x, jnp.float32), self.params)
+        self.pending = self.zeros          # delay mode: delta^{t-1}
+        self.error = self.zeros            # sync mode: carried EF buffer
         self.comp_state = self.compressor.init_state(self.params)
 
         one_cluster = spec.one_cluster_fn()
@@ -85,7 +93,8 @@ class _NumericRuntime:
             lambda d, s: self.compressor.roundtrip(d, s, rank_scalar))
 
         def err_and_delta(pending, Delta, anchor, params_inner):
-            # Alg. 2 error feedback vs the global average: e = δ^{t-1} − Δ
+            # Alg. 2 error feedback vs the average actually applied:
+            # e = δ^{t-1} − Δ, then next pending = (anchor − local) + e
             err = jax.tree.map(lambda d, D: d - D, pending, Delta)
             return jax.tree.map(
                 lambda a, p, e: (a.astype(jnp.float32)
@@ -93,10 +102,21 @@ class _NumericRuntime:
                 anchor, params_inner, err)
 
         self.ed_j = jax.jit(err_and_delta)
+        # sync-mode pieces: raw pseudo-grad with carried error, then the
+        # post-average error for the NEXT round
+        self.raw_j = jax.jit(lambda a, p, e: jax.tree.map(
+            lambda ai, pi, ei: (ai.astype(jnp.float32)
+                                - pi.astype(jnp.float32)) + ei, a, p, e))
+        self.err_j = jax.jit(lambda raw, D: jax.tree.map(
+            lambda d, Di: d - Di, raw, D))
         self.outer_j = jax.jit(lambda D, o, p: nesterov.update(
             D, o, p, lr=spec.outer_lr, momentum=spec.outer_momentum))
+        # gossip: this cluster's row of the mixing matrix applied to the
+        # (zeros-padded) per-cluster payload list — the same unrolled chain
+        # mix_stacked runs per row in the in-process simulator
+        self.mix_j = jax.jit(lambda w_row, parts: mix_row(w_row, parts))
 
-    def warmup(self) -> None:
+    def warmup(self, gossip: bool) -> None:
         """Compile every jitted function on the real shapes so round 0's
         measured time is transport+sleep, not XLA compile."""
         jax = self.jax
@@ -104,13 +124,34 @@ class _NumericRuntime:
         p_inner, _, losses = self.inner_j(self.params, self.inner_opt,
                                           self.cluster)
         pend = self.ed_j(self.pending, hat, self.params, p_inner)
+        raw = self.raw_j(self.params, p_inner, self.error)
+        err = self.err_j(raw, hat)
         out = self.outer_j(hat, self.outer_opt, self.params)
-        jax.block_until_ready((pend, out))
+        todo = [pend, raw, err, out]
+        if gossip:
+            w0 = self.jnp.zeros((self.n_clusters,), self.jnp.float32)
+            todo.append(self.mix_j(w0, tuple([self.zeros]
+                                             * self.n_clusters)))
+        jax.block_until_ready(todo)
+
+    def mix(self, w_row: np.ndarray, hats: Dict[int, Any], own_hat) -> Any:
+        """Δ_row = Σ_j w_row[j] · hat_j with zeros for absent clusters."""
+        jnp = self.jnp
+        parts = []
+        for j in range(self.n_clusters):
+            if j == int(self.cluster):
+                parts.append(own_hat)
+            elif j in hats and hats[j] is not None:
+                parts.append(self.jax.tree.map(jnp.asarray, hats[j]))
+            else:
+                parts.append(self.zeros)
+        return self.mix_j(jnp.asarray(w_row, jnp.float32), tuple(parts))
 
     def load(self, params_np: Any, outer_np: Optional[Dict[str, Any]]):
-        """Bootstrap a (re)spawned worker from the coordinator's replica:
-        current global params + outer momentum; inner/compressor state stays
-        freshly initialized (a rejoining cluster missed the interim)."""
+        """Bootstrap a (re)spawned worker from the coordinator's replica
+        (gather: a surviving replica's state; gossip: the masked mean of
+        the survivors): current params + outer momentum; inner/compressor
+        state stays freshly initialized (a rejoiner missed the interim)."""
         jax, jnp = self.jax, self.jnp
         self.params = jax.tree.map(jnp.asarray, params_np)
         if outer_np is not None:
@@ -131,18 +172,48 @@ def main(argv=None) -> None:
     cfg = json.loads(argv[0])
     cluster = int(cfg["cluster"])
     crash_at = cfg.get("crash_at_round")
+    delay = bool(cfg.get("delay", True))
+    gossip = bool(cfg.get("gossip", False))
+    my_epoch = int(cfg.get("epoch", 0))
 
+    mesh = PeerMesh(cluster) if gossip else None
     rt = _NumericRuntime(cfg) if cfg.get("problem") is not None else None
     if rt is not None:
-        rt.warmup()
+        rt.warmup(gossip)
 
     sock = _connect(cfg.get("host", "127.0.0.1"), int(cfg["port"]))
     link = RateLimitedLink(sock)
-    link.send({"type": "hello", "cluster": cluster, "pid": os.getpid()})
+    link.send({"type": "hello", "cluster": cluster, "pid": os.getpid(),
+               "p2p_port": mesh.port if mesh else None})
     boot = link.recv(timeout=60.0)
     assert boot["type"] == "bootstrap", boot
     if rt is not None and boot.get("params") is not None:
         rt.load(boot["params"], boot.get("outer_opt"))
+
+    def exchange_p2p(msg: Dict[str, Any], r: int, payload) -> Dict[int, Any]:
+        """Ship own compressed delta to every alive neighbor (each send
+        charged ``charge_bytes`` on the shared uplink bucket), then collect
+        theirs.  A silent/crashed/unreachable neighbor yields no frame —
+        the caller mixes zeros in its place (tolerated, flagged upstream).
+        Every wait in here is bounded by the round's ``p2p_timeout_s``."""
+        timeout = float(msg.get("p2p_timeout_s", 30.0))
+        peers = {int(j): tuple(addr) for j, addr in msg["peers"].items()}
+        ready = mesh.set_peers(peers, my_epoch, timeout_s=timeout)
+        got: Dict[int, Any] = {}
+        for j in sorted(ready):
+            try:
+                mesh.send(j, {"type": "gossip", "round": r,
+                              "cluster": cluster, "hat": payload},
+                          charge_bytes=msg.get("charge_bytes"))
+            except (ConnectionError, OSError):
+                pass
+        # gather only from peers with a live link: a neighbor that could
+        # not be reached at all can never deliver a frame, and waiting the
+        # full timeout for it would stall every survivor in a crash round
+        frames = mesh.gather(r, ready, timeout_s=timeout)
+        for j, fr in frames.items():
+            got[j] = fr.get("hat")
+        return got
 
     while True:
         msg = link.recv()
@@ -150,7 +221,7 @@ def main(argv=None) -> None:
             break
         if msg["type"] == "dump":
             # coordinator wants the replicated outer state (to bootstrap a
-            # respawning worker); reply and keep waiting for the next round
+            # respawning worker, or the final params); reply and keep going
             state = {"type": "state", "params": None, "outer_opt": None}
             if rt is not None:
                 state["params"] = _to_np(rt.params)
@@ -164,60 +235,111 @@ def main(argv=None) -> None:
         if crash_at is not None and r == int(crash_at):
             os._exit(17)          # injected hard crash, before any send
 
-        link.configure(msg.get("rate_bytes_per_s"),
-                       msg.get("latency_s", 0.0))
-        comm_out: Dict[str, Any] = {}
+        link.configure(msg.get("rate_bytes_per_s") if not gossip else None,
+                       msg.get("latency_s", 0.0) if not gossip else 0.0)
+        if mesh is not None:
+            mesh.configure(msg.get("rate_bytes_per_s"),
+                           msg.get("latency_s", 0.0))
+        comm_out: Dict[str, Any] = {"t_comm": 0.0}
 
-        def comm_leg():
+        def compute_leg():
             t0 = time.monotonic()
+            out = {"p_inner": None, "inner_new": None, "loss": None}
             if rt is not None:
-                hat, comp_new = rt.compress_j(rt.pending, rt.comp_state)
-                comm_out["comp_state"] = comp_new
-                payload = _to_np(hat)
-            else:
-                payload = None
-            link.send({"type": "delta", "round": r, "cluster": cluster,
-                       "hat": payload},
-                      charge_bytes=msg.get("charge_bytes"))
+                p_inner, inner_new, losses = rt.inner_j(
+                    rt.params, rt.inner_opt, rt.cluster)
+                rt.jax.block_until_ready(p_inner)
+                out.update(p_inner=p_inner, inner_new=inner_new,
+                           loss=float(np.mean(np.asarray(losses))))
+            pad = float(msg.get("compute_target_s", 0.0)) \
+                - (time.monotonic() - t0)
+            if pad > 0:
+                time.sleep(pad)
+            out["t_compute"] = time.monotonic() - t0
+            return out
+
+        def comm_leg(pending_tree):
+            """Compress + ship (delay mode: runs overlapped with compute).
+            Returns nothing; results land in comm_out — including any
+            exception, so the overlapped thread's root cause resurfaces on
+            the main thread instead of a downstream KeyError/timeout."""
+            t0 = time.monotonic()
+            try:
+                if rt is not None:
+                    hat, comp_new = rt.compress_j(pending_tree,
+                                                  rt.comp_state)
+                    comm_out["hat"] = hat
+                    comm_out["comp_state"] = comp_new
+                    payload = _to_np(hat)
+                else:
+                    comm_out["hat"] = None
+                    payload = None
+                if gossip:
+                    comm_out["peer_hats"] = exchange_p2p(msg, r, payload)
+                else:
+                    link.send({"type": "delta", "round": r,
+                               "cluster": cluster, "hat": payload},
+                              charge_bytes=msg.get("charge_bytes"))
+            except BaseException as e:
+                comm_out["error"] = e
+                raise
             comm_out["t_comm"] = time.monotonic() - t0
 
-        tx = threading.Thread(target=comm_leg, daemon=True)
-        tx.start()
-
-        t0 = time.monotonic()
-        loss = None
-        p_inner = inner_new = None
-        if rt is not None:
-            p_inner, inner_new, losses = rt.inner_j(rt.params, rt.inner_opt,
-                                                    rt.cluster)
-            rt.jax.block_until_ready(p_inner)
-            loss = float(np.mean(np.asarray(losses)))
-        pad = float(msg.get("compute_target_s", 0.0)) \
-            - (time.monotonic() - t0)
-        if pad > 0:
-            time.sleep(pad)
-        t_compute = time.monotonic() - t0
-
-        tx.join()
-        avg = link.recv()
-        assert avg["type"] == "avg", avg
-
         param_hash = None
+        raw = None
+        if delay:
+            # ---- §2.3 overlap: ship δ^{t-1} while training this round
+            tx = threading.Thread(target=comm_leg,
+                                  args=(rt.pending if rt else None,),
+                                  daemon=True)
+            tx.start()
+            cmp_ = compute_leg()
+            tx.join()
+            if comm_out.get("error") is not None:
+                raise comm_out["error"]
+        else:
+            # ---- synchronous round: train, then sync THIS round's delta
+            cmp_ = compute_leg()
+            if rt is not None:
+                raw = rt.raw_j(rt.params, cmp_["p_inner"], rt.error)
+            comm_leg(raw)
+
+        if gossip:
+            Delta = (rt.mix(msg["w_row"], comm_out["peer_hats"],
+                            comm_out["hat"]) if rt is not None else None)
+        else:
+            avg = link.recv()
+            assert avg["type"] == "avg", avg
+            Delta = (rt.jax.tree.map(rt.jnp.asarray, avg["delta"])
+                     if rt is not None else None)
+
         if rt is not None:
-            jnp = rt.jnp
-            Delta = rt.jax.tree.map(jnp.asarray, avg["delta"])
             anchor = rt.params
-            rt.pending = rt.ed_j(rt.pending, Delta, anchor, p_inner)
+            # gossip: classic compressor-local EF (e = δ − C(δ)) — see
+            # core.diloco._error_feedback for why Alg. 2's δ − Δ form is
+            # unstable under partial mixing
+            err_ref = comm_out["hat"] if gossip else Delta
+            if delay:
+                rt.pending = rt.ed_j(rt.pending, err_ref, anchor,
+                                     cmp_["p_inner"])
+            else:
+                rt.error = rt.err_j(raw, err_ref)
             rt.params, rt.outer_opt = rt.outer_j(Delta, rt.outer_opt,
                                                  anchor)
-            rt.inner_opt = inner_new
+            rt.inner_opt = cmp_["inner_new"]
             rt.comp_state = comm_out["comp_state"]
             param_hash = tree_hash(rt.params)
 
         link.send({"type": "done", "round": r, "cluster": cluster,
-                   "t_compute": t_compute, "t_comm": comm_out["t_comm"],
-                   "param_hash": param_hash, "loss": loss})
+                   "t_compute": cmp_["t_compute"],
+                   "t_comm": comm_out["t_comm"],
+                   "missing": (sorted(set(int(j) for j in msg["peers"])
+                                      - set(comm_out.get("peer_hats", {})))
+                               if gossip else []),
+                   "param_hash": param_hash, "loss": cmp_["loss"]})
 
+    if mesh is not None:
+        mesh.close()
     link.close()
 
 

@@ -131,6 +131,15 @@ class QuadraticSpec:
             f = lambda opt, c: one_cluster(params_g, opt, c)
             return jax.vmap(f)(inner_opt_stacked, jnp.arange(n))
 
+        def inner_fn_stacked(params_stacked, inner_opt_stacked, t):
+            # gossip mode: every cluster trains from its OWN params row.
+            # The quadratic is elementwise + per-matrix reductions, so the
+            # vmapped rows stay bit-identical to a lone worker running
+            # one_cluster on its row (matmul-free — the property the
+            # sim/proc equivalence gate leans on).
+            return jax.vmap(one_cluster)(params_stacked, inner_opt_stacked,
+                                         jnp.arange(n))
+
         def eval_fn(p):
             return float(np.mean([float(cluster_loss(p, c))
                                   for c in range(n)]))
@@ -138,7 +147,8 @@ class QuadraticSpec:
         return NumericProblem(params=params, inner_opt_stacked=inner_stacked,
                               inner_fn=inner_fn, outer_lr=self.outer_lr,
                               outer_momentum=self.outer_momentum,
-                              eval_fn=eval_fn)
+                              eval_fn=eval_fn,
+                              inner_fn_stacked=inner_fn_stacked)
 
 
 def make_quadratic_problem(n_clusters: int, *, d: int = 16, n_mats: int = 2,

@@ -53,6 +53,13 @@ class Scenario:
     allreduce_per_step: bool = False     # vanilla-DDP/CocktailSGD style:
                                          # ring allreduce EVERY local step
 
+    # outer-sync communication pattern (repro.topology): "star" is the
+    # seed hub/gather, "full" the same average with all-to-all accounting,
+    # "ring"/"torus"/"random" are neighbor-gossip mixing graphs
+    topology: str = "star"
+    topology_degree: int = 0             # random k-regular degree (0=auto)
+    topology_seed: int = 0               # random topology edge seed
+
     # what is being shipped: explicit shapes win; else a synthetic tree
     param_shapes: Optional[Dict[str, Tuple[int, ...]]] = None
     n_params: float = 1.0e9
@@ -66,6 +73,19 @@ class Scenario:
         if self.param_shapes is not None:
             return dict(self.param_shapes)
         return synthetic_shapes(self.n_params)
+
+    def topo(self):
+        """The ``repro.topology.Topology`` this scenario communicates
+        over (built fresh; Topology construction is deterministic)."""
+        from repro.topology import make_topology
+        return make_topology(self.topology, self.n_clusters,
+                             degree=self.topology_degree,
+                             seed=self.topology_seed)
+
+    @property
+    def is_gossip(self) -> bool:
+        from repro.topology import GOSSIP_KINDS
+        return self.topology in GOSSIP_KINDS
 
     def meta(self) -> Dict[str, Any]:
         """JSON-serializable scenario header for the Timeline."""
@@ -84,5 +104,8 @@ class Scenario:
             "rank": self.rank,
             "delay": self.delay,
             "allreduce_per_step": self.allreduce_per_step,
+            "topology": self.topology,
+            "topology_degree": self.topology_degree,
+            "topology_seed": self.topology_seed,
             "seed": self.seed,
         }

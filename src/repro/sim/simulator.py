@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.core import comm
 from repro.sim.scenario import Scenario
-from repro.sim.timeline import RoundEvent, Timeline, tree_hash
+from repro.sim.timeline import (RoundEvent, Timeline, combine_row_hashes,
+                                tree_hash)
 
 # NOTE: repro.core.compression (and with it jax) is imported lazily inside
 # simulate() — `import repro.sim` must stay jax-free so the proc backend's
@@ -50,6 +51,11 @@ class NumericProblem:
     compress: bool = True
     error_feedback: bool = True
     eval_fn: Optional[Callable] = None   # params -> scalar loss (recorded)
+    inner_fn_stacked: Optional[Callable] = None  # gossip mode: like
+                                     # inner_fn but params carry a
+                                     # (n_clusters, ...) leading axis
+                                     # (each cluster trains from its OWN
+                                     # outer params)
 
 
 def make_quadratic_problem(n_clusters: int, **kw) -> NumericProblem:
@@ -82,6 +88,9 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
     controller: requires ``numeric`` (the rank signal is the effective rank
     of the realized averaged pseudo-gradient, as in train/trainer.py)."""
     from repro.core.compression import make_compressor
+    from repro.topology import (MixingMatrix, gossip_round_comm,
+                                round_wire_total)
+    from repro.topology import mixing as topo_mixing
 
     C = sc.n_clusters
     shapes = sc.shapes()
@@ -91,6 +100,13 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
     if alive.shape != (C,):
         raise ValueError(f"initial_alive must have shape ({C},)")
 
+    topo = sc.topo()
+    gossip = topo.is_gossip
+    if gossip and sc.allreduce_per_step:
+        raise ValueError("allreduce_per_step models the per-step DDP "
+                         "baseline; gossip topologies sync per round only")
+    base_mm = MixingMatrix.metropolis(topo) if gossip else None
+
     # --- numeric state (real diloco rounds) --------------------------------
     num = None
     if numeric is not None:
@@ -99,20 +115,42 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
 
         from repro.core import diloco, membership
 
-        state = diloco.init_state(numeric.params, numeric.inner_opt_stacked,
-                                  C, compressor)
         rcfg = diloco.RoundConfig(
             outer_lr=numeric.outer_lr, outer_momentum=numeric.outer_momentum,
             delay=sc.delay, compress=numeric.compress,
             error_feedback=numeric.error_feedback)
 
-        def _round(st, rank_scalar, alive_vec):
-            cm = lambda tree: membership.masked_cluster_mean(tree, alive_vec)
-            return diloco.diloco_round(st, numeric.inner_fn, compressor,
-                                       cm, rcfg, rank_scalar)
+        if gossip:
+            if numeric.inner_fn_stacked is None:
+                raise ValueError(
+                    f"topology {sc.topology!r} needs a stacked inner_fn "
+                    "(each cluster trains from its own outer params); the "
+                    "NumericProblem provides no inner_fn_stacked")
+            state = diloco.init_state(
+                diloco.stack_replicas(numeric.params, C),
+                numeric.inner_opt_stacked, C, compressor,
+                stacked_params=True)
+
+            def _round(st, rank_scalar, W):
+                mix = lambda tree: topo_mixing.mix_stacked(W, tree)
+                mix.returns_stacked = True
+                return diloco.diloco_round(st, numeric.inner_fn_stacked,
+                                           compressor, mix, rcfg,
+                                           rank_scalar)
+        else:
+            state = diloco.init_state(numeric.params,
+                                      numeric.inner_opt_stacked,
+                                      C, compressor)
+
+            def _round(st, rank_scalar, alive_vec):
+                cm = lambda tree: membership.masked_cluster_mean(tree,
+                                                                 alive_vec)
+                return diloco.diloco_round(st, numeric.inner_fn, compressor,
+                                           cm, rcfg, rank_scalar)
 
         num = {"state": state, "round": jax.jit(_round), "jnp": jnp,
                "membership": membership, "jax": jax,
+               "mean": jax.jit(membership.masked_cluster_mean),
                "comp0": compressor.init_state(numeric.params)}
 
     ada_state = None
@@ -154,7 +192,14 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
         bw_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=2)
         bws = np.array([sc.link.bytes_per_s * sc.faults.bandwidth_factor(c, r)
                         * bw_j[c] for c in range(C)])
-        if n_alive >= 2:
+        if gossip:
+            # neighbor exchange: each cluster ships its payload to every
+            # alive graph neighbor over its own (serialized) uplink
+            gc = gossip_round_comm(topo, alive, wire, bws, sc.link.latency_s)
+            t_comm, bottleneck = gc.t_comm_s, gc.bottleneck_cluster
+            wire_total = gc.wire_bytes_total
+            exposed = (max(0.0, t_comm - t_compute) if sc.delay else t_comm)
+        elif n_alive >= 2:
             bottleneck = int(min(alive_ids, key=lambda c: bws[c]))
             bw = float(bws[bottleneck])
             csub = comm.CommScenario(n_clusters=n_alive, link_bytes_per_s=bw,
@@ -164,13 +209,16 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                             + 2 * (n_alive - 1) * sc.link.latency_s)
                 t_comm = h_t * per_step
                 exposed = t_comm                   # no overlap in DDP style
+                wire_total = round_wire_total("allreduce", n_alive, wire,
+                                              h_t)
             else:
                 t_comm = (comm.gather_time(wire, csub)
                           + (n_alive - 1) * sc.link.latency_s)
                 exposed = (max(0.0, t_comm - t_compute) if sc.delay
                            else t_comm)
+                wire_total = round_wire_total("gather", n_alive, wire)
         else:
-            bottleneck, t_comm, exposed = -1, 0.0, 0.0
+            bottleneck, t_comm, exposed, wire_total = -1, 0.0, 0.0, 0
 
         t_round = t_compute + exposed
         tokens = sc.tokens_per_step * h_t * n_alive / max(C, 1)
@@ -178,6 +226,7 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
         # ---- numeric leg: one REAL diloco round over the alive set -------
         loss = None
         param_hash = None
+        disagreement = None
         if num is not None:
             jnp = num["jnp"]
             _jax = num["jax"]
@@ -215,18 +264,68 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                     st.comp_state, num["comp0"])
                 return st._replace(inner_opt=inner, comp_state=comp)
 
+            def consensus_bootstrap(st, rejoined_np, alive_prev_np):
+                """Gossip-mode rejoin: there is no single global replica to
+                copy, so a rejoiner restarts from the masked MEAN of the
+                surviving clusters' (params, outer momentum) — the same
+                arithmetic (zero-masked rows through the standalone jitted
+                ``masked_cluster_mean``) the proc coordinator uses to
+                bootstrap a respawned worker, hence bit-identical."""
+                from repro.core.diloco import stack_replicas
+
+                m_prev = jnp.asarray(alive_prev_np, jnp.float32)
+                rej = jnp.asarray(rejoined_np, bool)
+
+                def row(mask, x):
+                    return mask.reshape((-1,) + (1,) * (x.ndim - 1))
+
+                def mean_rows(tree):
+                    zeroed = _jax.tree.map(
+                        lambda x: jnp.where(row(m_prev > 0, x), x,
+                                            jnp.zeros_like(x)), tree)
+                    return num["mean"](zeroed, m_prev)
+
+                mp = stack_replicas(mean_rows(st.params), C)
+                mv = stack_replicas(mean_rows(st.outer_opt.momentum), C)
+                params = _jax.tree.map(
+                    lambda x, m: jnp.where(row(rej, x), m.astype(x.dtype),
+                                           x), st.params, mp)
+                mom = _jax.tree.map(
+                    lambda x, m: jnp.where(row(rej, x), m, x),
+                    st.outer_opt.momentum, mv)
+                return st._replace(
+                    params=params,
+                    outer_opt=st.outer_opt._replace(momentum=mom))
+
             st = num["state"]
             if rejoined.any():
                 st = reset_rejoined(st, rejoined)
-            alive_vec = jnp.asarray(alive, jnp.float32)
+                if gossip:
+                    st = consensus_bootstrap(st, rejoined,
+                                             alive & ~rejoined)
             rank_scalar = (None if rank_t is None
                            else jnp.asarray(rank_t, jnp.int32))
-            st, aux = num["round"](st, rank_scalar, alive_vec)
+            alive_vec = jnp.asarray(alive, jnp.float32)
+            if gossip:
+                W_r = base_mm.masked(alive).W
+                st, aux = num["round"](st, rank_scalar, jnp.asarray(W_r))
+            else:
+                st, aux = num["round"](st, rank_scalar, alive_vec)
             # dead clusters neither train nor accumulate error
             if (~alive).any():
                 st = reset_buffers(st, ~alive)
             num["state"] = st
-            param_hash = tree_hash(st.params)
+            if gossip:
+                from repro.core.diloco import take_row
+                rows = [(c, tree_hash(take_row(st.params, c)))
+                        for c in alive_ids]
+                param_hash = combine_row_hashes(rows)
+                flat = np.concatenate(
+                    [np.asarray(x).reshape(C, -1)
+                     for x in _jax.tree.leaves(st.params)], axis=1)
+                disagreement = topo_mixing.consensus_distance(flat, alive)
+            else:
+                param_hash = tree_hash(st.params)
             aux_np = np.asarray(aux)
             if n_alive:
                 loss = float(np.mean(aux_np[np.asarray(alive)]))
@@ -245,7 +344,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             t_comm_s=t_comm, exposed_comm_s=exposed, t_round_s=t_round,
             wire_bytes=wire, slowest_cluster=slowest,
             bottleneck_cluster=bottleneck, tokens=tokens,
-            faults=sc.faults.active(r), loss=loss, param_hash=param_hash))
+            faults=sc.faults.active(r), loss=loss, param_hash=param_hash,
+            wire_bytes_total=wire_total, disagreement=disagreement))
 
     tl = Timeline(scenario=sc.meta(), events=events)
     if num is not None:

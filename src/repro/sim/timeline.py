@@ -42,6 +42,17 @@ def tree_hash(tree: Any) -> str:
     return h.hexdigest()
 
 
+def combine_row_hashes(pairs) -> str:
+    """One digest over per-cluster ``(cluster_id, tree_hash)`` pairs — the
+    gossip-mode equivalent of a single ``param_hash``: per-cluster outer
+    params legitimately differ, so the round's currency is the multiset of
+    row hashes.  The proc coordinator combines hashes reported by workers;
+    the in-process simulator combines hashes of the stacked rows — equality
+    of the combined digest is equality of every participating replica."""
+    blob = "|".join(f"{int(c)}:{h}" for c, h in sorted(pairs))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
 @dataclass(frozen=True)
 class RoundEvent:
     round: int
@@ -61,7 +72,15 @@ class RoundEvent:
     loss: Optional[float] = None       # numeric mode only
     param_hash: Optional[str] = None   # tree_hash of global params after the
                                        # round (numeric mode; the proc/
-                                       # in-process equivalence currency)
+                                       # in-process equivalence currency —
+                                       # gossip mode: combine_row_hashes
+                                       # over the alive replicas)
+    wire_bytes_total: int = 0          # bytes crossing ALL links this round
+                                       # (gossip: sum of neighbor sends;
+                                       # gather: ring all-gather total)
+    disagreement: Optional[float] = None   # gossip numeric mode: RMS
+                                       # distance of per-cluster outer
+                                       # params from their alive mean
 
 
 @dataclass
@@ -86,6 +105,12 @@ class Timeline:
     @property
     def total_wire_bytes(self) -> int:
         return sum(e.wire_bytes for e in self.events)
+
+    @property
+    def total_wire_bytes_on_links(self) -> int:
+        """Sum of per-round all-link traffic (``wire_bytes_total``) — what
+        the gossip-vs-gather benchmark compares."""
+        return sum(e.wire_bytes_total for e in self.events)
 
     @property
     def exposed_comm_frac(self) -> float:
@@ -128,7 +153,8 @@ class Timeline:
         return hashlib.sha256(blob).hexdigest()
 
     STRUCTURAL_FIELDS = ("round", "alive", "rejoined", "h_steps", "rank",
-                         "wire_bytes", "faults", "param_hash")
+                         "wire_bytes", "wire_bytes_total", "faults",
+                         "param_hash")
 
     def structural_fingerprint(self) -> str:
         """Like ``fingerprint()`` but over the *stable* per-round fields only

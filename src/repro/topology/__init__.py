@@ -1,0 +1,28 @@
+"""Topology & gossip-averaging subsystem.
+
+Makes the outer-step communication pattern a first-class, pluggable
+object: a ``Topology`` (ring / 2D torus / random k-regular / star / full)
+yields per-round doubly-stochastic ``MixingMatrix`` weights, and
+``mixing_op(topology, alive)`` produces the ``cluster_mean``-shaped
+callable ``core.diloco.diloco_round`` consumes — gather kinds reproduce
+the seed repo's hub average bit-for-bit, gossip kinds mix each cluster
+with its graph neighbors only (NoLoCo-style neighbor averaging).
+
+Importing this package is jax-free (graph/accounting arithmetic is numpy);
+only the mix operators themselves touch jax, lazily.
+"""
+from repro.topology.accounting import (GossipComm, gossip_round_comm,
+                                       round_wire_total)
+from repro.topology.graphs import (GATHER_KINDS, GOSSIP_KINDS, KINDS,
+                                   Topology, full, make_topology, ring,
+                                   random_regular, star, torus)
+from repro.topology.mixing import (MixingMatrix, consensus_distance,
+                                   mix_row, mix_stacked, mixing_op)
+
+__all__ = [
+    "Topology", "make_topology", "ring", "torus", "random_regular", "star",
+    "full", "KINDS", "GATHER_KINDS", "GOSSIP_KINDS",
+    "MixingMatrix", "mixing_op", "mix_row", "mix_stacked",
+    "consensus_distance",
+    "GossipComm", "gossip_round_comm", "round_wire_total",
+]

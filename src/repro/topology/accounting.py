@@ -1,0 +1,71 @@
+"""Wire/time accounting for the outer sync under a topology.
+
+One function pair shared *verbatim* by the in-process simulator and the
+proc-backend coordinator, so the modeled timeline and the proc backend's
+structural fields (bottleneck cluster, total bytes) can never drift apart.
+
+Gather kinds keep the seed repo's arithmetic (ring all-gather charge of
+``(n_alive-1) * payload`` per member over the bottleneck link).  Gossip
+kinds charge each cluster ``deg * payload`` on its *own* (possibly
+degraded) uplink — sends to each neighbor are serialized on that link —
+and the round's comm time is the slowest cluster's exchange.
+
+All numpy/python; importable without jax.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.topology.graphs import Topology
+
+
+@dataclass(frozen=True)
+class GossipComm:
+    t_comm_s: float                    # slowest cluster's neighbor exchange
+    bottleneck_cluster: int            # argmax per-cluster comm time (-1)
+    wire_bytes_total: int              # sum over links, both directions
+    sends: Dict[int, int]              # cluster -> payloads it ships
+
+
+def gossip_round_comm(topo: Topology, alive: np.ndarray, wire_bytes: int,
+                      bws: Sequence[float], latency_s: float) -> GossipComm:
+    """Per-round comm accounting for a gossip topology.
+
+    ``bws`` is the per-cluster bandwidth *after* fault degradation/jitter
+    (index = cluster id, dead entries ignored).  Deterministic tie-break:
+    first alive cluster with the max time wins, matching Python ``max``
+    over ascending ids on both backends.
+    """
+    alive = np.asarray(alive, bool)
+    alive_ids = [int(i) for i in np.flatnonzero(alive)]
+    sends = {c: len(topo.alive_neighbors(c, alive)) for c in alive_ids}
+    total = wire_bytes * sum(sends.values())
+    busy = [c for c in alive_ids if sends[c]]
+    if not busy:
+        return GossipComm(0.0, -1, 0, sends)
+    t_of = lambda c: (sends[c] * wire_bytes / float(bws[c])
+                      + sends[c] * latency_s)
+    bottleneck = max(busy, key=lambda c: (t_of(c), -c))
+    return GossipComm(float(t_of(bottleneck)), int(bottleneck), int(total),
+                      sends)
+
+
+def round_wire_total(mode: str, n_alive: int, wire_bytes: int,
+                     h_steps: int = 1) -> int:
+    """Total bytes crossing all links in one round for the non-gossip
+    modes (gossip comes from ``gossip_round_comm``):
+
+     - ``gather``: ring all-gather, every member forwards (n-1) payloads;
+     - ``allreduce``: per-local-step ring allreduce, 2(n-1)/n * payload
+       per member per step.
+    """
+    if n_alive < 2:
+        return 0
+    if mode == "gather":
+        return n_alive * (n_alive - 1) * wire_bytes
+    if mode == "allreduce":
+        return int(h_steps * 2 * (n_alive - 1) * wire_bytes)
+    raise ValueError(f"unknown wire mode {mode!r}")

@@ -1,0 +1,189 @@
+"""Doubly-stochastic mixing matrices + the gossip mixing operator.
+
+``MixingMatrix`` turns a ``Topology`` into the per-round averaging weights:
+
+ - gather kinds (star/full): ``W = J/n`` — the exact global mean in one
+   step (what the hub relay realizes), spectral gap 1;
+ - gossip kinds: Metropolis-Hastings weights on the graph,
+   ``W_ij = 1/(1 + max(d_i, d_j))`` on edges, self-weight absorbs the rest.
+   Symmetric, nonnegative, rows sum to 1 => doubly stochastic, so repeated
+   mixing contracts every cluster toward the mean at the rate of the
+   spectral gap ``1 - |lambda_2|``.
+
+Membership churn reuses ``core.membership.masked_mixing_matrix`` (row
+renormalization: dead rows/cols masked, the self-weight absorbs the lost
+mass) so the alive block stays symmetric doubly stochastic.
+
+``mixing_op(topology, alive)`` produces the ``cluster_mean``-shaped callable
+``core.diloco.diloco_round`` consumes.  For gather kinds it returns the
+masked global mean (bit-identical to the seed's hub path); for gossip kinds
+it returns a *stacked* tree — row c is cluster c's neighborhood average —
+and is tagged ``returns_stacked=True`` so the round switches to gossip
+semantics.
+
+``mix_row``/``mix_stacked`` are deliberately unrolled scalar-weight
+multiply-add chains (same trick as ``core.diloco.per_cluster_compress``):
+a proc worker computing its own row and the in-process simulator computing
+all rows execute the identical op sequence, which is what keeps the two
+backends bit-for-bit equal.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.topology.graphs import Topology
+
+# jax is imported lazily inside the mix operators: the coordinator and the
+# timing-only workers import this module for the numpy-side accounting and
+# must not pay (or require) a jax import.
+
+
+# ---------------------------------------------------------------------------
+# matrices (pure numpy)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MixingMatrix:
+    """A (n, n) float32 mixing matrix tied to the topology that produced it.
+    float32 on purpose: the same bytes feed both simulator backends."""
+    W: np.ndarray
+    kind: str = "custom"
+
+    def __post_init__(self):
+        W = np.asarray(self.W, np.float32)
+        if W.ndim != 2 or W.shape[0] != W.shape[1]:
+            raise ValueError(f"mixing matrix must be square, got {W.shape}")
+        object.__setattr__(self, "W", W)
+
+    @staticmethod
+    def metropolis(topo: Topology,
+                   alive: Optional[np.ndarray] = None) -> "MixingMatrix":
+        """Metropolis-Hastings weights on the (alive-masked) graph.  Gather
+        kinds get J/n over the alive set — one hub round IS the global
+        mean, not an MH step on the star graph."""
+        n = topo.n
+        if topo.kind in ("star", "full"):
+            W = np.full((n, n), 1.0 / n, np.float64)
+        else:
+            deg = np.array([topo.degree(c) for c in range(n)], np.float64)
+            W = np.zeros((n, n), np.float64)
+            for i, j in topo.edges:
+                w = 1.0 / (1.0 + max(deg[i], deg[j]))
+                W[i, j] = W[j, i] = w
+            np.fill_diagonal(W, 1.0 - W.sum(axis=1))
+        mm = MixingMatrix(W.astype(np.float32), topo.kind)
+        if alive is not None:
+            mm = mm.masked(alive)
+        return mm
+
+    def masked(self, alive: np.ndarray) -> "MixingMatrix":
+        """Membership-masked row renormalization (core.membership)."""
+        from repro.core.membership import masked_mixing_matrix
+
+        W = np.asarray(masked_mixing_matrix(self.W, np.asarray(alive)),
+                       np.float32)
+        return MixingMatrix(W, self.kind)
+
+    def is_doubly_stochastic(self, atol: float = 1e-5) -> bool:
+        W = self.W.astype(np.float64)
+        return bool((W >= -atol).all()
+                    and np.allclose(W.sum(axis=0), 1.0, atol=atol)
+                    and np.allclose(W.sum(axis=1), 1.0, atol=atol))
+
+    def spectral_gap(self, alive: Optional[np.ndarray] = None) -> float:
+        """1 - |lambda_2| of the (alive block of the) matrix: the per-mix
+        contraction rate toward consensus.  Dead identity rows would each
+        contribute a spurious eigenvalue 1, hence the restriction."""
+        W = self.W.astype(np.float64)
+        if alive is not None:
+            ids = np.flatnonzero(np.asarray(alive, bool))
+            W = W[np.ix_(ids, ids)]
+        if W.shape[0] <= 1:
+            return 1.0
+        eig = np.sort(np.abs(np.linalg.eigvals(W)))[::-1]
+        return float(1.0 - eig[1])
+
+
+def consensus_distance(stacked: np.ndarray, alive: np.ndarray) -> float:
+    """RMS distance of alive rows from their mean — the scalar the timeline
+    records as ``disagreement`` (0 for gather, since rows are identical)."""
+    alive = np.asarray(alive, bool)
+    rows = np.asarray(stacked, np.float64)[alive].reshape(alive.sum(), -1)
+    if rows.shape[0] == 0:
+        return 0.0
+    centred = rows - rows.mean(axis=0, keepdims=True)
+    return float(np.sqrt(np.mean(centred ** 2)))
+
+
+# ---------------------------------------------------------------------------
+# mix operators (jax; bitwise-stable unrolled multiply-add chains)
+# ---------------------------------------------------------------------------
+
+def mix_row(w_row, parts: Sequence[Any]) -> Any:
+    """One cluster's neighborhood average: sum_j w_row[j] * parts[j], as an
+    unrolled fp32 multiply-add chain in fixed j order.  ``parts`` must have
+    one entry per cluster (zeros for non-neighbors — their weight is 0).
+    A proc worker calls this on its own row; ``mix_stacked`` calls it per
+    row — identical op sequence, hence bit-identical results."""
+    import jax
+    import jax.numpy as jnp
+
+    acc = jax.tree.map(lambda x: w_row[0] * x.astype(jnp.float32), parts[0])
+    for j in range(1, len(parts)):
+        acc = jax.tree.map(lambda a, x: a + w_row[j] * x.astype(jnp.float32),
+                           acc, parts[j])
+    return acc
+
+
+def mix_stacked(W, stacked_tree: Any) -> Any:
+    """All clusters' neighborhood averages: row c of the result is
+    ``mix_row(W[c], rows)``.  W: (C, C), stacked_tree leaves: (C, ...)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.diloco import take_row
+
+    n = W.shape[0]
+    parts = [take_row(stacked_tree, j) for j in range(n)]
+    rows = [mix_row(W[c], parts) for c in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
+def mixing_op(topology: Topology, alive: np.ndarray):
+    """The ``cluster_mean``-shaped callable for ``core.diloco.diloco_round``
+    under this topology and alive mask.
+
+    Gather kinds: masked global mean (unstacked result — the seed repo's
+    exact hub path).  Gossip kinds: stacked neighborhood averages through
+    the masked MH matrix; the returned op carries ``returns_stacked=True``
+    (switches diloco_round to gossip semantics) and ``.matrix`` (the
+    ``MixingMatrix`` actually applied, for accounting/inspection).
+
+    NOTE on the jitted backends: this factory closes over a fixed alive
+    mask, so it is the API for *eager* callers (tests, notebooks, driving
+    ``diloco_round`` directly).  ``sim/simulator.py`` and the proc worker
+    instead inline the same primitives (``masked_cluster_mean`` /
+    ``mix_stacked`` / ``mix_row``) with the per-round matrix as a traced
+    argument — a fresh closure per round would retrace the jit every
+    round.  Change the mixing arithmetic in those primitives, not here.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.membership import masked_cluster_mean
+
+    alive = np.asarray(alive, bool)
+    mm = MixingMatrix.metropolis(topology, alive)
+    if not topology.is_gossip:
+        m = jnp.asarray(alive, jnp.float32)
+        op = lambda tree: masked_cluster_mean(tree, m)
+        op.returns_stacked = False
+    else:
+        Wj = jnp.asarray(mm.W)
+        op = lambda tree: mix_stacked(Wj, tree)
+        op.returns_stacked = True
+    op.matrix = mm
+    op.topology = topology
+    return op

@@ -26,15 +26,41 @@ def _batch(cfg, B=2, S=16, seed=1):
     return with_frontend({"tokens": toks}, cfg)
 
 
+# Tier-1 wall time is dominated by XLA compiles of this matrix.  The
+# forward graph of each arch used to be compiled twice (once here, once in
+# the decode test, on different shapes): the module-scoped cache below
+# compiles it ONCE per arch on one shared (B=2, S=16) batch and both tests
+# reuse cfg/params/batch/logits.  MoE archs keep their DEFAULT reduced
+# capacity here (the token-dropping routing path must stay under test);
+# only the decode test raises capacity (dropping breaks step-by-step
+# parity), paying a second forward compile for the few MoE archs.
+_ARCH_CACHE = {}
+
+
+def _arch_setup(arch, drop_free_moe=False):
+    key = (arch, drop_free_moe and
+           get_config(arch).reduced().moe is not None)
+    if key not in _ARCH_CACHE:
+        cfg = get_config(arch).reduced()
+        if key[1]:                # avoid capacity drops in the tiny setting
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        # jit: one fused compile per phase beats per-op eager dispatch ~3x
+        # on the bigger reduced archs (and matches how training runs)
+        logits, _ = jax.jit(
+            lambda p: M.forward(p, cfg, batch, remat=False))(params)
+        _ARCH_CACHE[key] = dict(cfg=cfg, params=params, batch=batch,
+                                logits=logits)
+    return _ARCH_CACHE[key]
+
+
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_forward_and_train_step(arch):
-    cfg = get_config(arch).reduced()
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    batch = _batch(cfg)
-    # jit: one fused compile per phase beats per-op eager dispatch ~3x on
-    # the bigger reduced archs (and matches how training actually runs)
-    logits, aux = jax.jit(
-        lambda p: M.forward(p, cfg, batch, remat=False))(params)
+    s = _arch_setup(arch)
+    cfg, params, batch, logits = (s["cfg"], s["params"], s["batch"],
+                                  s["logits"])
     assert logits.shape == (2, 16, cfg.vocab_size)
     assert np.isfinite(np.asarray(logits)).all()
 
@@ -60,15 +86,10 @@ def test_forward_and_train_step(arch):
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_decode_matches_forward(arch):
-    cfg = get_config(arch).reduced()
-    if cfg.moe is not None:   # avoid capacity drops in the tiny setting
-        cfg = dataclasses.replace(
-            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    B, S = 2, 12
-    batch = _batch(cfg, B, S)
-    logits, _ = jax.jit(
-        lambda p: M.forward(p, cfg, batch, remat=False))(params)
+    s = _arch_setup(arch, drop_free_moe=True)
+    cfg, params, batch, logits = (s["cfg"], s["params"], s["batch"],
+                                  s["logits"])
+    B, S = batch["tokens"].shape[:2]
     state = M.init_decode_state(cfg, B, 32)
     if cfg.is_encdec:
         mem = M.prefill_encoder(params, cfg, batch["frontend"])

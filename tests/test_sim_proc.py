@@ -153,6 +153,51 @@ def test_timing_only_equivalence_with_model():
     assert tl.events[1].t_compute_s > 2.0 * tl.events[0].t_compute_s
 
 
+def test_sync_timing_only_equivalence_with_model():
+    """delay=False (synchronous DiLoCo) end-to-end on the proc backend:
+    train first, then ship — the full comm time is exposed, and measured
+    rounds agree with the model."""
+    sc = proc_scenario(rounds=4, h_steps=3, t_step_s=0.03, delay=False,
+                       faults=FaultSchedule((Straggler(1, 1, 3, 3.0),)))
+    rep = check_equivalence(sc, None)
+    assert rep["structural_match"]
+    assert rep["timing_ok"], rep
+    assert rep["proc_fingerprint"] == rep["model_fingerprint"]
+    # no overlap: the modeled round is compute + FULL comm
+    tl = rep["timelines"]["model"]
+    np.testing.assert_allclose(tl.events[0].exposed_comm_s,
+                               tl.events[0].t_comm_s, rtol=1e-12)
+
+
+def test_gossip_timing_only_equivalence_with_model():
+    """Ring gossip: payloads move worker<->worker over PeerMesh links (the
+    coordinator never sees them); measured timeline still matches the
+    deg*wire/bw clock model and the structural fingerprint is identical."""
+    sc = proc_scenario(n_clusters=4, rounds=4, h_steps=3, t_step_s=0.03,
+                       topology="ring",
+                       faults=FaultSchedule((Straggler(2, 1, 3, 2.5),)))
+    rep = check_equivalence(sc, None)
+    assert rep["structural_match"], rep
+    assert rep["timing_ok"], rep
+    assert rep["proc_fingerprint"] == rep["model_fingerprint"]
+    # every cluster ships deg=2 payloads -> total = 2 * |E| * wire
+    e = rep["timelines"]["proc"].events[0]
+    assert e.wire_bytes_total == 8 * e.wire_bytes
+
+
+def test_gossip_worker_crash_survivors_finish():
+    """Hard-kill one ring member mid-run: its neighbors mix zeros for the
+    silent peer that round (p2pmiss tags), the coordinator masks it, and
+    the remaining rounds complete with the survivors."""
+    sc = proc_scenario(n_clusters=4, rounds=5, topology="ring")
+    tl = run_proc(sc, None, crash_at={2: 2}, p2p_timeout_s=2.0)
+    assert len(tl.events) == sc.rounds
+    assert tl.events[1].alive == (0, 1, 2, 3)
+    assert 2 not in tl.events[2].alive
+    assert tl.events[3].alive == (0, 1, 3)
+    assert any("crash(c2)" in f for f in tl.events[2].faults)
+
+
 def test_structural_fingerprint_ignores_wall_clock():
     """Same scenario, different step time: measured/modeled seconds change,
     the structural fingerprint (participants/budgets/wire/hashes) doesn't."""
@@ -184,3 +229,63 @@ def test_proc_numeric_bitwise_equivalence_through_churn():
     assert rep["final_params_bitwise_equal"]
     losses = rep["timelines"]["proc"].losses()
     assert losses[-1] < losses[0]           # it actually trains
+
+
+@pytest.mark.slow
+def test_proc_sync_numeric_bitwise_equivalence():
+    """Satellite: sync (delay=False) rounds end-to-end on the proc
+    backend, bit-for-bit against the in-process simulator — including the
+    carried error-feedback buffer, which only the sync arm exercises."""
+    sc = proc_scenario(n_clusters=2, rounds=5, h_steps=4, t_step_s=0.04,
+                       delay=False,
+                       faults=FaultSchedule((Straggler(1, 1, 2, 2.0),)),
+                       n_params=2e5)
+    spec = QuadraticSpec(n_clusters=2, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep
+    assert rep["structural_match"] and rep["timing_ok"], rep
+    assert rep["final_params_bitwise_equal"]
+
+
+@pytest.mark.slow
+def test_proc_gossip_numeric_crash_survivors_finish():
+    """A NUMERIC gossip worker hard-killed at round-msg receipt: its
+    neighbors' p2p (re)connects and gathers are all bounded by
+    p2p_timeout_s, they mix zeros for the silent peer, and training
+    finishes with the survivors (regression: an unreachable peer used to
+    stall set_peers for a hard-coded 30 s and then crash the survivor)."""
+    sc = proc_scenario(n_clusters=3, rounds=4, topology="ring")
+    spec = QuadraticSpec(n_clusters=3, d=8, n_mats=2, h_steps=2, seed=0)
+    tl = run_proc(sc, spec, crash_at={2: 1}, p2p_timeout_s=2.0)
+    assert len(tl.events) == sc.rounds
+    assert 2 not in tl.events[1].alive or 2 not in tl.events[2].alive
+    assert tl.events[-1].alive == (0, 1)
+    assert any("crash(c2)" in f for e in tl.events for f in e.faults)
+    assert tl.events[-1].loss is not None      # survivors kept training
+
+
+@pytest.mark.slow
+def test_proc_ring_gossip_bitwise_equivalence_through_churn():
+    """The tentpole guarantee: ring gossip over real p2p worker links —
+    per-round combined replica hashes, consensus-mean rejoin bootstrap,
+    and final per-replica params all bit-identical to the in-process
+    stacked-state simulation."""
+    sc = proc_scenario(
+        n_clusters=4, rounds=6, h_steps=4, t_step_s=0.05, topology="ring",
+        link=LinkProfile(bytes_per_s=100_000, jitter=0.1),
+        faults=FaultSchedule((Straggler(1, 1, 3, 2.0), Leave(2, 3),
+                              Join(2, 5))),
+        n_params=1e5)
+    spec = QuadraticSpec(n_clusters=4, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep
+    assert rep["structural_match"], rep
+    assert rep["timing_ok"], rep
+    assert rep["final_params_bitwise_equal"]
+    tl = rep["timelines"]["proc"]
+    losses = tl.losses()
+    assert losses[-1] < losses[0]
+    # gossip rounds ship deg*wire per member, strictly under the
+    # (n_alive-1)*wire gather charge
+    full = [e for e in tl.events if len(e.alive) == 4]
+    assert all(e.wire_bytes_total == 8 * e.wire_bytes for e in full)

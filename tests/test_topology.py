@@ -1,0 +1,239 @@
+"""Topology & gossip-averaging subsystem (repro.topology): graph shapes,
+mixing-matrix invariants (doubly stochastic, mask-respecting, spectral-gap
+contraction), the bitwise row/stacked mix agreement, and gossip round
+semantics (mean trajectory == gather, replicas legitimately diverge)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import membership
+from repro.topology import (GOSSIP_KINDS, KINDS, MixingMatrix,
+                            gossip_round_comm, make_topology,
+                            round_wire_total)
+
+
+# ---------------------------------------------------------------------------
+# graphs
+# ---------------------------------------------------------------------------
+
+def test_graph_shapes_and_degrees():
+    r = make_topology("ring", 6)
+    assert all(r.degree(c) == 2 for c in range(6))
+    t = make_topology("torus", 6)          # 2x3 grid
+    assert all(t.degree(c) in (3, 4) for c in range(6))
+    s = make_topology("star", 5)
+    assert s.degree(0) == 4 and all(s.degree(c) == 1 for c in range(1, 5))
+    f = make_topology("full", 5)
+    assert all(f.degree(c) == 4 for c in range(5))
+    g = make_topology("random", 8, degree=3)
+    assert all(g.degree(c) == 3 for c in range(8))
+
+
+@settings(max_examples=12, deadline=None)
+@given(kind=st.sampled_from(list(KINDS)), n=st.integers(3, 12),
+       seed=st.integers(0, 20))
+def test_every_topology_connected(kind, n, seed):
+    topo = make_topology(kind, n, seed=seed)
+    assert topo.is_connected()
+    # neighbors are symmetric and self-free
+    for c in range(n):
+        assert c not in topo.neighbors(c)
+        for j in topo.neighbors(c):
+            assert c in topo.neighbors(j)
+
+
+def test_random_regular_deterministic_in_seed():
+    a = make_topology("random", 10, degree=4, seed=7)
+    b = make_topology("random", 10, degree=4, seed=7)
+    c = make_topology("random", 10, degree=4, seed=8)
+    assert a.edges == b.edges
+    assert a.edges != c.edges
+
+
+# ---------------------------------------------------------------------------
+# mixing-matrix invariants (satellite: property tests via the shim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(list(KINDS)), n=st.integers(3, 10),
+       seed=st.integers(0, 10))
+def test_mixing_matrix_doubly_stochastic(kind, n, seed):
+    mm = MixingMatrix.metropolis(make_topology(kind, n, seed=seed))
+    W = mm.W.astype(np.float64)
+    assert mm.is_doubly_stochastic()
+    np.testing.assert_allclose(W, W.T, atol=1e-6)      # symmetric too
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(list(KINDS)), n=st.integers(4, 10),
+       dead=st.integers(0, 3), seed=st.integers(0, 10))
+def test_masked_matrix_respects_alive_mask(kind, n, dead, seed):
+    """Membership-masked row renormalization: dead rows become identity,
+    alive rows place zero weight on dead columns, and the alive block
+    stays doubly stochastic."""
+    topo = make_topology(kind, n, seed=seed)
+    rng = np.random.RandomState(seed)
+    alive = np.ones(n, bool)
+    alive[rng.choice(n, size=dead, replace=False)] = False
+    W = np.asarray(membership.masked_mixing_matrix(
+        MixingMatrix.metropolis(topo).W, alive), np.float64)
+    for c in np.flatnonzero(~alive):
+        np.testing.assert_allclose(W[c], np.eye(n)[c], atol=1e-6)
+        np.testing.assert_allclose(W[np.flatnonzero(alive), c], 0.0,
+                                   atol=1e-6)
+    assert MixingMatrix(W.astype(np.float32)).is_doubly_stochastic()
+
+
+@settings(max_examples=10, deadline=None)
+@given(kind=st.sampled_from(list(KINDS)), n=st.integers(4, 10),
+       seed=st.integers(0, 10))
+def test_repeated_mixing_contracts_at_spectral_gap_rate(kind, n, seed):
+    """x_{t+1} = W x_t must contract toward the mean at least as fast as
+    (1-gap)^t — exact for symmetric doubly-stochastic W, so the spectral
+    gap is a *certificate*, not a heuristic."""
+    mm = MixingMatrix.metropolis(make_topology(kind, n, seed=seed))
+    gap = mm.spectral_gap()
+    W = mm.W.astype(np.float64)
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n)
+    err0 = np.linalg.norm(x - x.mean())
+    for t in range(1, 8):
+        x = W @ x
+        err = np.linalg.norm(x - x.mean())
+        assert err <= (1 - gap) ** t * err0 + 1e-9, (kind, t)
+        # and the mean itself is invariant (doubly stochastic)
+        np.testing.assert_allclose(x.mean(), (W @ x).mean(), atol=1e-9)
+
+
+def test_gather_kinds_average_in_one_mix():
+    for kind in ("star", "full"):
+        mm = MixingMatrix.metropolis(make_topology(kind, 6))
+        x = np.arange(6.0)
+        np.testing.assert_allclose(mm.W.astype(np.float64) @ x,
+                                   np.full(6, x.mean()), atol=1e-5)
+        assert mm.spectral_gap() > 0.999
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+# ---------------------------------------------------------------------------
+
+def test_gossip_wire_strictly_below_gather():
+    wire = 1000
+    for kind in GOSSIP_KINDS:
+        topo = make_topology(kind, 8)
+        gc = gossip_round_comm(topo, np.ones(8, bool), wire,
+                               np.full(8, 1e6), 0.0)
+        assert gc.wire_bytes_total == 2 * len(topo.edges) * wire
+        assert gc.wire_bytes_total < round_wire_total("gather", 8, wire)
+
+
+def test_gossip_comm_time_tracks_degraded_link():
+    topo = make_topology("ring", 4)
+    bws = np.array([1e6, 1e5, 1e6, 1e6])   # cluster 1 degraded 10x
+    gc = gossip_round_comm(topo, np.ones(4, bool), 50_000, bws, 0.0)
+    assert gc.bottleneck_cluster == 1
+    np.testing.assert_allclose(gc.t_comm_s, 2 * 50_000 / 1e5, rtol=1e-12)
+    # masking a cluster removes its sends from the total
+    alive = np.array([1, 0, 1, 1], bool)
+    gc2 = gossip_round_comm(topo, alive, 50_000, bws, 0.0)
+    assert gc2.sends == {0: 1, 2: 1, 3: 2}
+
+
+# ---------------------------------------------------------------------------
+# gossip rounds through core/diloco.py (jax)
+# ---------------------------------------------------------------------------
+
+def _const_inner_stacked(step_stacked):
+    import jax
+
+    def inner_fn(params, inner_opt, t):
+        new = jax.tree.map(lambda p, s: p - s, params, step_stacked)
+        return new, inner_opt, np.zeros(1)
+    return inner_fn
+
+
+def test_gossip_mean_trajectory_equals_gather():
+    """With a doubly-stochastic mix and the (linear) Nesterov outer step,
+    the cluster-MEAN of the gossip trajectory equals the gather trajectory
+    exactly; the replicas themselves legitimately diverge."""
+    import jax.numpy as jnp
+
+    from repro.core import diloco
+    from repro.core.compression import Identity
+    from repro.topology import mixing as mx
+
+    n = 4
+    topo = make_topology("ring", n)
+    steps = {"w": jnp.asarray(np.linspace(0.1, 0.4, n)[:, None]
+                              * np.ones((n, 3)), jnp.float32)}
+    params0 = {"w": jnp.zeros((3,))}
+    comp = Identity()
+    cfg = diloco.RoundConfig(outer_lr=0.7, outer_momentum=0.5,
+                             compress=False, error_feedback=False)
+
+    # gather reference: same constant displacements, global mean
+    g_state = diloco.init_state(params0, None, n, comp)
+    gather_inner = lambda p, o, t: ({"w": p["w"][None] - steps["w"]}, o,
+                                    np.zeros(1))
+    mean0 = lambda tree: {"w": tree["w"].mean(0)}
+
+    # gossip: stacked params, ring mix
+    s_state = diloco.init_state(diloco.stack_replicas(params0, n), None, n,
+                                comp, stacked_params=True)
+    op = mx.mixing_op(topo, np.ones(n, bool))
+    assert op.returns_stacked
+
+    for _ in range(5):
+        g_state, _ = diloco.diloco_round(g_state, gather_inner, comp,
+                                         mean0, cfg)
+        s_state, _ = diloco.diloco_round(
+            s_state, _const_inner_stacked(steps), comp, op, cfg)
+        np.testing.assert_allclose(
+            np.asarray(s_state.params["w"]).mean(0),
+            np.asarray(g_state.params["w"]), rtol=0, atol=1e-6)
+    # replicas saw different neighborhoods -> genuinely different rows
+    rows = np.asarray(s_state.params["w"])
+    assert np.abs(rows - rows.mean(0)).max() > 1e-4
+
+
+def test_mix_row_matches_mix_stacked_bitwise():
+    import jax.numpy as jnp
+
+    from repro.core.diloco import take_row
+    from repro.topology.mixing import mix_row, mix_stacked
+
+    topo = make_topology("random", 6, degree=3, seed=1)
+    W = jnp.asarray(MixingMatrix.metropolis(topo).W)
+    rng = np.random.RandomState(0)
+    tree = {"a": jnp.asarray(rng.randn(6, 5, 5), jnp.float32),
+            "b": jnp.asarray(rng.randn(6, 7), jnp.float32)}
+    full = mix_stacked(W, tree)
+    parts = [take_row(tree, j) for j in range(6)]
+    for c in range(6):
+        row = mix_row(W[c], parts)
+        for k in tree:
+            assert np.array_equal(np.asarray(row[k]),
+                                  np.asarray(take_row(full, c)[k])), (c, k)
+
+
+def test_simulator_gossip_numeric_converges_and_is_deterministic():
+    from repro.sim import LinkProfile, QuadraticSpec, Scenario, simulate
+
+    spec = QuadraticSpec(n_clusters=4, d=8, n_mats=2, h_steps=4, seed=0)
+    sc = Scenario(n_clusters=4, rounds=6, h_steps=4, t_step_s=0.05,
+                  link=LinkProfile(bytes_per_s=200_000),
+                  compressor="diloco_x",
+                  compressor_kw={"rank": 4, "min_dim_for_lowrank": 8},
+                  rank=4, n_params=1e5, topology="ring", seed=0)
+    a = simulate(sc, numeric=spec.problem())
+    b = simulate(sc, numeric=spec.problem())
+    assert a.fingerprint() == b.fingerprint()
+    losses = a.losses()
+    assert losses[-1] < losses[0]
+    assert all(e.disagreement is not None for e in a.events)
+    # gossip ships strictly fewer bytes than the gather run of the same
+    # scenario, every round
+    import dataclasses
+    tl_star = simulate(dataclasses.replace(sc, topology="star"))
+    for eg, es in zip(a.events, tl_star.events):
+        assert eg.wire_bytes_total < es.wire_bytes_total
