@@ -1,0 +1,195 @@
+"""Adaptive compression under link degradation: what does annealing the
+rank to the *measured* link buy, and what does it cost?
+
+Runs the SAME scenario (4 clusters, hub outer sync, one cluster's uplink
+degraded mid-run, real ``core/diloco.py`` rounds on the quadratic problem)
+with a fixed rank and with the bandwidth-aware controller modes, and
+reports:
+
+ - **round time through the degraded window**: the fixed-rank run eats the
+   full exposed comm of an oversized payload on the slow link; the
+   bandwidth/hybrid controller drops r_t so the outer sync keeps fitting
+   the §2.3 overlap budget;
+ - **consensus-loss gap at equal wall-clock**: compressing harder during
+   the window costs per-round accuracy, but the adaptive run finishes its
+   rounds sooner; at the adaptive run's total elapsed time, its loss must
+   be within the stated tolerance of whatever the fixed-rank run had
+   reached by that same time (one-sided: being better is not a failure);
+ - **per-EDGE ranks under gossip**: on a ring, only the degraded cluster's
+   own edges drop rank; healthy edges keep shipping full-rank factors.
+
+  python -m benchmarks.adaptive_link [--fast] [--json out.json]
+
+Exit status is non-zero if either acceptance criterion fails.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveSpec
+from repro.sim import (FaultSchedule, LinkProfile, QuadraticSpec, Scenario,
+                       simulate)
+from repro.sim.faults import LinkDegradation
+
+N_CLUSTERS = 4
+R1 = 8
+# stated acceptance tolerances:
+#  - the adaptive run's degraded-window mean round time must undercut the
+#    fixed-rank run by at least this factor;
+#  - at the adaptive run's total wall-clock, its loss may exceed the loss
+#    the fixed-rank run had reached by that same elapsed time by at most
+#    LOSS_TOL_REL (relative, one-sided) + LOSS_TOL_ABS (floor).
+TIME_GAIN_MIN = 1.5
+LOSS_TOL_REL = 0.25
+LOSS_TOL_ABS = 1e-3
+
+
+def build_scenario(rounds: int, window: slice, **kw) -> Scenario:
+    base = dict(
+        n_clusters=N_CLUSTERS, rounds=rounds, h_steps=4, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=200_000),
+        faults=FaultSchedule((LinkDegradation(window.start, window.stop,
+                                              factor=0.05, cluster=1),)),
+        compressor="diloco_x",
+        compressor_kw={"rank": R1, "min_dim_for_lowrank": 8}, rank=R1,
+        n_params=2e5, seed=0)
+    base.update(kw)
+    return Scenario(**base)
+
+
+def run(fast: bool = False) -> Dict[str, Any]:
+    rounds = 8 if fast else 14
+    window = slice(rounds // 4, (3 * rounds) // 4)
+    spec = QuadraticSpec(n_clusters=N_CLUSTERS, d=16, n_mats=2, h_steps=4,
+                         seed=0)
+    variants = {
+        "fixed": None,
+        "bandwidth": AdaptiveSpec(mode="bandwidth", r1=R1, r_min=2,
+                                  window=3),
+        "hybrid": AdaptiveSpec(mode="hybrid", r1=R1, r_min=2, window=3),
+    }
+    out: Dict[str, Any] = {
+        "rounds": rounds, "degraded_rounds": [window.start, window.stop],
+        "time_gain_min": TIME_GAIN_MIN,
+        "loss_tol_rel": LOSS_TOL_REL, "loss_tol_abs": LOSS_TOL_ABS,
+        "variants": {},
+    }
+    for name, ada in variants.items():
+        sc = build_scenario(rounds, window, adaptive=ada)
+        tl = simulate(sc, numeric=spec.problem())
+        win = tl.events[window]
+        out["variants"][name] = {
+            "rank_schedule": tl.rank_schedule(),
+            "round_s": [round(e.t_round_s, 6) for e in tl.events],
+            "degraded_mean_round_s": float(np.mean([e.t_round_s
+                                                    for e in win])),
+            "total_time_s": round(tl.total_time_s, 6),
+            "total_wire_bytes": tl.total_wire_bytes,
+            "losses": [None if e.loss is None else round(e.loss, 6)
+                       for e in tl.events],
+            "final_loss": tl.losses()[-1],
+            "timeline_table": tl.table(),
+        }
+
+    # gossip leg: per-EDGE ranks on a ring — only the degraded cluster's
+    # own edges compress harder (bandwidth mode keeps the healthy edges at
+    # r1, making the per-edge property directly assertable)
+    sc_ring = build_scenario(
+        rounds, window, topology="ring",
+        adaptive=AdaptiveSpec(mode="bandwidth", r1=R1, r_min=2, window=3))
+    tl_ring = simulate(sc_ring, numeric=spec.problem())
+    ring_rows = [list(e.ranks) for e in tl_ring.events]
+    win_rows = ring_rows[window]
+    per_edge_ok = (
+        all(row[1] < R1 for row in win_rows)             # degraded uplink…
+        and all(row[c] == R1 for row in win_rows         # …its edges only
+                for c in (0, 2, 3)))
+    out["gossip_ring"] = {
+        "ranks_per_round": ring_rows,
+        "per_edge_isolation_ok": per_edge_ok,
+    }
+
+    fixed = out["variants"]["fixed"]
+    bw = out["variants"]["bandwidth"]
+    gain = (fixed["degraded_mean_round_s"]
+            / max(bw["degraded_mean_round_s"], 1e-12))
+    # equal-wall-clock comparison: at the adaptive run's total elapsed
+    # time, which loss had each run reached?  (The adaptive run has its
+    # final loss; the fixed run has completed only the rounds whose
+    # cumulative time fits the same budget.)
+    t_budget = bw["total_time_s"]
+    cum = np.cumsum(fixed["round_s"])
+    done = int(np.searchsorted(cum, t_budget + 1e-9, side="right"))
+    fixed_loss_at_budget = (fixed["losses"][done - 1] if done
+                            else float("inf"))
+    loss_gap = bw["final_loss"] - fixed_loss_at_budget
+    loss_ok = loss_gap <= LOSS_TOL_ABS + LOSS_TOL_REL * abs(
+        fixed_loss_at_budget)
+    out["criteria"] = {
+        "degraded_round_time_gain": round(gain, 4),
+        "time_recovered": gain >= TIME_GAIN_MIN,
+        "wallclock_budget_s": t_budget,
+        "fixed_rounds_done_at_budget": done,
+        "loss_fixed_at_budget": fixed_loss_at_budget,
+        "loss_bandwidth_at_budget": bw["final_loss"],
+        "final_loss_gap_at_budget": loss_gap,
+        "final_loss_gap_at_equal_rounds": (bw["final_loss"]
+                                           - fixed["final_loss"]),
+        "loss_within_tol": loss_ok,
+        "per_edge_isolation_ok": per_edge_ok,
+        "ok": (gain >= TIME_GAIN_MIN) and loss_ok and per_edge_ok,
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+
+    out = run(fast=args.fast)
+    lo, hi = out["degraded_rounds"]
+    print(f"degraded link: cluster 1 x0.05 @ rounds [{lo},{hi})")
+    print(f"{'variant':>10} {'win_round_s':>12} {'total_s':>9} "
+          f"{'final_loss':>11}  rank schedule")
+    for name, row in out["variants"].items():
+        sched = " ".join("-" if r is None else str(r)
+                         for r in row["rank_schedule"])
+        print(f"{name:>10} {row['degraded_mean_round_s']:>12.3f} "
+              f"{row['total_time_s']:>9.2f} {row['final_loss']:>11.4f}  "
+              f"{sched}")
+    print("\n--- bandwidth-adaptive timeline ---")
+    print(out["variants"]["bandwidth"]["timeline_table"])
+    crit = out["criteria"]
+    print(f"\ndegraded-window round time: fixed/bandwidth = "
+          f"{crit['degraded_round_time_gain']:.2f}x (need >= "
+          f"{TIME_GAIN_MIN}x)  => "
+          f"{'PASS' if crit['time_recovered'] else 'FAIL'}")
+    print(f"loss at equal wall-clock ({crit['wallclock_budget_s']:.2f}s): "
+          f"bandwidth {crit['loss_bandwidth_at_budget']:.4f} vs fixed "
+          f"{crit['loss_fixed_at_budget']:.4f} (after "
+          f"{crit['fixed_rounds_done_at_budget']} rounds; signed gap "
+          f"{crit['final_loss_gap_at_budget']:+.4f}, tol {LOSS_TOL_ABS} + "
+          f"{LOSS_TOL_REL:.0%} rel, one-sided)  => "
+          f"{'PASS' if crit['loss_within_tol'] else 'FAIL'}")
+    print(f"ring per-edge isolation (only the degraded uplink drops rank): "
+          f"{'PASS' if crit['per_edge_isolation_ok'] else 'FAIL'}")
+
+    if args.json:
+        for row in out["variants"].values():
+            row.pop("timeline_table", None)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json}")
+    sys.exit(0 if crit["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -146,6 +146,23 @@ def main() -> None:
                                  "failed")
     section("gossip_vs_gather", gossip)
 
+    # beyond-paper: bandwidth-aware adaptive compression on a degraded link
+    def adaptive_link_bench() -> None:
+        from benchmarks import adaptive_link
+        al = adaptive_link.run(fast=args.fast or args.skip_convergence)
+        for row in al["variants"].values():
+            row.pop("timeline_table", None)
+        blobs["adaptive_link"] = al
+        crit = al["criteria"]
+        print(f"adaptive_link.degraded_round_time_gain,"
+              f"{crit['degraded_round_time_gain']},x_vs_fixed")
+        print(f"adaptive_link.loss_gap_at_budget,"
+              f"{crit['final_loss_gap_at_budget']:.4f},nll")
+        print(f"adaptive_link.ok,{int(crit['ok'])},bool")
+        if not crit["ok"]:
+            raise AssertionError("adaptive-link acceptance criteria failed")
+    section("adaptive_link", adaptive_link_bench)
+
     # roofline (if the dry-run matrix has been produced)
     def roofline_rows() -> None:
         from benchmarks import roofline

@@ -1,34 +1,65 @@
-"""Adaptive Gradient Compression (paper Alg. 3) + effective-rank estimation.
+"""Adaptive compression controller (paper Alg. 3 + bandwidth awareness).
 
-The paper's controller tracks the effective rank r'_t of the globally
-averaged pseudo-gradient over a window c; r_t is the window mean, and the
-local-step budget H_t is co-adapted via alpha = (r_1 - r_t)/r_1.
+The paper's controller (§2.4, Alg. 3) tracks the effective rank r'_t of the
+globally averaged pseudo-gradient over a window c; r_t is the window mean,
+and the local-step budget H_t is co-adapted via alpha = (r_1 - r_t)/r_1.
+That signal is purely *spectral* — it never looks at the wire.  In the
+OpenDiLoCo operational setting the binding constraint is usually the
+*measured link*: a degraded uplink makes the same payload many times more
+expensive, regardless of the gradient spectrum.
 
-Faithfulness note (DESIGN.md §3): the paper's H_t = H_1 * alpha is degenerate
-(alpha=0 while rank has not yet dropped => H_t=0) and *grows* H as
-compression gets cheaper — the opposite of matching communication time to
-local compute. ``mode="paper"`` implements it verbatim (guarded by h_min);
-``mode="overlap"`` is our corrected rule H_t = max(h_min, H_1 * r_t/r_1),
-which shrinks H as the wire volume shrinks so T_comm <= H*T_step stays
-tight. Both are benchmarked (benchmarks/ablation.py).
+``AdaptiveController`` therefore fuses both signals:
+
+ - **spectral** — Alg. 3 verbatim (``adagradcmp_update`` below): r_t is
+   the windowed mean of the realized pseudo-gradient's effective rank;
+ - **bandwidth** — pick the largest rank whose modeled outer-sync comm
+   time still fits inside ``overlap_frac`` x this round's compute leg
+   (the §2.3 overlap headroom: comm that fits under H·T_step is free);
+ - **hybrid** — min of the two (never ship columns the spectrum says are
+   empty, never ship columns the link cannot afford).
+
+Under gossip topologies the controller emits a per-EDGE rank: every
+directed edge (c -> j) carries cluster c's payload on cluster c's own
+(possibly degraded) uplink, so a degraded link gets a lower rank *on that
+link only* while healthy edges keep shipping full-rank factors.
+
+All controller arithmetic is host-side python/numpy on deterministic
+inputs (the modeled per-round bandwidths both simulator backends derive
+from the same seeded jitter), which is what lets the proc backend broadcast
+the decision in the round header and still match the in-process rank
+schedule exactly.
+
+Faithfulness note (DESIGN.md §3): the paper's H_t = H_1 * alpha is
+degenerate (alpha=0 while rank has not yet dropped => H_t=0) and *grows* H
+as compression gets cheaper — the opposite of matching communication time
+to local compute. ``h_mode="paper"`` implements it verbatim (guarded by
+h_min); ``h_mode="overlap"`` is our corrected rule
+H_t = max(h_min, H_1 * r_t/r_1), which shrinks H as the wire volume
+shrinks so T_comm <= H*T_step stays tight. Both are benchmarked
+(benchmarks/ablation.py).
 
 The paper does not specify the rank estimator; we use the stable rank
 ||G||_F^2 / sigma_max^2 with a few power iterations (cheap, jittable).
+
+This module imports jax lazily (only the spectral estimators touch it), so
+``repro.sim`` can embed an ``AdaptiveSpec`` in a ``Scenario`` and the proc
+backend's timing-only paths stay jax-free.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import matrix_shape, to_matrix
 
-
-def stable_rank(mat: jnp.ndarray, iters: int = 8) -> jnp.ndarray:
+def stable_rank(mat, iters: int = 8):
     """||M||_F^2 / sigma_max(M)^2 via power iteration; in [1, min(m,n)]."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compression import to_matrix
+
     M = to_matrix(mat).astype(jnp.float32)
     m, n = M.shape
     v = jnp.ones((n,), jnp.float32) / jnp.sqrt(n)
@@ -46,8 +77,13 @@ def stable_rank(mat: jnp.ndarray, iters: int = 8) -> jnp.ndarray:
     return fro2 / (sigma_max ** 2 + 1e-12)
 
 
-def tree_effective_rank(tree, max_mats: int = 8) -> jnp.ndarray:
+def tree_effective_rank(tree, max_mats: int = 8):
     """Mean stable rank over the largest 2-D params (representative set)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compression import matrix_shape
+
     leaves = [(np.prod(x.shape), x) for x in jax.tree.leaves(tree)
               if x.ndim >= 2 and min(matrix_shape(x.shape)) >= 8]
     leaves.sort(key=lambda t: -t[0])
@@ -95,3 +131,210 @@ def adagradcmp_update(state: AdaGradCmpState, r_prime_t: float,
         else:                                          # "overlap" correction
             h_t = max(cfg.h_min, int(round(cfg.h1 * r_t / cfg.r1)))
     return AdaGradCmpState(r_hist=hist, t=t, r_t=r_t, h_t=h_t)
+
+
+def _quantized_rank(r_prime) -> float:
+    """Host-side quantization of the r'_t float: a last-ulp difference
+    between independently jitted producers must never flip the integer
+    rank the controller rounds to."""
+    return round(float(r_prime), 6)
+
+
+def observe_mean_pseudo_grad(state: AdaGradCmpState, mean_pending,
+                             cfg: AdaGradCmpConfig) -> AdaGradCmpState:
+    """One Alg. 3 driver step from the realized averaged pseudo-gradient —
+    the loop body shared by train/trainer.py, launch/train.py and
+    ``AdaptiveController.observe`` (the trainers used to carry
+    copy-pasted, independently-drifting versions of it).
+    ``mean_pending`` is the (masked) cluster mean of the pending deltas;
+    its effective rank is the r'_t signal."""
+    return adagradcmp_update(
+        state, _quantized_rank(tree_effective_rank(mean_pending)), cfg)
+
+
+# ---------------------------------------------------------------------------
+# the unified controller: spectral x measured-link fusion
+# ---------------------------------------------------------------------------
+
+ADAPTIVE_MODES = ("off", "spectral", "bandwidth", "hybrid")
+
+
+@dataclass(frozen=True)
+class AdaptiveSpec:
+    """JSON-able controller description (embeddable in ``sim.Scenario`` and
+    shippable to proc workers).  ``r1=None`` resolves to the compressor's
+    configured rank at controller build time."""
+    mode: str = "hybrid"           # spectral | bandwidth | hybrid
+    window: int = 5                # Alg. 3 window c (spectral warm-up)
+    r1: Optional[int] = None
+    h1: int = 125
+    h_min: int = 8
+    r_min: int = 4
+    h_mode: str = "overlap"        # Alg. 3 H co-adaptation: paper | overlap
+    overlap_frac: float = 1.0      # comm budget = frac x compute leg
+
+    def __post_init__(self):
+        if self.mode not in ADAPTIVE_MODES:
+            raise ValueError(f"adaptive mode {self.mode!r} not in "
+                             f"{ADAPTIVE_MODES}")
+
+    @property
+    def needs_spectral(self) -> bool:
+        return self.mode in ("spectral", "hybrid")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "AdaptiveSpec":
+        return AdaptiveSpec(**d)
+
+    def controller(self, compressor=None) -> Optional["AdaptiveController"]:
+        """Build the controller (None for mode='off').  ``r1`` resolution:
+        the spec's own value, else the compressor's configured rank, else
+        64 (a compressor with ``rank=None`` means "unbounded" there)."""
+        if self.mode == "off":
+            return None
+        r1 = self.r1
+        if r1 is None:
+            r1 = getattr(compressor, "rank", None)
+        if r1 is None:
+            r1 = 64
+        return AdaptiveController(self, int(r1))
+
+
+class AdaptiveController:
+    """Per-round rank controller fusing Alg. 3 with measured link state.
+
+    Protocol per outer round r (identical on both simulator backends):
+
+      1. ``executed()``/``rank_gather()``/``ranks_gossip()`` — decide the
+         rank(s) for round r from the spectral state (through round r-1)
+         and THIS round's modeled link/compute numbers;
+      2. run the round, compressing with those rank(s); account wire bytes
+         with the same rank(s);
+      3. ``observe(mean_pending)`` — feed the realized averaged
+         pseudo-gradient's effective rank back into the Alg. 3 window
+         (spectral/hybrid modes only).
+
+    Step 1 before step 3 is what fixes the historical off-by-one where the
+    post-update controller state was logged as the round's wire cost.
+    """
+
+    def __init__(self, spec: AdaptiveSpec, r1: int):
+        self.spec = spec
+        self.cfg = AdaGradCmpConfig(window=spec.window, r1=int(r1),
+                                    h1=spec.h1, h_min=spec.h_min,
+                                    r_min=spec.r_min, mode=spec.h_mode)
+        self.state = AdaGradCmpState.create(self.cfg)
+
+    # ---- introspection ----------------------------------------------------
+    @property
+    def needs_spectral(self) -> bool:
+        return self.spec.needs_spectral
+
+    def executed(self) -> Tuple[int, int]:
+        """(r_t, h_t) in force for the round about to run — the PRE-observe
+        values, i.e. what the compressor will actually execute."""
+        return self.state.r_t, self.state.h_t
+
+    # ---- rank decisions ---------------------------------------------------
+    def decide(self, compressor, shapes, topo, alive: np.ndarray,
+               bws: Sequence[float], latency_s: float, t_compute_s: float,
+               gossip: bool) -> Tuple[int, Optional[Dict[int, int]]]:
+        """One round's full rank decision: ``(rank_t, ranks_map)`` where
+        ``ranks_map`` is the per-cluster send-rank dict under gossip (None
+        otherwise) and ``rank_t`` the round's headline rank (gossip: the
+        max alive send rank — what a healthy edge runs at).
+
+        This is the ONE implementation both simulator backends call with
+        the same modeled inputs; the proc coordinator's broadcast schedule
+        cannot drift from the in-process one by construction."""
+        alive = np.asarray(alive, bool)
+        alive_ids = [int(i) for i in np.flatnonzero(alive)]
+        if not alive_ids:
+            return self.executed()[0], None
+        if gossip:
+            ranks_map = self.ranks_gossip(compressor, shapes, topo, alive,
+                                          bws, latency_s, t_compute_s)
+            rank_t = (max(ranks_map.values()) if ranks_map
+                      else self.executed()[0])
+            return rank_t, ranks_map
+        bw_bot = (float(min(bws[c] for c in alive_ids))
+                  if len(alive_ids) >= 2 else 0.0)
+        return self.rank_gather(compressor, shapes, len(alive_ids), bw_bot,
+                                latency_s, t_compute_s), None
+
+    def _max_rank_within(self, t_of_rank: Callable[[int], float],
+                         budget_s: float) -> int:
+        """Largest r in [r_min, r1] with t_of_rank(r) <= budget_s (t is
+        monotone nondecreasing in r); clamped to r_min when even the floor
+        does not fit — the controller never starves the subspace entirely."""
+        lo, hi = self.cfg.r_min, self.cfg.r1
+        if t_of_rank(hi) <= budget_s:
+            return hi
+        if t_of_rank(lo) > budget_s:
+            return lo
+        while hi - lo > 1:                 # invariant: t(lo)<=b < t(hi)
+            mid = (lo + hi) // 2
+            if t_of_rank(mid) <= budget_s:
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+    def rank_gather(self, compressor, shapes, n_alive: int,
+                    bw_bottleneck: float, latency_s: float,
+                    t_compute_s: float) -> int:
+        """Round rank for the hub/gather outer sync: spectral component
+        clamped (bandwidth/hybrid) so the ring all-gather over the
+        bottleneck link fits the overlap budget."""
+        r_s = self.state.r_t
+        if self.spec.mode == "spectral" or n_alive < 2 or bw_bottleneck <= 0:
+            return r_s
+        budget = self.spec.overlap_frac * t_compute_s
+
+        def t_of(r: int) -> float:
+            wire = compressor.wire_bytes(shapes, rank=r)
+            return ((n_alive - 1) * wire / bw_bottleneck
+                    + (n_alive - 1) * latency_s)
+
+        r_b = self._max_rank_within(t_of, budget)
+        return r_b if self.spec.mode == "bandwidth" else min(r_s, r_b)
+
+    def ranks_gossip(self, compressor, shapes, topo, alive: np.ndarray,
+                     bws: Sequence[float], latency_s: float,
+                     t_compute_s: float) -> Dict[int, int]:
+        """Per-EDGE ranks for a gossip round, keyed by *sending* cluster:
+        every directed edge (c -> j) carries c's payload serialized on c's
+        own uplink, so cluster c's send rank is the largest one whose
+        ``deg_c`` neighbor sends still fit the overlap budget on ``bws[c]``.
+        A degraded uplink therefore lowers the rank on its edges only."""
+        alive = np.asarray(alive, bool)
+        r_s = self.state.r_t
+        budget = self.spec.overlap_frac * t_compute_s
+        ranks: Dict[int, int] = {}
+        for c in (int(i) for i in np.flatnonzero(alive)):
+            deg = len(topo.alive_neighbors(c, alive))
+            if deg == 0 or self.spec.mode == "spectral" or bws[c] <= 0:
+                ranks[c] = r_s
+                continue
+
+            def t_of(r: int, c=c, deg=deg) -> float:
+                wire = compressor.wire_bytes(shapes, rank=r)
+                return deg * wire / float(bws[c]) + deg * latency_s
+
+            r_b = self._max_rank_within(t_of, budget)
+            ranks[c] = r_b if self.spec.mode == "bandwidth" else min(r_s, r_b)
+        return ranks
+
+    # ---- spectral feedback ------------------------------------------------
+    def observe(self, mean_pending) -> None:
+        """Advance Alg. 3 with the realized averaged pseudo-gradient (call
+        AFTER logging the executed rank for the round)."""
+        self.state = observe_mean_pseudo_grad(self.state, mean_pending,
+                                              self.cfg)
+
+    def observe_rank(self, r_prime: float) -> None:
+        self.state = adagradcmp_update(self.state, _quantized_rank(r_prime),
+                                       self.cfg)

@@ -118,6 +118,15 @@ class Compressor:
                    rank: Optional[int] = None) -> int:
         return sum(math.prod(s) * 4 for s in shapes.values())
 
+    def wire_bytes_per_edge(self, shapes: Dict[str, Tuple[int, ...]],
+                            ranks: Dict[int, int]) -> Dict[int, int]:
+        """Per-sender payload sizes under per-edge adaptive ranks: ``ranks``
+        maps cluster id -> the rank that cluster compresses at for its own
+        uplink (the bandwidth-aware controller's gossip decision — every
+        directed edge carries the sender's payload)."""
+        return {c: int(self.wire_bytes(shapes, rank=r))
+                for c, r in ranks.items()}
+
 
 def tree_shapes(tree) -> Dict[str, Tuple[int, ...]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)

@@ -124,12 +124,20 @@ def per_cluster_compress(compressor: Compressor, stacked_tree, comp_state,
     bit-identical to N independent workers (the sim/proc equivalence gate),
     at the cost of C copies of the compressor in the HLO — C is the cluster
     count (2-8 everywhere in this repo), not a batch dimension.
+
+    ``rank_scalar`` may be a scalar (one adaptive rank for everyone) or a
+    (n_clusters,) vector of per-cluster send ranks — the bandwidth-aware
+    controller's per-EDGE annealing under gossip topologies, where a
+    degraded uplink compresses harder on its own edges only.
     """
     n = jax.tree.leaves(stacked_tree)[0].shape[0]
+    per_cluster_rank = (rank_scalar is not None
+                        and getattr(rank_scalar, "ndim", 0) >= 1)
     hats, states = [], []
     for c in range(n):
+        r_c = rank_scalar[c] if per_cluster_rank else rank_scalar
         hat, st = compressor.roundtrip(take_row(stacked_tree, c),
-                                       take_row(comp_state, c), rank_scalar)
+                                       take_row(comp_state, c), r_c)
         hats.append(hat)
         states.append(st)
     stack = lambda trees: jax.tree.map(lambda *xs: jnp.stack(xs), *trees)

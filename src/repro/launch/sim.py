@@ -33,6 +33,14 @@ links, with injectable faults, and prints the event timeline:
   python -m repro.launch.sim --backend proc --clusters 4 --topology ring \
       --check-equivalence
 
+  # §2.4 ADAPTIVE compression (spectral | bandwidth | hybrid): the
+  # controller anneals the per-round rank from the pseudo-gradient
+  # spectrum and/or the measured link; on the proc backend the decision is
+  # broadcast in the round header and the equivalence gate also asserts
+  # identical rank schedules:
+  python -m repro.launch.sim --backend proc --clusters 2 --adaptive hybrid \
+      --degrade 2:4:0.25:1 --check-equivalence
+
 Fault grammar (repeatable flags):
   --straggler C:START:END:SLOWDOWN      step time x SLOWDOWN on cluster C
   --degrade START:END:FACTOR[:C]        bandwidth x FACTOR (all links or C)
@@ -146,6 +154,21 @@ def main() -> None:
                     choices=["identity", "fp16", "quant", "diloco_x",
                              "topk", "random_sparse", "cocktail"])
     ap.add_argument("--rank", type=int, default=None)
+    ap.add_argument("--adaptive", default="off",
+                    choices=["off", "spectral", "bandwidth", "hybrid"],
+                    help="§2.4 adaptive compression controller: spectral = "
+                         "Alg. 3 rank annealing from the pseudo-gradient "
+                         "spectrum; bandwidth = largest rank whose outer "
+                         "sync fits the overlap budget on the measured "
+                         "link; hybrid = min of both.  Under gossip "
+                         "topologies the rank is per-EDGE (a degraded "
+                         "uplink compresses harder on its own edges only). "
+                         "Works on both backends; the rank schedule is "
+                         "covered by the equivalence gate")
+    ap.add_argument("--adaptive-window", type=int, default=3,
+                    help="Alg. 3 window c (spectral warm-up rounds)")
+    ap.add_argument("--adaptive-rmin", type=int, default=2,
+                    help="adaptive rank floor r_min")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the §2.3 one-step-delay overlap")
     ap.add_argument("--topology", default="star",
@@ -201,6 +224,26 @@ def main() -> None:
               f"{[e.describe() for e in faults.events]}; --no-faults to "
               f"disable)")
 
+    adaptive_spec = None
+    if args.adaptive != "off":
+        if args.compressor != "diloco_x":
+            ap.error("--adaptive anneals the low-rank stage; it needs "
+                     "--compressor diloco_x")
+        from repro.core.adaptive import AdaptiveSpec
+        adaptive_spec = AdaptiveSpec(
+            mode=args.adaptive, window=args.adaptive_window,
+            r1=args.rank, h1=args.h_steps, r_min=args.adaptive_rmin)
+        if (args.backend == "model" and adaptive_spec.needs_spectral
+                and not args.numeric):
+            print(f"(--adaptive {args.adaptive} needs the realized "
+                  "pseudo-gradient spectrum: enabling --numeric)")
+            args.numeric = True
+        if (args.backend == "proc" and adaptive_spec.needs_spectral
+                and args.timing_only):
+            ap.error(f"--adaptive {args.adaptive} needs numeric workers "
+                     "for the spectral rank signal; drop --timing-only or "
+                     "use --adaptive bandwidth")
+
     kw = {"rank": args.rank} if args.compressor in ("diloco_x",) else {}
     if args.backend == "proc" and args.compressor == "diloco_x":
         # the numeric problem tree is problem_d x problem_d; let the
@@ -215,6 +258,7 @@ def main() -> None:
         faults=faults, compressor=args.compressor,
         compressor_kw=kw, delay=not args.no_overlap,
         rank=(args.rank if args.compressor == "diloco_x" else None),
+        adaptive=adaptive_spec,
         topology=args.topology, topology_degree=args.topology_degree,
         topology_seed=args.seed,
         n_params=args.params, seed=args.seed)

@@ -98,7 +98,11 @@ def main() -> None:
 
     from repro.checkpoint import checkpoint as ckpt_lib
     for r in range(args.rounds):
+        # pre-observe controller state = what this round executes (same
+        # accounting rule as train/trainer.py: the post-observe state is
+        # round r+1's budget and must not be logged as this round's)
         h_t = ada.h_t if args.adaptive else args.h_steps
+        r_exec = ada.r_t
         losses = []
         for h in range(h_t):
             toks = jnp.stack([d.next_batch()["tokens"] for d in data])
@@ -110,17 +114,16 @@ def main() -> None:
                 batch["frontend"] = fe
             params, opt, loss = train_step(params, opt, batch)
             losses.append(float(loss))
-        rank_scalar = jnp.asarray(ada.r_t, jnp.int32)
+        rank_scalar = jnp.asarray(r_exec, jnp.int32)
         params, outer_state = outer_step(params, outer_state, rank_scalar)
-        if args.adaptive:
-            r_prime = float(adaptive.tree_effective_rank(
-                jax.tree.map(lambda x: x.mean(0),
-                             outer_state.delta_pending)))
-            ada = adaptive.adagradcmp_update(ada, r_prime, ada_cfg)
         wire = mc.wire_bytes_tree(params1, ccfg,
-                                  rank=ada.r_t if args.adaptive else None)
+                                  rank=r_exec if args.adaptive else None)
         print(f"round {r}: mean_loss={np.mean(losses):.4f} "
-              f"H={h_t} r={ada.r_t} wire_per_cluster={wire/1e6:.2f}MB")
+              f"H={h_t} r={r_exec} wire_per_cluster={wire/1e6:.2f}MB")
+        if args.adaptive:
+            ada = adaptive.observe_mean_pseudo_grad(
+                ada, jax.tree.map(lambda x: x.mean(0),
+                                  outer_state.delta_pending), ada_cfg)
         if args.ckpt_dir:
             ckpt_lib.save(os.path.join(args.ckpt_dir, f"round_{r:04d}"),
                           {"params": params, "outer": outer_state._asdict()},

@@ -155,6 +155,16 @@ def _spawn(cluster: int, port: int, sc: Scenario, problem, gossip: bool,
         "problem": problem.to_dict() if problem is not None else None,
         "compressor": {"name": sc.compressor, "kw": dict(sc.compressor_kw)},
         "rank": sc.rank,
+        # adaptive compression: the coordinator broadcasts the controller's
+        # per-round decision in the round header; workers compress with it
+        # (and, in spectral modes, report their pending delta back as the
+        # controller's rank signal)
+        "adaptive_rank": (sc.adaptive is not None
+                          and sc.adaptive.mode != "off"),
+        "report_pending": (sc.adaptive is not None
+                           and sc.adaptive.needs_spectral),
+        "warm_rank": (None if sc.adaptive is None
+                      else sc.adaptive.r1),
         "delay": sc.delay,
         "gossip": gossip,
         "epoch": epoch,
@@ -208,7 +218,22 @@ def run_proc(sc: Scenario, problem=None, *,
 
     C = sc.n_clusters
     compressor = make_compressor(sc.compressor, **sc.compressor_kw)
-    wire = int(compressor.wire_bytes(sc.shapes(), rank=sc.rank))
+    shapes = sc.shapes()
+    ctrl = (sc.adaptive.controller(compressor)
+            if sc.adaptive is not None else None)
+    if ctrl is not None and ctrl.needs_spectral:
+        # mirror the in-process simulator's validation exactly
+        if not numeric:
+            raise ValueError(
+                f"adaptive mode {sc.adaptive.mode!r} needs a numeric "
+                "problem (the spectral rank signal comes from realized "
+                "deltas); timing-only runs can use mode='bandwidth'")
+        if not sc.delay:
+            raise ValueError(
+                f"adaptive mode {sc.adaptive.mode!r} reads the pending "
+                "pseudo-gradient, which only delay=True rounds carry; "
+                "use mode='bandwidth' for synchronous rounds")
+    wire = int(compressor.wire_bytes(shapes, rank=sc.rank))
     alive = (np.ones(C, bool) if sc.initial_alive is None
              else np.asarray(sc.initial_alive, bool).copy())
     base_mm = (MixingMatrix.metropolis(topo)
@@ -346,10 +371,12 @@ def run_proc(sc: Scenario, problem=None, *,
                         "backend has no replica left to carry the outer "
                         "state (the in-process simulator keeps applying "
                         "momentum-only rounds; run that instead)")
+                rank0 = (ctrl.executed()[0] if ctrl is not None else sc.rank)
                 events.append(RoundEvent(
                     round=r, alive=(), rejoined=(), h_steps=sc.h_steps,
-                    rank=sc.rank, t_compute_s=0.0, t_comm_s=0.0,
-                    exposed_comm_s=0.0, t_round_s=0.0, wire_bytes=wire,
+                    rank=rank0, t_compute_s=0.0, t_comm_s=0.0,
+                    exposed_comm_s=0.0, t_round_s=0.0,
+                    wire_bytes=int(compressor.wire_bytes(shapes, rank=rank0)),
                     slowest_cluster=-1, bottleneck_cluster=-1, tokens=0.0,
                     faults=sc.faults.active(r), wire_bytes_total=0))
                 continue
@@ -364,16 +391,34 @@ def run_proc(sc: Scenario, problem=None, *,
             bws = np.array([sc.link.bytes_per_s
                             * sc.faults.bandwidth_factor(c, r) * bw_j[c]
                             for c in range(C)])
+
+            # --- adaptive rank decision: identical inputs (modeled bws /
+            # barrier compute) and identical host arithmetic as the
+            # in-process simulator, so the broadcast schedule matches it
+            rank_t = sc.rank
+            ranks_map = None
+            wire_r = wire
+            if ctrl is not None:
+                rank_t, ranks_map = ctrl.decide(
+                    compressor, shapes, topo, alive, bws, sc.link.latency_s,
+                    h_t * float(t_steps[slowest]), gossip)
+                wire_r = int(compressor.wire_bytes(shapes, rank=rank_t))
+            ranks_tuple = (tuple(ranks_map[c] for c in alive_ids)
+                           if ranks_map is not None else None)
+
             if gossip:
-                gc = gossip_round_comm(topo, alive, wire, bws,
-                                       sc.link.latency_s)
+                wire_by = (compressor.wire_bytes_per_edge(shapes, ranks_map)
+                           if ranks_map is not None else None)
+                gc = gossip_round_comm(topo, alive, wire_r, bws,
+                                       sc.link.latency_s,
+                                       wire_by_cluster=wire_by)
                 bottleneck = gc.bottleneck_cluster
                 wire_total = gc.wire_bytes_total
                 W_r = (base_mm.masked(alive).W if base_mm is not None
                        else None)
             elif n_alive >= 2:
                 bottleneck = int(min(alive_ids, key=lambda c: bws[c]))
-                wire_total = round_wire_total("gather", n_alive, wire)
+                wire_total = round_wire_total("gather", n_alive, wire_r)
             else:
                 bottleneck, wire_total = -1, 0
 
@@ -385,10 +430,16 @@ def run_proc(sc: Scenario, problem=None, *,
                     "compute_target_s": float(h_t * t_steps[c]),
                     "latency_s": float(sc.link.latency_s),
                 }
+                if ctrl is not None:
+                    # broadcast the controller decision: this worker's send
+                    # rank for the round (gossip: its own per-edge rank)
+                    rmsg["rank"] = int(ranks_map[c] if ranks_map is not None
+                                       else rank_t)
                 if gossip:
                     nbrs = topo.alive_neighbors(c, alive)
+                    wire_c = (wire_by[c] if ranks_map is not None else wire_r)
                     rmsg.update({
-                        "charge_bytes": float(wire) if nbrs else None,
+                        "charge_bytes": float(wire_c) if nbrs else None,
                         "rate_bytes_per_s": (float(bws[c]) if nbrs
                                              else None),
                         "peers": {int(j): ("127.0.0.1",
@@ -399,7 +450,7 @@ def run_proc(sc: Scenario, problem=None, *,
                         "p2p_timeout_s": float(p2p_timeout_s),
                     })
                 else:
-                    charge = (n_alive - 1) * wire if n_alive >= 2 else 0
+                    charge = (n_alive - 1) * wire_r if n_alive >= 2 else 0
                     rmsg.update({
                         "charge_bytes": float(charge),
                         "rate_bytes_per_s": (float(bws[c]) if charge
@@ -446,6 +497,7 @@ def run_proc(sc: Scenario, problem=None, *,
             # --- collect round-done reports -------------------------------
             t_compute_meas, t_comm_workers = 0.0, 0.0
             losses, hash_rows, miss_tags = [], [], []
+            pend_rows: Dict[int, Any] = {}
             for c in list(contributors):
                 if not alive[c]:
                     continue
@@ -463,9 +515,20 @@ def run_proc(sc: Scenario, problem=None, *,
                     losses.append(float(msg["loss"]))
                 if msg.get("param_hash") is not None:
                     hash_rows.append((c, msg["param_hash"]))
+                if msg.get("pending") is not None:
+                    pend_rows[c] = msg["pending"]
                 for j in msg.get("missing", []):
                     miss_tags.append(f"p2pmiss(c{c}<-c{j})")
             t_round_meas = time.monotonic() - t0
+
+            if ctrl is not None and ctrl.needs_spectral:
+                # spectral feedback: masked mean of the workers' reported
+                # post-round pending deltas through the same jitted mean
+                # the in-process simulator uses — identical r' signal,
+                # identical next-round rank
+                stacked = _stack_rows([pend_rows.get(c, zeros_row)
+                                       for c in range(C)])
+                ctrl.observe(mean_j(stacked, jnp.asarray(alive, jnp.float32)))
 
             # measured comm time: the central gather phase for the
             # overlapped hub round; otherwise the slowest worker's own
@@ -490,16 +553,17 @@ def run_proc(sc: Scenario, problem=None, *,
             events.append(RoundEvent(
                 round=r, alive=tuple(survivors),
                 rejoined=tuple(int(i) for i in np.flatnonzero(rejoined)),
-                h_steps=h_t, rank=sc.rank,
+                h_steps=h_t, rank=rank_t,
                 t_compute_s=t_compute_meas, t_comm_s=t_comm_meas,
                 exposed_comm_s=max(0.0, t_round_meas - t_compute_meas),
-                t_round_s=t_round_meas, wire_bytes=wire,
+                t_round_s=t_round_meas, wire_bytes=wire_r,
                 slowest_cluster=slowest, bottleneck_cluster=bottleneck,
                 tokens=tokens,
                 faults=(sc.faults.active(r) + tuple(crash_tags)
                         + tuple(sorted(miss_tags))),
                 loss=(float(np.mean(losses)) if losses else None),
-                param_hash=param_hash, wire_bytes_total=wire_total))
+                param_hash=param_hash, wire_bytes_total=wire_total,
+                ranks=ranks_tuple))
 
         if numeric and alive.any():
             if gossip:

@@ -57,6 +57,15 @@ def check_equivalence(sc: Scenario, problem=None, *,
         "max_abs_time_err_s": 0.0, "max_rel_time_err": 0.0,
         "proc_fingerprint": tl_proc.structural_fingerprint(),
         "model_fingerprint": tl_model.structural_fingerprint(),
+        # adaptive runs: the controller's decision trace must be identical
+        # on both backends (per-round executed rank, and per-edge send
+        # ranks under gossip)
+        "rank_schedule_proc": tl_proc.rank_schedule(),
+        "rank_schedule_model": tl_model.rank_schedule(),
+        "rank_schedule_match": (
+            tl_proc.rank_schedule() == tl_model.rank_schedule()
+            and [e.ranks for e in tl_proc.events]
+            == [e.ranks for e in tl_model.events]),
     }
     if len(tl_proc.events) != len(tl_model.events):
         report["ok"] = report["structural_match"] = False
@@ -68,6 +77,7 @@ def check_equivalence(sc: Scenario, problem=None, *,
         row: Dict[str, Any] = {"round": ep.round}
         struct_ok = (ep.alive == em.alive and ep.rejoined == em.rejoined
                      and ep.h_steps == em.h_steps and ep.rank == em.rank
+                     and ep.ranks == em.ranks
                      and ep.wire_bytes == em.wire_bytes
                      and ep.wire_bytes_total == em.wire_bytes_total
                      and ep.faults == em.faults
@@ -124,6 +134,7 @@ def check_equivalence(sc: Scenario, problem=None, *,
         report["hash_match"] &= bool(same)
 
     report["ok"] = (report["structural_match"] and report["timing_ok"]
+                    and report["rank_schedule_match"]
                     and report["hash_match"] is not False)
     report["timelines"] = {"proc": tl_proc, "model": tl_model}
     return report
@@ -141,9 +152,15 @@ def format_report(report: Dict[str, Any]) -> str:
                      f"params[model] ({h}){t}")
     bitwise = ("n/a (timing-only)" if report["hash_match"] is None
                else report["hash_match"])
+    sched = report.get("rank_schedule_proc") or []
+    if any(r is not None for r in sched):
+        lines.append("rank schedule [proc]:  "
+                     + " ".join("-" if r is None else str(r) for r in sched)
+                     + f"  (match={report['rank_schedule_match']})")
     lines.append(
         "equivalence: structural={structural_match} bitwise={bitwise} "
-        "timing={timing_ok} (max err {max_abs_time_err_s:.3f}s / "
+        "timing={timing_ok} ranks={rank_schedule_match} "
+        "(max err {max_abs_time_err_s:.3f}s / "
         "{max_rel_time_err:.1%})  => {verdict}".format(
             bitwise=bitwise,
             verdict="OK" if report["ok"] else "MISMATCH", **report))

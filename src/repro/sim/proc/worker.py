@@ -77,6 +77,14 @@ class _NumericRuntime:
                                           **cfg["compressor"]["kw"])
         rank = cfg.get("rank")
         rank_scalar = None if rank is None else jnp.asarray(rank, jnp.int32)
+        # adaptive compression: the coordinator broadcasts the controller's
+        # per-round rank in the round header; compile the compressor once
+        # with the rank as a TRACED argument so every decision reuses it
+        self.dynamic_rank = bool(cfg.get("adaptive_rank"))
+        warm = cfg.get("warm_rank")
+        self.warm_rank = int(warm if warm is not None
+                             else (rank if rank is not None
+                                   else getattr(self.compressor, "rank", 64)))
 
         self.params = spec.init_params()
         self.inner_opt = adamw.init(self.params)
@@ -89,8 +97,12 @@ class _NumericRuntime:
 
         one_cluster = spec.one_cluster_fn()
         self.inner_j = jax.jit(one_cluster)
-        self.compress_j = jax.jit(
-            lambda d, s: self.compressor.roundtrip(d, s, rank_scalar))
+        if self.dynamic_rank:
+            self.compress_j = jax.jit(
+                lambda d, s, r: self.compressor.roundtrip(d, s, r))
+        else:
+            self.compress_j = jax.jit(
+                lambda d, s: self.compressor.roundtrip(d, s, rank_scalar))
 
         def err_and_delta(pending, Delta, anchor, params_inner):
             # Alg. 2 error feedback vs the average actually applied:
@@ -120,7 +132,7 @@ class _NumericRuntime:
         """Compile every jitted function on the real shapes so round 0's
         measured time is transport+sleep, not XLA compile."""
         jax = self.jax
-        hat, _ = self.compress_j(self.pending, self.comp_state)
+        hat, _ = self.compress(self.pending, self.comp_state, self.warm_rank)
         p_inner, _, losses = self.inner_j(self.params, self.inner_opt,
                                           self.cluster)
         pend = self.ed_j(self.pending, hat, self.params, p_inner)
@@ -133,6 +145,16 @@ class _NumericRuntime:
             todo.append(self.mix_j(w0, tuple([self.zeros]
                                              * self.n_clusters)))
         jax.block_until_ready(todo)
+
+    def compress(self, tree, comp_state, rank: Optional[int]):
+        """One compressor round-trip at ``rank`` (the coordinator's
+        broadcast decision when adaptive; ignored otherwise — the static
+        rank is baked into the compiled function)."""
+        if self.dynamic_rank:
+            r = self.jnp.asarray(int(rank if rank is not None
+                                     else self.warm_rank), self.jnp.int32)
+            return self.compress_j(tree, comp_state, r)
+        return self.compress_j(tree, comp_state)
 
     def mix(self, w_row: np.ndarray, hats: Dict[int, Any], own_hat) -> Any:
         """Δ_row = Σ_j w_row[j] · hat_j with zeros for absent clusters."""
@@ -174,6 +196,7 @@ def main(argv=None) -> None:
     crash_at = cfg.get("crash_at_round")
     delay = bool(cfg.get("delay", True))
     gossip = bool(cfg.get("gossip", False))
+    report_pending = bool(cfg.get("report_pending", False))
     my_epoch = int(cfg.get("epoch", 0))
 
     mesh = PeerMesh(cluster) if gossip else None
@@ -266,8 +289,8 @@ def main(argv=None) -> None:
             t0 = time.monotonic()
             try:
                 if rt is not None:
-                    hat, comp_new = rt.compress_j(pending_tree,
-                                                  rt.comp_state)
+                    hat, comp_new = rt.compress(pending_tree, rt.comp_state,
+                                                msg.get("rank"))
                     comm_out["hat"] = hat
                     comm_out["comp_state"] = comp_new
                     payload = _to_np(hat)
@@ -330,13 +353,21 @@ def main(argv=None) -> None:
             rt.comp_state = comm_out["comp_state"]
             param_hash = tree_hash(rt.params)
 
-        link.send({"type": "done", "round": r, "cluster": cluster,
-                   "t_compute": cmp_["t_compute"],
-                   "t_comm": comm_out["t_comm"],
-                   "missing": (sorted(set(int(j) for j in msg["peers"])
-                                      - set(comm_out.get("peer_hats", {})))
-                               if gossip else []),
-                   "param_hash": param_hash, "loss": cmp_["loss"]})
+        done = {"type": "done", "round": r, "cluster": cluster,
+                "t_compute": cmp_["t_compute"],
+                "t_comm": comm_out["t_comm"],
+                "missing": (sorted(set(int(j) for j in msg["peers"])
+                                   - set(comm_out.get("peer_hats", {})))
+                            if gossip else []),
+                "param_hash": param_hash, "loss": cmp_["loss"]}
+        if report_pending and rt is not None and delay:
+            # spectral adaptive feedback: the post-round pending delta is
+            # the controller's rank signal.  Control-plane telemetry, not
+            # modeled wire — charge the bucket nothing for it.
+            done["pending"] = _to_np(rt.pending)
+            link.send(done, charge_bytes=0)
+        else:
+            link.send(done)
 
     if mesh is not None:
         mesh.close()

@@ -12,6 +12,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core import comm
+from repro.core.adaptive import AdaptiveSpec
 from repro.sim.faults import FaultSchedule
 
 
@@ -49,6 +50,12 @@ class Scenario:
     compressor: str = "diloco_x"
     compressor_kw: Dict[str, Any] = field(default_factory=dict)
     rank: Optional[int] = None           # wire-accounting rank r_t override
+
+    # §2.4 adaptive compression: an ``core.adaptive.AdaptiveSpec`` enables
+    # the spectral/bandwidth/hybrid controller on BOTH backends (the proc
+    # coordinator broadcasts the per-round decision in the round header);
+    # None = fixed rank.  ``spec.r1=None`` resolves to the compressor rank.
+    adaptive: Optional[AdaptiveSpec] = None
     delay: bool = True                   # §2.3 one-step-delay overlap
     allreduce_per_step: bool = False     # vanilla-DDP/CocktailSGD style:
                                          # ring allreduce EVERY local step
@@ -102,6 +109,8 @@ class Scenario:
                        for e in self.faults.events],
             "compressor": self.compressor,
             "rank": self.rank,
+            "adaptive": (None if self.adaptive is None
+                         else self.adaptive.to_dict()),
             "delay": self.delay,
             "allreduce_per_step": self.allreduce_per_step,
             "topology": self.topology,

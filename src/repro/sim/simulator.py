@@ -81,12 +81,30 @@ def _jitter_factors(seed: int, rnd: int, n: int, sigma: float, salt: int
 
 
 def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
-             adaptive_cfg: Optional[Any] = None) -> Timeline:
+             adaptive_cfg: Optional[Any] = None,
+             rank_schedule: Optional[Any] = None) -> Timeline:
     """Run the scenario; returns the event Timeline.
 
-    ``adaptive_cfg`` (an ``adaptive.AdaGradCmpConfig``) enables the Alg. 3
-    controller: requires ``numeric`` (the rank signal is the effective rank
-    of the realized averaged pseudo-gradient, as in train/trainer.py)."""
+    Adaptive compression (paper §2.4), three ways:
+
+     - ``sc.adaptive`` / ``adaptive_cfg`` = an ``adaptive.AdaptiveSpec``:
+       the spectral/bandwidth/hybrid controller picks the per-round rank
+       r_t (and per-edge send ranks under gossip).  Spectral modes need
+       ``numeric`` (the rank signal is the effective rank of the realized
+       averaged pseudo-gradient, as in train/trainer.py) and ``sc.delay``;
+       ``mode="bandwidth"`` is pure link arithmetic and also works
+       timing-only.
+     - ``adaptive_cfg`` = a legacy ``adaptive.AdaGradCmpConfig``: treated
+       as ``AdaptiveSpec(mode="spectral")`` with the same knobs.
+     - ``rank_schedule`` = a recorded per-round rank list (e.g. a previous
+       adaptive run's ``Timeline.rank_schedule()``): replayed verbatim for
+       the wire accounting — timing-only scenarios can replay an adaptive
+       run without a numeric problem or controller.  Entries are scalars,
+       or per-alive-cluster send-rank lists for per-edge gossip rounds
+       (requires the recording run's fault schedule, so the alive sets
+       line up).
+    """
+    from repro.core import adaptive as _ada
     from repro.core.compression import make_compressor
     from repro.topology import (MixingMatrix, gossip_round_comm,
                                 round_wire_total)
@@ -153,13 +171,43 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                "mean": jax.jit(membership.masked_cluster_mean),
                "comp0": compressor.init_state(numeric.params)}
 
-    ada_state = None
-    if adaptive_cfg is not None:
-        if numeric is None:
-            raise ValueError("adaptive_cfg requires a numeric problem "
-                             "(the rank signal comes from realized deltas)")
-        from repro.core import adaptive as _ada
-        ada_state = _ada.AdaGradCmpState.create(adaptive_cfg)
+    ctrl = None
+    schedule = None
+    if rank_schedule is not None:
+        if adaptive_cfg is not None or sc.adaptive is not None:
+            raise ValueError("rank_schedule replays a recorded adaptive "
+                             "run; drop adaptive_cfg / Scenario.adaptive")
+        def _norm(x):
+            if x is None:
+                return None
+            if isinstance(x, (list, tuple)):   # per-edge gossip round
+                return [int(v) for v in x]
+            return int(x)
+
+        schedule = [_norm(x) for x in rank_schedule]
+        if len(schedule) < sc.rounds:
+            raise ValueError(f"rank_schedule has {len(schedule)} entries "
+                             f"for {sc.rounds} rounds")
+    else:
+        spec = adaptive_cfg if adaptive_cfg is not None else sc.adaptive
+        if isinstance(spec, _ada.AdaGradCmpConfig):   # legacy entry point
+            spec = _ada.AdaptiveSpec(
+                mode="spectral", window=spec.window, r1=spec.r1, h1=spec.h1,
+                h_min=spec.h_min, r_min=spec.r_min, h_mode=spec.mode)
+        if spec is not None:
+            ctrl = spec.controller(compressor)
+        if ctrl is not None and ctrl.needs_spectral:
+            if numeric is None:
+                raise ValueError(
+                    f"adaptive mode {spec.mode!r} needs a numeric problem "
+                    "(the spectral rank signal comes from realized "
+                    "deltas); timing-only runs can use mode='bandwidth' "
+                    "or replay a recorded rank_schedule")
+            if not sc.delay:
+                raise ValueError(
+                    f"adaptive mode {spec.mode!r} reads the pending "
+                    "pseudo-gradient, which only delay=True rounds carry; "
+                    "use mode='bandwidth' for synchronous rounds")
 
     events = []
     for r in range(sc.rounds):
@@ -168,14 +216,6 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
         n_alive = len(alive_ids)
 
         h_t = sc.h_steps
-        rank_t = sc.rank
-        if ada_state is not None and ada_state.t >= 1:
-            # Alg. 3 anneals the rank (wire bytes + the rank_scalar fed to
-            # the compressor).  Its H co-adaptation is NOT applied: the
-            # numeric inner loop executes the problem's fixed h_steps
-            # (train/trainer.py parity), and the timeline must charge the
-            # compute that actually ran.
-            rank_t = ada_state.r_t
 
         # ---- compute leg: barrier on the slowest alive cluster -----------
         step_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=1)
@@ -187,15 +227,54 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
         else:
             slowest, t_compute = -1, 0.0
 
-        # ---- comm leg: analytic collective over the bottleneck link ------
-        wire = int(compressor.wire_bytes(shapes, rank=rank_t))
+        # ---- link state (modeled per-cluster bandwidths) -----------------
         bw_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=2)
         bws = np.array([sc.link.bytes_per_s * sc.faults.bandwidth_factor(c, r)
                         * bw_j[c] for c in range(C)])
+
+        # ---- rank decision: controller fuses the Alg. 3 spectral state
+        # (through round r-1) with THIS round's measured link/compute
+        # numbers; the executed rank is decided BEFORE the round runs and
+        # is what the timeline charges (no post-update off-by-one).  The
+        # controller's H co-adaptation is NOT applied here: the numeric
+        # inner loop executes the problem's fixed h_steps
+        # (train/trainer.py parity), and the timeline must charge the
+        # compute that actually ran.
+        rank_t = sc.rank
+        ranks_map = None
+        if schedule is not None:
+            entry = schedule[r]
+            if isinstance(entry, list):        # recorded per-edge ranks
+                if not gossip:
+                    raise ValueError(
+                        f"rank_schedule round {r} is a per-edge list but "
+                        f"topology {sc.topology!r} is not gossip")
+                if len(entry) != n_alive:
+                    raise ValueError(
+                        f"rank_schedule round {r} has {len(entry)} send "
+                        f"ranks for {n_alive} alive clusters (replay needs "
+                        "the recording run's fault schedule)")
+                ranks_map = dict(zip(alive_ids, entry))
+                rank_t = max(entry) if entry else sc.rank
+            else:
+                rank_t = entry
+        elif ctrl is not None:
+            rank_t, ranks_map = ctrl.decide(compressor, shapes, topo, alive,
+                                            bws, sc.link.latency_s,
+                                            t_compute, gossip)
+        ranks_tuple = (tuple(ranks_map[c] for c in alive_ids)
+                       if ranks_map is not None else None)
+
+        # ---- comm leg: analytic collective over the bottleneck link ------
+        wire = int(compressor.wire_bytes(shapes, rank=rank_t))
         if gossip:
             # neighbor exchange: each cluster ships its payload to every
-            # alive graph neighbor over its own (serialized) uplink
-            gc = gossip_round_comm(topo, alive, wire, bws, sc.link.latency_s)
+            # alive graph neighbor over its own (serialized) uplink;
+            # per-edge adaptive ranks give each sender its own payload size
+            wire_by = (compressor.wire_bytes_per_edge(shapes, ranks_map)
+                       if ranks_map is not None else None)
+            gc = gossip_round_comm(topo, alive, wire, bws, sc.link.latency_s,
+                                   wire_by_cluster=wire_by)
             t_comm, bottleneck = gc.t_comm_s, gc.bottleneck_cluster
             wire_total = gc.wire_bytes_total
             exposed = (max(0.0, t_comm - t_compute) if sc.delay else t_comm)
@@ -303,8 +382,16 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                 if gossip:
                     st = consensus_bootstrap(st, rejoined,
                                              alive & ~rejoined)
-            rank_scalar = (None if rank_t is None
-                           else jnp.asarray(rank_t, jnp.int32))
+            if ranks_map is not None:
+                # per-EDGE gossip ranks: one send rank per cluster row
+                # (dead rows compress zeros — any rank; use the round max)
+                rank_vec = np.full((C,), int(rank_t), np.int32)
+                for c, rv in ranks_map.items():
+                    rank_vec[c] = int(rv)
+                rank_scalar = jnp.asarray(rank_vec, jnp.int32)
+            else:
+                rank_scalar = (None if rank_t is None
+                               else jnp.asarray(rank_t, jnp.int32))
             alive_vec = jnp.asarray(alive, jnp.float32)
             if gossip:
                 W_r = base_mm.masked(alive).W
@@ -329,13 +416,12 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             aux_np = np.asarray(aux)
             if n_alive:
                 loss = float(np.mean(aux_np[np.asarray(alive)]))
-            if ada_state is not None:
-                from repro.core import adaptive as _ada
-                r_prime = float(_ada.tree_effective_rank(
-                    num["membership"].masked_cluster_mean(
-                        st.delta_pending, alive_vec)))
-                ada_state = _ada.adagradcmp_update(ada_state, r_prime,
-                                                   adaptive_cfg)
+            if ctrl is not None and ctrl.needs_spectral:
+                # spectral feedback AFTER the executed rank was logged;
+                # the jitted masked mean is the same compiled program the
+                # proc coordinator runs on the workers' reported pendings,
+                # keeping the two backends' rank schedules bit-identical
+                ctrl.observe(num["mean"](st.delta_pending, alive_vec))
 
         events.append(RoundEvent(
             round=r, alive=alive_ids,
@@ -345,7 +431,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             wire_bytes=wire, slowest_cluster=slowest,
             bottleneck_cluster=bottleneck, tokens=tokens,
             faults=sc.faults.active(r), loss=loss, param_hash=param_hash,
-            wire_bytes_total=wire_total, disagreement=disagreement))
+            wire_bytes_total=wire_total, disagreement=disagreement,
+            ranks=ranks_tuple))
 
     tl = Timeline(scenario=sc.meta(), events=events)
     if num is not None:

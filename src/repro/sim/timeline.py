@@ -81,6 +81,11 @@ class RoundEvent:
     disagreement: Optional[float] = None   # gossip numeric mode: RMS
                                        # distance of per-cluster outer
                                        # params from their alive mean
+    ranks: Optional[Tuple[int, ...]] = None   # per-cluster SEND ranks under
+                                       # gossip adaptive compression (id
+                                       # order over the alive set): a
+                                       # degraded uplink's edges carry a
+                                       # lower rank than healthy ones
 
 
 @dataclass
@@ -153,8 +158,19 @@ class Timeline:
         return hashlib.sha256(blob).hexdigest()
 
     STRUCTURAL_FIELDS = ("round", "alive", "rejoined", "h_steps", "rank",
-                         "wire_bytes", "wire_bytes_total", "faults",
+                         "ranks", "wire_bytes", "wire_bytes_total", "faults",
                          "param_hash")
+
+    def rank_schedule(self) -> List[Any]:
+        """Per-round executed compressor ranks — the adaptive controller's
+        decision trace.  Feed it back to ``simulate(sc,
+        rank_schedule=...)`` to replay an adaptive run's wire accounting in
+        timing-only mode (no numeric problem, no controller).  Per-edge
+        gossip rounds record the per-cluster send-rank list
+        (``RoundEvent.ranks``, alive-id order) so the replay reproduces
+        the per-edge payload sizes, not just the headline max."""
+        return [list(e.ranks) if e.ranks is not None else e.rank
+                for e in self.events]
 
     def structural_fingerprint(self) -> str:
         """Like ``fingerprint()`` but over the *stable* per-round fields only

@@ -15,7 +15,7 @@ All numpy/python; importable without jax.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,22 +31,29 @@ class GossipComm:
 
 
 def gossip_round_comm(topo: Topology, alive: np.ndarray, wire_bytes: int,
-                      bws: Sequence[float], latency_s: float) -> GossipComm:
+                      bws: Sequence[float], latency_s: float,
+                      wire_by_cluster: Optional[Dict[int, int]] = None
+                      ) -> GossipComm:
     """Per-round comm accounting for a gossip topology.
 
     ``bws`` is the per-cluster bandwidth *after* fault degradation/jitter
-    (index = cluster id, dead entries ignored).  Deterministic tie-break:
-    first alive cluster with the max time wins, matching Python ``max``
-    over ascending ids on both backends.
+    (index = cluster id, dead entries ignored).  ``wire_by_cluster`` is the
+    per-EDGE variant: cluster c ships ``wire_by_cluster[c]`` bytes per
+    neighbor (the bandwidth-aware controller compresses a degraded uplink's
+    edges harder); omitted, every sender ships ``wire_bytes``.
+    Deterministic tie-break: first alive cluster with the max time wins,
+    matching Python ``max`` over ascending ids on both backends.
     """
     alive = np.asarray(alive, bool)
     alive_ids = [int(i) for i in np.flatnonzero(alive)]
+    w_of = (lambda c: int(wire_by_cluster[c])) if wire_by_cluster is not None \
+        else (lambda c: int(wire_bytes))
     sends = {c: len(topo.alive_neighbors(c, alive)) for c in alive_ids}
-    total = wire_bytes * sum(sends.values())
+    total = sum(sends[c] * w_of(c) for c in alive_ids)
     busy = [c for c in alive_ids if sends[c]]
     if not busy:
         return GossipComm(0.0, -1, 0, sends)
-    t_of = lambda c: (sends[c] * wire_bytes / float(bws[c])
+    t_of = lambda c: (sends[c] * w_of(c) / float(bws[c])
                       + sends[c] * latency_s)
     bottleneck = max(busy, key=lambda c: (t_of(c), -c))
     return GossipComm(float(t_of(bottleneck)), int(bottleneck), int(total),

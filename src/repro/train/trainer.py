@@ -41,6 +41,7 @@ class TrainConfig:
     error_feedback: bool = True
     adaptive: bool = False        # run AdaGradCmp (Alg. 3)
     adaptive_mode: str = "paper"
+    adaptive_window: int = 5      # Alg. 3 window c
     hetero: float = 0.0           # per-cluster data heterogeneity (xi^2>0)
     seed: int = 0
 
@@ -151,7 +152,7 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
 
     ada_cfg = adaptive.AdaGradCmpConfig(
         r1=getattr(compressor, "rank", 64), h1=tcfg.h_steps,
-        mode=tcfg.adaptive_mode)
+        mode=tcfg.adaptive_mode, window=tcfg.adaptive_window)
     ada_state = adaptive.AdaGradCmpState.create(ada_cfg)
 
     shapes = tree_shapes(params)
@@ -159,21 +160,23 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
     t0 = time.time()
     rank_scalar = jnp.asarray(ada_state.r_t, jnp.int32)
     for r in range(n_rounds):
+        # the controller state ENTERING the round is what this round
+        # executes (rank_scalar above was derived from it); log that, not
+        # the post-observe state — which is round r+1's budget
+        r_exec, h_exec = ada_state.r_t, ada_state.h_t
         state, round_losses = round_jit(state, rank_scalar)
         losses.append(float(np.mean(np.asarray(round_losses))))
         evals.append(float(eval_jit(state.params)))
-        if tcfg.adaptive and tcfg.compress:
-            r_prime = float(adaptive.tree_effective_rank(
-                cluster_mean(state.delta_pending)))
-            ada_state = adaptive.adagradcmp_update(ada_state, r_prime,
-                                                   ada_cfg)
-            rank_scalar = jnp.asarray(ada_state.r_t, jnp.int32)
         wires.append(compressor.wire_bytes(
-            shapes, rank=ada_state.r_t if tcfg.adaptive else None)
+            shapes, rank=r_exec if tcfg.adaptive else None)
             if tcfg.compress else
             sum(int(np.prod(s)) * 4 for s in shapes.values()))
-        hs.append(ada_state.h_t if tcfg.adaptive else tcfg.h_steps)
-        rs.append(ada_state.r_t)
+        hs.append(h_exec if tcfg.adaptive else tcfg.h_steps)
+        rs.append(r_exec)
+        if tcfg.adaptive and tcfg.compress:
+            ada_state = adaptive.observe_mean_pseudo_grad(
+                ada_state, cluster_mean(state.delta_pending), ada_cfg)
+            rank_scalar = jnp.asarray(ada_state.r_t, jnp.int32)
     return RunResult(losses, evals, wires, hs, rs, time.time() - t0)
 
 

@@ -1,0 +1,190 @@
+"""Adaptive compression controller (core/adaptive.py): Alg. 3 property
+tests, the stable-rank estimator vs exact SVD, the bandwidth/hybrid budget
+solver (incl. per-edge gossip ranks), and the trainer's executed-rank
+accounting (regression: the logged rank/H used to be the NEXT round's)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adaptive
+from repro.core.adaptive import (AdaGradCmpConfig, AdaGradCmpState,
+                                 AdaptiveSpec, adagradcmp_update)
+from repro.core.compression import LowRankQuant
+from repro.topology import make_topology
+
+SHAPES = {"w0": (64, 64), "w1": (64, 64)}
+
+
+def _compressor(r1=16):
+    return LowRankQuant(rank=r1, min_dim_for_lowrank=8)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 (adagradcmp_update) properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(r1=st.integers(8, 128), h1=st.integers(16, 300),
+       c=st.integers(1, 6), rp=st.floats(1.0, 200.0),
+       mode=st.sampled_from(["paper", "overlap"]))
+def test_adagradcmp_warmup_and_h_formulas(r1, h1, c, rp, mode):
+    """Window warm-up returns exactly (r1, h1); the first post-warm-up
+    step clamps r_min <= r_t <= r1 and applies the mode's H rule verbatim
+    (paper: H1*(r1-r_t)/r1 with the h_min guard; overlap: H1*r_t/r1)."""
+    cfg = AdaGradCmpConfig(window=c, r1=r1, h1=h1, mode=mode)
+    s = AdaGradCmpState.create(cfg)
+    for _ in range(c - 1):                      # t < window: warm-up
+        s = adagradcmp_update(s, rp, cfg)
+        assert (s.r_t, s.h_t) == (r1, h1)
+    s = adagradcmp_update(s, rp, cfg)           # t == window: first anneal
+    expect_r = min(r1, max(cfg.r_min, int(round(rp))))
+    assert cfg.r_min <= s.r_t <= r1
+    assert s.r_t == expect_r
+    assert s.h_t >= cfg.h_min
+    if mode == "paper":
+        assert s.h_t == max(cfg.h_min,
+                            int(round(h1 * (r1 - expect_r) / r1)))
+    else:
+        assert s.h_t == max(cfg.h_min, int(round(h1 * expect_r / r1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(r1=st.integers(8, 64), c=st.integers(2, 5), seed=st.integers(0, 99))
+def test_adagradcmp_history_is_windowed_mean(r1, c, seed):
+    """r_t equals the clamp of the rounded mean over exactly the last c
+    observations, never more."""
+    cfg = AdaGradCmpConfig(window=c, r1=r1, h1=100)
+    s = AdaGradCmpState.create(cfg)
+    rng = np.random.RandomState(seed)
+    hist = []
+    for _ in range(3 * c):
+        rp = float(rng.uniform(1, 1.5 * r1))
+        hist.append(rp)
+        s = adagradcmp_update(s, rp, cfg)
+    expect = min(r1, max(cfg.r_min,
+                         int(round(float(np.mean(hist[-c:]))))))
+    assert s.r_t == expect
+    assert len(s.r_hist) == c
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(16, 48), n=st.integers(16, 48),
+       decay=st.floats(0.3, 0.7), seed=st.integers(0, 50))
+def test_stable_rank_matches_exact_svd(m, n, decay, seed):
+    """Power-iteration stable rank vs the exact ||M||_F^2 / sigma_max^2
+    from a full SVD, on matrices with a known (geometric) spectrum."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(seed)
+    k = min(m, n)
+    u, _ = np.linalg.qr(rng.randn(m, k))
+    v, _ = np.linalg.qr(rng.randn(n, k))
+    s = decay ** np.arange(k)
+    M = (u * s) @ v.T
+    exact = float((s ** 2).sum() / (s ** 2).max())
+    est = float(adaptive.stable_rank(jnp.asarray(M, jnp.float32)))
+    assert abs(est - exact) <= 0.1 * exact + 0.05
+
+
+# ---------------------------------------------------------------------------
+# the bandwidth/hybrid budget solver
+# ---------------------------------------------------------------------------
+
+def test_rank_gather_budget_boundary():
+    """The chosen rank is the LARGEST whose modeled gather time fits the
+    overlap budget: t(r) <= budget < t(r+1) (unless clamped at r1/r_min)."""
+    comp = _compressor(16)
+    spec = AdaptiveSpec(mode="bandwidth", r1=16, r_min=2, window=3)
+    ctrl = spec.controller(comp)
+    n_alive, latency, t_compute = 4, 0.0, 1.0
+
+    def t_of(r):
+        return (n_alive - 1) * comp.wire_bytes(SHAPES, rank=r) / bw
+
+    bw = 1e12
+    assert ctrl.rank_gather(comp, SHAPES, n_alive, bw, latency,
+                            t_compute) == 16           # free link: r1
+    bw = 1.0
+    assert ctrl.rank_gather(comp, SHAPES, n_alive, bw, latency,
+                            t_compute) == 2            # starved: r_min floor
+    bw = 3 * comp.wire_bytes(SHAPES, rank=7) / t_compute   # mid-range
+    r = ctrl.rank_gather(comp, SHAPES, n_alive, bw, latency, t_compute)
+    assert 2 <= r < 16
+    assert t_of(r) <= t_compute < t_of(r + 1)
+
+
+def test_hybrid_is_min_of_spectral_and_bandwidth():
+    comp = _compressor(16)
+    spec = AdaptiveSpec(mode="hybrid", r1=16, r_min=2, window=2)
+    ctrl = spec.controller(comp)
+    assert ctrl.executed() == (16, spec.h1)     # pre-observe: (r1, h1)
+    for _ in range(3):                          # anneal spectral state to ~6
+        ctrl.observe_rank(6.0)
+    assert ctrl.executed()[0] == 6
+    # fat link: spectral wins
+    assert ctrl.rank_gather(comp, SHAPES, 4, 1e12, 0.0, 1.0) == 6
+    # starved link: bandwidth wins
+    assert ctrl.rank_gather(comp, SHAPES, 4, 1.0, 0.0, 1.0) == 2
+
+
+def test_gossip_per_edge_ranks_follow_each_uplink():
+    """Only the degraded cluster's own send rank drops; healthy uplinks
+    keep r1 (ring: every alive cluster ships to deg=2 neighbors)."""
+    comp = _compressor(16)
+    spec = AdaptiveSpec(mode="bandwidth", r1=16, r_min=2, window=3)
+    ctrl = spec.controller(comp)
+    topo = make_topology("ring", 4)
+    alive = np.ones(4, bool)
+    fat = 1e12
+    bws = [fat, fat, 2 * comp.wire_bytes(SHAPES, rank=5), fat]  # c2 degraded
+    ranks = ctrl.ranks_gossip(comp, SHAPES, topo, alive, bws, 0.0,
+                              t_compute_s=1.0)
+    assert ranks[0] == ranks[1] == ranks[3] == 16
+    assert 2 <= ranks[2] < 16
+    # dead clusters are simply absent from the decision
+    alive[1] = False
+    ranks = ctrl.ranks_gossip(comp, SHAPES, topo, alive, bws, 0.0, 1.0)
+    assert sorted(ranks) == [0, 2, 3]
+
+
+def test_adaptive_spec_roundtrip_and_scenario_meta():
+    spec = AdaptiveSpec(mode="hybrid", window=4, r1=32, r_min=3,
+                        overlap_frac=0.8)
+    assert AdaptiveSpec.from_dict(spec.to_dict()) == spec
+    from repro.sim import Scenario
+    sc = Scenario(n_clusters=2, adaptive=spec)
+    assert sc.meta()["adaptive"] == spec.to_dict()
+    with pytest.raises(ValueError):
+        AdaptiveSpec(mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# trainer accounting (regression: train/trainer.py:171-176 off-by-one)
+# ---------------------------------------------------------------------------
+
+def test_trainer_logs_executed_rank_not_next_rounds():
+    """wires/hs/rs for round r must record the controller state that round
+    r EXECUTED.  With window=1 the controller anneals immediately after
+    round 0, so the buggy post-update logging would report round 1's
+    (r_t, H_t) as round 0's; the first adaptive round must pin to
+    (r1, h1)."""
+    from repro.configs.base import get_config
+    from repro.train import trainer as T
+
+    cfg = dataclasses.replace(get_config("opt-1.3b").reduced(),
+                              vocab_size=64)
+    tc = T.TrainConfig(n_clusters=2, local_batch=2, seq_len=16, h_steps=2,
+                       compressor="diloco_x",
+                       compressor_kw=dict(rank=32, min_dim_for_lowrank=8),
+                       adaptive=True, adaptive_window=1, seed=0)
+    res = T.run_diloco_training(cfg, tc, n_rounds=2)
+    assert res.r_per_round[0] == 32        # r1: nothing observed yet
+    assert res.h_per_round[0] == 2         # h1 == h_steps, not the h_min
+                                           # floor the first anneal jumps to
+    # the anneal shows up one round later, where it actually runs
+    assert res.r_per_round[1] < 32
+    assert res.h_per_round[1] >= 8         # paper-mode h_min floor
+    # wire accounting follows the executed rank
+    assert res.wire_bytes_per_round[0] > res.wire_bytes_per_round[1]

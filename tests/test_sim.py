@@ -223,3 +223,117 @@ def test_synthetic_shapes_total():
     shapes = synthetic_shapes(1e8)
     total = sum(int(np.prod(s)) for s in shapes.values())
     assert abs(total - 1e8) / 1e8 < 0.01
+
+
+# ---------------------------------------------------------------------------
+# adaptive compression: controller wiring + rank-schedule replay
+# ---------------------------------------------------------------------------
+
+def _ada_scenario(**kw):
+    from repro.core.adaptive import AdaptiveSpec
+    base = dict(
+        n_clusters=4, rounds=8, h_steps=4, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=200_000),
+        faults=FaultSchedule((LinkDegradation(3, 6, factor=0.05,
+                                              cluster=1),)),
+        compressor="diloco_x",
+        compressor_kw={"rank": 8, "min_dim_for_lowrank": 8}, rank=8,
+        n_params=2e5, seed=0,
+        adaptive=AdaptiveSpec(mode="bandwidth", r1=8, r_min=2, window=3))
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_adaptive_bandwidth_timing_only_recovers_round_time():
+    """Bandwidth mode is pure link arithmetic: it runs timing-only (no
+    numeric problem, no jax round), drops the rank exactly while the link
+    is degraded, and the degraded rounds stay far cheaper than fixed-rank."""
+    sc = _ada_scenario()
+    tl = simulate(sc)
+    sched = tl.rank_schedule()
+    assert sched[:3] == [8, 8, 8] and sched[6:] == [8, 8]
+    assert all(r < 8 for r in sched[3:6])
+    # wire accounting follows the executed rank
+    assert tl.events[3].wire_bytes < tl.events[0].wire_bytes
+    fixed = simulate(dataclasses.replace(sc, adaptive=None))
+    assert tl.events[4].t_round_s < 0.5 * fixed.events[4].t_round_s
+    # deterministic: same scenario => identical timeline
+    assert simulate(sc).fingerprint() == tl.fingerprint()
+
+
+def test_adaptive_spectral_timing_only_raises():
+    from repro.core.adaptive import AdaptiveSpec
+    for mode in ("spectral", "hybrid"):
+        sc = _ada_scenario(adaptive=AdaptiveSpec(mode=mode, r1=8))
+        with pytest.raises(ValueError):
+            simulate(sc)
+
+
+def test_rank_schedule_replays_an_adaptive_run():
+    """A recorded adaptive schedule replays timing-only: same rank column,
+    same wire accounting, no controller/numeric required."""
+    tl = simulate(_ada_scenario())
+    sc_replay = _ada_scenario(adaptive=None)
+    tl2 = simulate(sc_replay, rank_schedule=tl.rank_schedule())
+    assert tl2.rank_schedule() == tl.rank_schedule()
+    assert ([e.wire_bytes for e in tl2.events]
+            == [e.wire_bytes for e in tl.events])
+    with pytest.raises(ValueError):         # schedule shorter than the run
+        simulate(sc_replay, rank_schedule=[8, 8])
+    with pytest.raises(ValueError):         # schedule + controller conflict
+        simulate(_ada_scenario(), rank_schedule=tl.rank_schedule())
+
+
+def test_adaptive_hybrid_numeric_fuses_both_signals():
+    """Hybrid = min(spectral, bandwidth): the degraded window is clamped by
+    the link, afterwards the spectrum keeps the annealed (sub-r1) rank; the
+    run still converges."""
+    from repro.core.adaptive import AdaptiveSpec
+    sc = _ada_scenario(rounds=10,
+                       adaptive=AdaptiveSpec(mode="hybrid", r1=8, r_min=2,
+                                             window=3))
+    tl = simulate(sc, numeric=make_quadratic_problem(4, h_steps=4, seed=0))
+    sched = tl.rank_schedule()
+    assert sched[:3] == [8, 8, 8]           # spectral warm-up at r1
+    assert all(r == 2 for r in sched[3:6])  # degraded link clamps to r_min
+    assert all(2 <= r < 8 for r in sched[6:])   # spectrum annealed below r1
+    losses = tl.losses()
+    assert all(np.isfinite(losses)) and losses[-1] < 0.5 * losses[0]
+
+
+def test_adaptive_gossip_per_edge_only_degraded_uplink_drops():
+    from repro.core.adaptive import AdaptiveSpec
+    sc = _ada_scenario(topology="ring",
+                       adaptive=AdaptiveSpec(mode="bandwidth", r1=8,
+                                             r_min=2, window=3))
+    tl = simulate(sc, numeric=make_quadratic_problem(4, h_steps=4, seed=0))
+    for e in tl.events:
+        assert e.ranks is not None and len(e.ranks) == 4
+        if 3 <= e.round < 6:
+            assert e.ranks[1] < 8                       # degraded uplink
+            assert all(e.ranks[c] == 8 for c in (0, 2, 3))   # its edges only
+        else:
+            assert e.ranks == (8, 8, 8, 8)
+    # the headline rank field records the round max (healthy-edge rank),
+    # while the schedule keeps the per-edge lists for faithful replay
+    assert [e.rank for e in tl.events] == [8] * 8
+    assert tl.rank_schedule()[3] == list(tl.events[3].ranks)
+    # per-edge replay reproduces the per-sender wire accounting exactly
+    tl2 = simulate(dataclasses.replace(sc, adaptive=None),
+                   rank_schedule=tl.rank_schedule())
+    assert ([e.wire_bytes_total for e in tl2.events]
+            == [e.wire_bytes_total for e in tl.events])
+    assert [e.ranks for e in tl2.events] == [e.ranks for e in tl.events]
+
+
+def test_legacy_adagradcmp_cfg_still_accepted():
+    """The historical simulate(sc, numeric=..., adaptive_cfg=
+    AdaGradCmpConfig(...)) entry point keeps working as pure-spectral."""
+    from repro.core.adaptive import AdaGradCmpConfig
+    sc = _ada_scenario(adaptive=None, faults=FaultSchedule(()))
+    cfg = AdaGradCmpConfig(window=2, r1=8, r_min=2)
+    tl = simulate(sc, numeric=make_quadratic_problem(4, h_steps=4, seed=0),
+                  adaptive_cfg=cfg)
+    sched = tl.rank_schedule()
+    assert sched[0] == 8                    # warm-up executes r1
+    assert any(r < 8 for r in sched[2:])    # then the spectrum anneals

@@ -9,8 +9,10 @@ import time
 import numpy as np
 import pytest
 
+from repro.core.adaptive import AdaptiveSpec
 from repro.sim import (FaultSchedule, Join, Leave, LinkProfile, QuadraticSpec,
                        Scenario, Straggler, simulate)
+from repro.sim.faults import LinkDegradation
 from repro.sim.proc import (RateLimitedLink, TokenBucket, pack_frame,
                             recv_frame, run_proc, send_frame, unpack_frames)
 from repro.sim.proc.equivalence import check_equivalence
@@ -198,6 +200,27 @@ def test_gossip_worker_crash_survivors_finish():
     assert any("crash(c2)" in f for f in tl.events[2].faults)
 
 
+def test_adaptive_bandwidth_timing_only_equivalence():
+    """Bandwidth-aware adaptive compression with a degraded link, on real
+    processes: the coordinator derives the per-round rank from the same
+    modeled link state as the in-process simulator and broadcasts it in the
+    round header — identical rank schedules, identical structural
+    fingerprints, measured timing within tolerance."""
+    sc = proc_scenario(
+        rounds=5, h_steps=2, t_step_s=0.02,
+        faults=FaultSchedule((LinkDegradation(1, 3, 0.1, cluster=1),)),
+        adaptive=AdaptiveSpec(mode="bandwidth", r1=8, r_min=2))
+    rep = check_equivalence(sc, None)
+    assert rep["structural_match"], rep
+    assert rep["rank_schedule_match"], rep["rank_schedule_proc"]
+    assert rep["timing_ok"], rep
+    assert rep["proc_fingerprint"] == rep["model_fingerprint"]
+    sched = rep["rank_schedule_proc"]
+    assert min(sched) < max(sched)          # the controller actually moved
+    # degraded rounds compress harder
+    assert sched[1] < sched[0] and sched[2] < sched[0]
+
+
 def test_structural_fingerprint_ignores_wall_clock():
     """Same scenario, different step time: measured/modeled seconds change,
     the structural fingerprint (participants/budgets/wire/hashes) doesn't."""
@@ -262,6 +285,58 @@ def test_proc_gossip_numeric_crash_survivors_finish():
     assert tl.events[-1].alive == (0, 1)
     assert any("crash(c2)" in f for e in tl.events for f in e.faults)
     assert tl.events[-1].loss is not None      # survivors kept training
+
+
+@pytest.mark.slow
+def test_proc_adaptive_hybrid_numeric_bitwise_equivalence():
+    """Adaptive compression end-to-end on the proc backend: workers
+    compress with the broadcast r_t, the coordinator folds the workers'
+    reported pending deltas back into the Alg. 3 window, and BOTH the
+    per-round param hashes and the rank schedule are bit-identical to the
+    in-process simulator through a degraded-link window."""
+    sc = proc_scenario(
+        n_clusters=2, rounds=6, h_steps=4, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=50_000, jitter=0.1),
+        faults=FaultSchedule((LinkDegradation(2, 4, 0.25, cluster=1),)),
+        n_params=2e5,
+        adaptive=AdaptiveSpec(mode="hybrid", r1=8, r_min=2, window=3))
+    spec = QuadraticSpec(n_clusters=2, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep
+    assert rep["rank_schedule_match"], rep["rank_schedule_proc"]
+    assert rep["structural_match"] and rep["timing_ok"], rep
+    assert rep["final_params_bitwise_equal"]
+    sched = rep["rank_schedule_proc"]
+    assert min(sched) < max(sched)          # spectral + bandwidth both bit
+    losses = rep["timelines"]["proc"].losses()
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.slow
+def test_proc_gossip_adaptive_per_edge_bitwise_equivalence():
+    """Per-EDGE adaptive ranks over real p2p links: only the degraded
+    cluster's own sends drop rank (its neighbors keep shipping r1), and
+    replica hashes + per-edge rank tuples match the in-process run
+    bit-for-bit."""
+    sc = proc_scenario(
+        n_clusters=4, rounds=5, h_steps=4, t_step_s=0.05, topology="ring",
+        link=LinkProfile(bytes_per_s=100_000),
+        faults=FaultSchedule((LinkDegradation(1, 4, 0.1, cluster=2),)),
+        n_params=1e5,
+        adaptive=AdaptiveSpec(mode="bandwidth", r1=8, r_min=2, window=3))
+    spec = QuadraticSpec(n_clusters=4, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep
+    assert rep["rank_schedule_match"]
+    assert rep["structural_match"] and rep["timing_ok"], rep
+    events = rep["timelines"]["proc"].events
+    for e in events:
+        assert e.ranks is not None
+        if 1 <= e.round < 4:
+            assert e.ranks[2] < 8                        # degraded uplink
+            assert all(e.ranks[c] == 8 for c in (0, 1, 3))   # its edges only
+        else:
+            assert e.ranks == (8, 8, 8, 8)
 
 
 @pytest.mark.slow
