@@ -163,6 +163,26 @@ def main() -> None:
             raise AssertionError("adaptive-link acceptance criteria failed")
     section("adaptive_link", adaptive_link_bench)
 
+    # beyond-paper: heterogeneous local-step scheduling under stragglers
+    def straggler_h_bench() -> None:
+        from benchmarks import straggler_h
+        sh = straggler_h.run(fast=args.fast or args.skip_convergence)
+        for pair in sh["scenarios"].values():
+            for name in ("global", "balance"):
+                pair[name].pop("timeline_table", None)
+        blobs["straggler_h"] = sh
+        for tag, pair in sh["scenarios"].items():
+            print(f"straggler_h.{tag}.barrier_idle_cut,"
+                  f"{pair['criteria']['barrier_idle_cut']},frac")
+            print(f"straggler_h.{tag}.loss_gap_at_budget,"
+                  f"{pair['criteria']['final_loss_gap_at_budget']},nll")
+        print(f"straggler_h.gossip_clamp_binds,"
+              f"{int(sh['criteria']['gossip_clamp_binds'])},bool")
+        print(f"straggler_h.ok,{int(sh['criteria']['ok'])},bool")
+        if not sh["criteria"]["ok"]:
+            raise AssertionError("straggler-h acceptance criteria failed")
+    section("straggler_h", straggler_h_bench)
+
     # roofline (if the dry-run matrix has been produced)
     def roofline_rows() -> None:
         from benchmarks import roofline

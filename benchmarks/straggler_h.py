@@ -1,0 +1,239 @@
+"""Heterogeneous local-step scheduling under stragglers: what does the
+per-cluster H policy buy, and what does it cost?
+
+The outer sync is a barrier on the slowest alive cluster, so a global H
+makes every fast cluster idle for ``H*(t_slow - t_own)`` seconds per
+round.  This benchmark runs the SAME straggler scenarios (real
+``core/diloco.py`` rounds on the quadratic problem) with the uniform
+``global`` policy and with ``balance`` (``core.adaptive.plan_h``: each
+cluster's H follows its modeled step time, so slow sites do fewer local
+steps and everyone lands near the barrier together) and reports:
+
+ - **barrier idle**: cluster-seconds burnt waiting at the end-of-round
+   barrier (``Timeline.total_barrier_idle_s``) — balance must cut it by
+   at least ``IDLE_CUT_MIN`` on every straggler scenario;
+ - **round time**: the balance barrier tightens toward the fastest
+   cluster's full budget, so total wall-clock drops too;
+ - **loss at equal wall-clock**: the straggler trains fewer steps under
+   balance, which costs per-round accuracy, but the balance run finishes
+   its rounds far sooner; at the balance run's total elapsed time its
+   loss must be within the stated one-sided tolerance of whatever the
+   global run had reached by that same time (the same equal-budget rule
+   ``benchmarks/adaptive_link.py`` uses);
+ - **gossip clamp**: on a ring, the spectral-gap certificate floors every
+   cluster's H at ``ceil(h_base * (1 - gap))`` — slow mixing is not
+   allowed to silently buy replica disagreement (asserted: the clamp
+   binds, and the realized disagreement stays in the global run's range).
+
+  python -m benchmarks.straggler_h [--fast] [--json out.json]
+
+Exit status is non-zero if any acceptance criterion fails.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.adaptive import HSpec, gap_h_floor
+from repro.sim import (FaultSchedule, LinkProfile, QuadraticSpec, Scenario,
+                       Straggler, simulate)
+
+N_CLUSTERS = 4
+H_BASE = 6
+# stated acceptance tolerances:
+#  - balance must cut the summed barrier-idle cluster-seconds by at least
+#    IDLE_CUT_MIN (the ISSUE floor is 25%; a 4x straggler leaves far more
+#    on the table) on every scenario;
+#  - at the balance run's total wall-clock, its loss may exceed the loss
+#    the global run had reached by that same elapsed time by at most
+#    LOSS_TOL_REL (relative, one-sided) + LOSS_TOL_ABS (floor) — the
+#    straggler contributes fewer inner steps, never zero (h_min).
+IDLE_CUT_MIN = 0.25
+LOSS_TOL_REL = 0.15
+LOSS_TOL_ABS = 1e-3
+
+
+def build_scenario(rounds: int, **kw) -> Scenario:
+    base = dict(
+        n_clusters=N_CLUSTERS, rounds=rounds, h_steps=H_BASE, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=1e6),
+        compressor="diloco_x",
+        compressor_kw={"rank": 4, "min_dim_for_lowrank": 8}, rank=4,
+        n_params=2e5, seed=0)
+    base.update(kw)
+    return Scenario(**base)
+
+
+def _run_pair(sc: Scenario, spec: QuadraticSpec) -> Dict[str, Any]:
+    out = {}
+    for name, hs in (("global", None),
+                     ("balance", HSpec(policy="balance", h_min=1))):
+        tl = simulate(dataclasses.replace(sc, h_spec=hs),
+                      numeric=spec.problem())
+        out[name] = {
+            "h_schedule": tl.h_schedule(),
+            "barrier_idle_s": round(tl.total_barrier_idle_s, 6),
+            "barrier_idle_frac": round(tl.barrier_idle_frac, 6),
+            "round_s": [round(e.t_round_s, 6) for e in tl.events],
+            "total_time_s": round(tl.total_time_s, 6),
+            "losses": [round(x, 6) for x in tl.losses()],
+            "final_loss": tl.losses()[-1],
+            "timeline_table": tl.table(),
+            "disagreement": [e.disagreement for e in tl.events],
+        }
+    return out
+
+
+def run(fast: bool = False) -> Dict[str, Any]:
+    rounds = 8 if fast else 14
+    spec = QuadraticSpec(n_clusters=N_CLUSTERS, d=16, n_mats=2,
+                         h_steps=H_BASE, seed=0)
+    scenarios = {
+        # one persistent 4x straggler — the canonical heterogeneous site
+        "persistent": build_scenario(
+            rounds,
+            faults=FaultSchedule((Straggler(1, 1, rounds, 4.0),))),
+        # a straggler window plus per-round jitter — the schedule must
+        # track the modeled step times round by round
+        "windowed_jitter": build_scenario(
+            rounds, link=LinkProfile(bytes_per_s=1e6, jitter=0.08),
+            faults=FaultSchedule((Straggler(2, rounds // 4,
+                                            (3 * rounds) // 4, 3.0),))),
+    }
+    out: Dict[str, Any] = {
+        "rounds": rounds, "idle_cut_min": IDLE_CUT_MIN,
+        "loss_tol_rel": LOSS_TOL_REL, "loss_tol_abs": LOSS_TOL_ABS,
+        "scenarios": {},
+    }
+    all_ok = True
+    for tag, sc in scenarios.items():
+        pair = _run_pair(sc, spec)
+        g, b = pair["global"], pair["balance"]
+        idle_cut = 1.0 - (b["barrier_idle_s"]
+                          / max(g["barrier_idle_s"], 1e-12))
+        # equal-wall-clock comparison: at the balance run's total elapsed
+        # time, which loss had each run reached?  (The balance run has its
+        # final loss; the global run has completed only the rounds whose
+        # cumulative time fits the same budget.)
+        t_budget = b["total_time_s"]
+        cum = np.cumsum(g["round_s"])
+        done = int(np.searchsorted(cum, t_budget + 1e-9, side="right"))
+        g_loss_at_budget = g["losses"][done - 1] if done else float("inf")
+        loss_gap = b["final_loss"] - g_loss_at_budget
+        loss_ok = loss_gap <= LOSS_TOL_ABS + LOSS_TOL_REL * abs(
+            g_loss_at_budget)
+        row_ok = (idle_cut >= IDLE_CUT_MIN) and loss_ok
+        pair["criteria"] = {
+            "barrier_idle_cut": round(idle_cut, 4),
+            "idle_cut_ok": idle_cut >= IDLE_CUT_MIN,
+            "time_saved_s": round(g["total_time_s"] - b["total_time_s"], 6),
+            "wallclock_budget_s": t_budget,
+            "global_rounds_done_at_budget": done,
+            "loss_global_at_budget": g_loss_at_budget,
+            "loss_balance_at_budget": b["final_loss"],
+            "final_loss_gap_at_budget": round(loss_gap, 6),
+            "final_loss_gap_at_equal_rounds": round(
+                b["final_loss"] - g["final_loss"], 6),
+            "loss_within_tol": loss_ok,
+            "ok": row_ok,
+        }
+        all_ok &= row_ok
+        out["scenarios"][tag] = pair
+
+    # gossip leg: on a ring the spectral-gap certificate clamps the H
+    # spread — a 4-ring's masked MH matrix has gap 2/3, so no cluster may
+    # drop below ceil(H * 1/3) even though the straggler's proportional
+    # share would be far lower
+    sc_ring = build_scenario(
+        rounds, topology="ring",
+        faults=FaultSchedule((Straggler(1, 1, rounds, 6.0),)))
+    tl_ring = simulate(dataclasses.replace(
+        sc_ring, h_spec=HSpec(policy="balance", h_min=1)),
+        numeric=spec.problem())
+    tl_ring_g = simulate(sc_ring, numeric=spec.problem())
+    from repro.topology import MixingMatrix
+    gap = MixingMatrix.metropolis(sc_ring.topo()).spectral_gap()
+    floor = gap_h_floor(HSpec(policy="balance", h_min=1), H_BASE, gap)
+    ring_h = [h for row in tl_ring.h_schedule() for h in row]
+    clamp_binds = floor > 1 and min(ring_h) == floor
+    dis_b = max(e.disagreement for e in tl_ring.events)
+    dis_g = max(e.disagreement for e in tl_ring_g.events)
+    # heterogeneous H must not blow up replica disagreement vs uniform H
+    # (one-sided, generous headroom: the clamp is what keeps this bounded)
+    dis_ok = dis_b <= 2.0 * dis_g + 1e-9
+    out["gossip_ring"] = {
+        "spectral_gap": round(float(gap), 6),
+        "h_floor": floor,
+        "h_schedule": tl_ring.h_schedule(),
+        "clamp_binds": clamp_binds,
+        "max_disagreement_balance": dis_b,
+        "max_disagreement_global": dis_g,
+        "disagreement_ok": dis_ok,
+        "barrier_idle_cut": round(
+            1.0 - tl_ring.total_barrier_idle_s
+            / max(tl_ring_g.total_barrier_idle_s, 1e-12), 4),
+    }
+    all_ok = all_ok and clamp_binds and dis_ok
+    out["criteria"] = {
+        "idle_cut_ok_all": all(p["criteria"]["idle_cut_ok"]
+                               for p in out["scenarios"].values()),
+        "loss_ok_all": all(p["criteria"]["loss_within_tol"]
+                           for p in out["scenarios"].values()),
+        "gossip_clamp_binds": clamp_binds,
+        "gossip_disagreement_ok": dis_ok,
+        "ok": bool(all_ok),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+
+    out = run(fast=args.fast)
+    print(f"{'scenario':>16} {'policy':>8} {'idle_s':>8} {'total_s':>8} "
+          f"{'final_loss':>11}")
+    for tag, pair in out["scenarios"].items():
+        for name in ("global", "balance"):
+            row = pair[name]
+            print(f"{tag:>16} {name:>8} {row['barrier_idle_s']:>8.3f} "
+                  f"{row['total_time_s']:>8.2f} {row['final_loss']:>11.4f}")
+        crit = pair["criteria"]
+        print(f"{'':>16} idle cut {crit['barrier_idle_cut']:.1%} "
+              f"(need >= {out['idle_cut_min']:.0%}); at equal wall-clock "
+              f"({crit['wallclock_budget_s']:.2f}s) balance "
+              f"{crit['loss_balance_at_budget']:.4f} vs global "
+              f"{crit['loss_global_at_budget']:.4f} "
+              f"(gap {crit['final_loss_gap_at_budget']:+.4f}, one-sided)"
+              f"  => {'PASS' if crit['ok'] else 'FAIL'}")
+    print("\n--- balance timeline (persistent straggler) ---")
+    print(out["scenarios"]["persistent"]["balance"]["timeline_table"])
+    gr = out["gossip_ring"]
+    print(f"\nring gossip clamp: spectral gap {gr['spectral_gap']:.3f} => "
+          f"H floor {gr['h_floor']} (of {H_BASE}); schedule min "
+          f"{min(h for row in gr['h_schedule'] for h in row)}; "
+          f"disagreement balance/global = "
+          f"{gr['max_disagreement_balance']:.4g}/"
+          f"{gr['max_disagreement_global']:.4g}  => "
+          f"{'PASS' if gr['clamp_binds'] and gr['disagreement_ok'] else 'FAIL'}")
+    print(f"straggler_h.ok={int(out['criteria']['ok'])}")
+
+    if args.json:
+        for pair in out["scenarios"].values():
+            for name in ("global", "balance"):
+                pair[name].pop("timeline_table", None)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json}")
+    sys.exit(0 if out["criteria"]["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -338,3 +338,107 @@ class AdaptiveController:
     def observe_rank(self, r_prime: float) -> None:
         self.state = adagradcmp_update(self.state, _quantized_rank(r_prime),
                                        self.cfg)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous local-step scheduling: the per-cluster H leg
+# ---------------------------------------------------------------------------
+
+H_POLICIES = ("global", "balance")
+
+
+@dataclass(frozen=True)
+class HSpec:
+    """Per-cluster local-step policy (JSON-able, embeddable in
+    ``sim.Scenario``).
+
+    The outer sync is a barrier on the slowest alive cluster, so a single
+    global H makes every fast cluster idle for ``H*(t_slow - t_own)``
+    seconds per round on heterogeneous hardware.  ``policy="balance"``
+    sets each cluster's H from its *measured* step time so everyone lands
+    near the barrier together: the fastest cluster keeps the full
+    ``h_base`` budget and slower sites do proportionally fewer local
+    steps (never more than ``h_base`` — the numeric legs mask a
+    fixed-length scan, see ``core.diloco.masked_local_steps``).
+
+    Under gossip topologies heterogeneous H is not free: a cluster that
+    trains less drifts less per round, and the mixing graph only contracts
+    the resulting disagreement at its spectral gap ``1 - |lambda_2|``.
+    ``gap_clamp`` therefore floors every cluster's H at
+    ``ceil(h_base * (1 - gap))`` — the slower the mixing, the closer the
+    schedule must stay to uniform, so slow mixing cannot silently buy
+    replica disagreement (the certificate is the masked mixing matrix's
+    measured gap, quantized like the Alg. 3 rank signal).
+    """
+    policy: str = "balance"        # global | balance
+    h_min: int = 1                 # hard floor (stragglers keep training)
+    gap_clamp: bool = True         # gossip: clamp spread by spectral gap
+
+    def __post_init__(self):
+        if self.policy not in H_POLICIES:
+            raise ValueError(f"h policy {self.policy!r} not in {H_POLICIES}")
+        if self.h_min < 1:
+            raise ValueError(f"h_min must be >= 1, got {self.h_min}")
+
+    @property
+    def active(self) -> bool:
+        return self.policy != "global"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "HSpec":
+        return HSpec(**d)
+
+
+def gap_h_floor(spec: Optional["HSpec"], h_base: int,
+                spectral_gap: Optional[float]) -> int:
+    """The gossip clamp: minimum per-cluster H allowed by the mixing
+    matrix's spectral-gap certificate (``h_base`` itself when no gap is
+    given, i.e. gather topologies realize the exact mean and never clamp).
+    The gap is quantized before the arithmetic so a last-ulp difference
+    between the two backends' eigensolves can never flip the floor."""
+    floor = max(1, int(spec.h_min)) if spec is not None else 1
+    if spec is not None and spec.gap_clamp and spectral_gap is not None:
+        gap = min(1.0, max(0.0, round(float(spectral_gap), 6)))
+        floor = max(floor, int(np.ceil(h_base * (1.0 - gap) - 1e-9)))
+    return min(floor, int(h_base))
+
+
+def plan_h(spec: Optional["HSpec"], h_base: int, t_steps: Sequence[float],
+           alive: np.ndarray,
+           spectral_gap: Optional[float] = None) -> Dict[int, int]:
+    """One round's per-cluster local-step schedule: ``{cluster: h_c}`` over
+    the alive set.
+
+    ``balance`` anchors the round's compute target at the *fastest* alive
+    cluster's full budget, ``T = h_base * min(t_c)``, and gives every
+    cluster ``h_c = round(T / t_c)`` clamped to
+    ``[max(h_min, gap floor), h_base]`` — slow sites do fewer local steps
+    and the barrier tightens to ~T instead of ``h_base * max(t_c)``.
+    Round-to-nearest (not floor) is what keeps the modeled barrier waste
+    never above the global-H schedule's: a cluster whose ideal count
+    rounds up to ``h_base`` simply reproduces the global schedule.
+
+    Host-side python/numpy on the deterministic modeled step times — the
+    ONE implementation both simulator backends call with identical inputs
+    (same discipline as ``AdaptiveController.decide``), so the proc
+    backend's broadcast H schedule cannot drift from the in-process one.
+    Uniform step times produce the uniform ``h_base`` vector, which the
+    numeric legs execute bit-for-bit identically to the scalar-H path.
+    """
+    alive = np.asarray(alive, bool)
+    ids = [int(i) for i in np.flatnonzero(alive)]
+    h_base = int(h_base)
+    if spec is None or not spec.active or not ids:
+        return {c: h_base for c in ids}
+    floor = gap_h_floor(spec, h_base, spectral_gap)
+    t_ref = min(float(t_steps[c]) for c in ids)
+    target = h_base * t_ref
+    out: Dict[int, int] = {}
+    for c in ids:
+        t_c = float(t_steps[c])
+        h_c = h_base if t_c <= 0 else int(np.floor(target / t_c + 0.5))
+        out[c] = max(floor, min(h_base, h_c))
+    return out

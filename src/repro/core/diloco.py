@@ -144,6 +144,35 @@ def per_cluster_compress(compressor: Compressor, stacked_tree, comp_state,
     return stack(hats), stack(states)
 
 
+def masked_local_steps(step_fn, carry, h_max: int, h):
+    """Run the first ``h`` (traced) of ``h_max`` (static) local steps.
+
+    ``step_fn(carry, i) -> (carry', loss)`` is the usual inner-loop scan
+    body; steps ``i >= h`` still trace but their carry is discarded by a
+    ``select`` whose true branch returns the computed value *bitwise* —
+    with ``h == h_max`` every step is taken and the result is bit-for-bit
+    identical to the plain unmasked scan (the uniform-schedule guarantee
+    the per-cluster-H tests pin, same discipline as
+    ``per_cluster_compress``).  A proc worker calling this with its own
+    scalar ``h`` and the in-process simulator vmapping it over an
+    ``h_vec`` execute the identical op sequence per cluster.
+
+    Returns ``(carry, mean_loss)`` where the mean is over the ``h`` steps
+    actually applied.
+    """
+    h = jnp.asarray(h, jnp.int32)
+
+    def body(carry, i):
+        new, loss = step_fn(carry, i)
+        take = i < h
+        keep = jax.tree.map(lambda n, o: jnp.where(take, n, o), new, carry)
+        return keep, jnp.where(take, loss, 0.0).astype(jnp.float32)
+
+    carry, losses = jax.lax.scan(body, carry, jnp.arange(h_max))
+    mean = losses.sum() / jnp.maximum(h.astype(jnp.float32), 1.0)
+    return carry, mean
+
+
 def _per_cluster_view(Delta, gossip: bool):
     """Delta as one row per cluster: gossip mixes already return stacked
     rows; the gather mean broadcasts (bitwise identical to the historical
@@ -261,3 +290,28 @@ def diloco_round(state: DiLoCoXState,
         delta_pending=(delta_new if delta_new is not None else
                        jax.tree.map(jnp.zeros_like, state.delta_pending)),
         error=err, comp_state=comp_state, t=state.t + 1), aux
+
+
+def diloco_round_h(state: DiLoCoXState,
+                   inner_fn_h: Callable,      # (params, inner_opt, round_idx,
+                                              #   h_vec) -> (params_H, opt',
+                                              #   aux)
+                   compressor: Compressor,
+                   cluster_mean: Callable,
+                   cfg: RoundConfig,
+                   h_vec,                     # (n_clusters,) int32 local-step
+                                              # counts, one per cluster row
+                   rank_scalar: Optional[jnp.ndarray] = None,
+                   ):
+    """Per-cluster-H round entry point: identical to ``diloco_round`` except
+    the inner function receives a per-cluster local-step vector (each
+    cluster runs its own ``h_vec[c]`` steps of a shared fixed-length
+    masked scan — see ``masked_local_steps``).  A uniform ``h_vec`` is
+    bit-for-bit identical to the scalar-H path through the same
+    ``inner_fn_h``; the schedule itself comes from
+    ``core.adaptive.plan_h``.
+    """
+    inner = lambda params, inner_opt, t: inner_fn_h(params, inner_opt, t,
+                                                    h_vec)
+    return diloco_round(state, inner, compressor, cluster_mean, cfg,
+                        rank_scalar)

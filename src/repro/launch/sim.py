@@ -41,6 +41,14 @@ links, with injectable faults, and prints the event timeline:
   python -m repro.launch.sim --backend proc --clusters 2 --adaptive hybrid \
       --degrade 2:4:0.25:1 --check-equivalence
 
+  # HETEROGENEOUS local-step scheduling: --h-policy balance sets each
+  # cluster's per-round H from its modeled step time (slow sites do fewer
+  # local steps, so fast ones stop idling at the barrier); the per-cluster
+  # H schedule is broadcast in the proc round header and gated bit-for-bit
+  # by the equivalence harness:
+  python -m repro.launch.sim --backend proc --clusters 3 \
+      --h-policy balance --straggler 1:1:4:3 --check-equivalence
+
 Fault grammar (repeatable flags):
   --straggler C:START:END:SLOWDOWN      step time x SLOWDOWN on cluster C
   --degrade START:END:FACTOR[:C]        bandwidth x FACTOR (all links or C)
@@ -171,6 +179,24 @@ def main() -> None:
                     help="adaptive rank floor r_min")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the §2.3 one-step-delay overlap")
+    ap.add_argument("--h-policy", default="global",
+                    choices=["global", "balance"],
+                    help="per-cluster local-step scheduling: global = the "
+                         "paper's uniform H (every cluster runs --h-steps; "
+                         "fast sites idle at the barrier); balance = each "
+                         "cluster's H follows its modeled step time so all "
+                         "clusters land near the barrier together (slow "
+                         "sites do fewer local steps), clamped under "
+                         "gossip by the mixing matrix's spectral gap.  "
+                         "Works on both backends; the H schedule is "
+                         "covered by the equivalence gate")
+    ap.add_argument("--h-min", type=int, default=1,
+                    help="balance policy: per-cluster local-step floor")
+    ap.add_argument("--topology-seeds", default="",
+                    help="comma-separated per-round seed schedule for the "
+                         "random topology: round r draws a FRESH k-regular "
+                         "graph from seeds[r %% len] (NoLoCo-style fresh "
+                         "partners; model backend only)")
     ap.add_argument("--topology", default="star",
                     choices=["ring", "torus", "random", "star", "full"],
                     help="outer-sync pattern: star/full = exact global "
@@ -244,6 +270,21 @@ def main() -> None:
                      "for the spectral rank signal; drop --timing-only or "
                      "use --adaptive bandwidth")
 
+    h_spec = None
+    if args.h_policy != "global":
+        from repro.core.adaptive import HSpec
+        h_spec = HSpec(policy=args.h_policy, h_min=args.h_min)
+
+    topo_seeds = None
+    if args.topology_seeds:
+        if args.topology != "random":
+            ap.error("--topology-seeds redraws the random k-regular graph "
+                     "per round; it needs --topology random")
+        if args.backend == "proc":
+            ap.error("--topology-seeds (time-varying topology) is "
+                     "in-process only for now; drop --backend proc")
+        topo_seeds = tuple(int(s) for s in args.topology_seeds.split(","))
+
     kw = {"rank": args.rank} if args.compressor in ("diloco_x",) else {}
     if args.backend == "proc" and args.compressor == "diloco_x":
         # the numeric problem tree is problem_d x problem_d; let the
@@ -258,9 +299,9 @@ def main() -> None:
         faults=faults, compressor=args.compressor,
         compressor_kw=kw, delay=not args.no_overlap,
         rank=(args.rank if args.compressor == "diloco_x" else None),
-        adaptive=adaptive_spec,
+        adaptive=adaptive_spec, h_spec=h_spec,
         topology=args.topology, topology_degree=args.topology_degree,
-        topology_seed=args.seed,
+        topology_seed=args.seed, topology_seed_schedule=topo_seeds,
         n_params=args.params, seed=args.seed)
 
     if args.backend == "proc":

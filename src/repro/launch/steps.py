@@ -28,10 +28,19 @@ from repro.optim import adamw, nesterov
 # inner train step (per-cluster, vmapped over the cluster dim)
 # ---------------------------------------------------------------------------
 
-def make_train_step(cfg: ModelConfig, *, inner_lr: float = 1e-4):
+def make_train_step(cfg: ModelConfig, *, inner_lr: float = 1e-4,
+                    per_cluster_h: bool = False):
     """(params_stacked, opt_stacked, batch_stacked) -> (params', opt', loss).
     One inner AdamW step per cluster; no cross-cluster collectives by
-    construction (vmap over the stacked cluster dim)."""
+    construction (vmap over the stacked cluster dim).
+
+    ``per_cluster_h=True`` returns the heterogeneous-local-step variant
+    ``(params, opt, batch, active) -> (params', opt', loss)``: ``active``
+    is a (C,) bool mask and inactive clusters' params/optimizer pass
+    through unchanged (bitwise — a select, not an arithmetic no-op), which
+    is how the driver realizes a per-cluster H schedule (cluster c sits
+    out steps ``h >= h_c`` of the round while the fast ones finish their
+    budget); the loss is the mean over active clusters only."""
 
     def one_cluster(params, opt, batch):
         (loss, _), grads = jax.value_and_grad(
@@ -39,12 +48,28 @@ def make_train_step(cfg: ModelConfig, *, inner_lr: float = 1e-4):
         params, opt = adamw.update(grads, opt, params, lr=inner_lr)
         return params, opt, loss
 
-    def train_step(params_stacked, opt_stacked, batch_stacked):
-        params, opt, loss = jax.vmap(one_cluster)(
-            params_stacked, opt_stacked, batch_stacked)
-        return params, opt, loss.mean()
+    if not per_cluster_h:
+        def train_step(params_stacked, opt_stacked, batch_stacked):
+            params, opt, loss = jax.vmap(one_cluster)(
+                params_stacked, opt_stacked, batch_stacked)
+            return params, opt, loss.mean()
 
-    return train_step
+        return train_step
+
+    def one_cluster_masked(params, opt, batch, active):
+        new_p, new_o, loss = one_cluster(params, opt, batch)
+        keep = lambda n, o: jnp.where(active, n, o)
+        params = jax.tree.map(keep, new_p, params)
+        opt = jax.tree.map(keep, new_o, opt)
+        return params, opt, jnp.where(active, loss, 0.0)
+
+    def train_step_h(params_stacked, opt_stacked, batch_stacked, active):
+        params, opt, losses = jax.vmap(one_cluster_masked)(
+            params_stacked, opt_stacked, batch_stacked, active)
+        n = jnp.maximum(active.astype(jnp.float32).sum(), 1.0)
+        return params, opt, losses.sum() / n
+
+    return train_step_h
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,16 @@ def main() -> None:
     ap.add_argument("--outer-momentum", type=float, default=0.7)
     ap.add_argument("--rank", type=int, default=16)
     ap.add_argument("--adaptive", action="store_true")
+    ap.add_argument("--h-policy", default="global",
+                    choices=["global", "balance"],
+                    help="per-cluster local-step scheduling: balance gives "
+                         "each cluster its own H from --step-times so slow "
+                         "sites do fewer local steps per round")
+    ap.add_argument("--step-times", default="",
+                    help="comma-separated per-cluster step seconds "
+                         "(measured on the real sites) for --h-policy "
+                         "balance; default: uniform (== global)")
+    ap.add_argument("--h-min", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
@@ -81,7 +91,24 @@ def main() -> None:
                             cluster_stacked=True)
     params = jax.device_put(params, ps)
 
+    balance_h = args.h_policy == "balance"
+    step_times = ([float(s) for s in args.step_times.split(",")]
+                  if args.step_times else [1.0] * C)
+    assert len(step_times) == C, "--step-times needs one entry per cluster"
+
+    def plan_round_h(h_budget):
+        h_map = adaptive.plan_h(
+            adaptive.HSpec(policy="balance", h_min=args.h_min),
+            h_budget, np.asarray(step_times), np.ones(C, bool))
+        return [h_map[c] for c in range(C)]
+
+    # uniform-at-budget rounds run the plain train step (bitwise the
+    # global path); only genuinely heterogeneous rounds use the masked
+    # variant — the same dispatch rule the sim backends and trainer apply
     train_step = jax.jit(steps.make_train_step(cfg, inner_lr=args.inner_lr))
+    train_step_h = (jax.jit(steps.make_train_step(
+        cfg, inner_lr=args.inner_lr, per_cluster_h=True))
+        if balance_h else None)
     outer_step = jax.jit(steps.make_outer_step(
         cfg, ccfg, outer_lr=args.outer_lr,
         outer_momentum=args.outer_momentum))
@@ -97,14 +124,22 @@ def main() -> None:
         mesh, cluster_stacked=True)
 
     from repro.checkpoint import checkpoint as ckpt_lib
+    # static (non-adaptive) budgets have a round-invariant schedule —
+    # plan it once outside the loop
+    h_vec_static = plan_round_h(args.h_steps) if balance_h else None
     for r in range(args.rounds):
         # pre-observe controller state = what this round executes (same
         # accounting rule as train/trainer.py: the post-observe state is
         # round r+1's budget and must not be logged as this round's)
         h_t = ada.h_t if args.adaptive else args.h_steps
         r_exec = ada.r_t
+        if balance_h:
+            h_vec = plan_round_h(h_t) if args.adaptive else h_vec_static
+        else:
+            h_vec = [h_t] * C
+        het_round = any(hc != h_t for hc in h_vec)
         losses = []
-        for h in range(h_t):
+        for h in range(max(h_vec)):
             toks = jnp.stack([d.next_batch()["tokens"] for d in data])
             batch = {"tokens": jax.device_put(toks, bsh["tokens"])}
             if cfg.modality != "text":
@@ -112,14 +147,21 @@ def main() -> None:
                     jax.random.fold_in(rng, r * 1000 + h),
                     (C, Bc, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
                 batch["frontend"] = fe
-            params, opt, loss = train_step(params, opt, batch)
+            if het_round:
+                active = jnp.asarray([h < hc for hc in h_vec], bool)
+                params, opt, loss = train_step_h(params, opt, batch,
+                                                 active)
+            else:
+                params, opt, loss = train_step(params, opt, batch)
             losses.append(float(loss))
         rank_scalar = jnp.asarray(r_exec, jnp.int32)
         params, outer_state = outer_step(params, outer_state, rank_scalar)
         wire = mc.wire_bytes_tree(params1, ccfg,
                                   rank=r_exec if args.adaptive else None)
+        h_str = (f"H={h_t}" if not het_round
+                 else "H=" + "/".join(str(hc) for hc in h_vec))
         print(f"round {r}: mean_loss={np.mean(losses):.4f} "
-              f"H={h_t} r={r_exec} wire_per_cluster={wire/1e6:.2f}MB")
+              f"{h_str} r={r_exec} wire_per_cluster={wire/1e6:.2f}MB")
         if args.adaptive:
             ada = adaptive.observe_mean_pseudo_grad(
                 ada, jax.tree.map(lambda x: x.mean(0),

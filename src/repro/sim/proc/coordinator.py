@@ -165,6 +165,10 @@ def _spawn(cluster: int, port: int, sc: Scenario, problem, gossip: bool,
                            and sc.adaptive.needs_spectral),
         "warm_rank": (None if sc.adaptive is None
                       else sc.adaptive.r1),
+        # heterogeneous local-step scheduling: the coordinator broadcasts
+        # each worker's per-round H in the round header; numeric workers
+        # compile the masked fixed-length inner scan once (H traced)
+        "dynamic_h": (sc.h_spec is not None and sc.h_spec.active),
         "delay": sc.delay,
         "gossip": gossip,
         "epoch": epoch,
@@ -201,17 +205,24 @@ def run_proc(sc: Scenario, problem=None, *,
     cluster -> round for injected hard crashes (``os._exit`` before the
     delta send — the membership-recovery test hook).
     """
+    from repro.core import adaptive as _ada
     from repro.core.compression import make_compressor
     from repro.sim.simulator import _jitter_factors
-    from repro.topology import (MixingMatrix, gossip_round_comm,
+    from repro.topology import (MixingMatrix, compute_leg, gossip_round_comm,
                                 round_wire_total)
 
     if sc.allreduce_per_step:
         raise NotImplementedError(
             "backend='proc' implements the outer-round syncs (gather and "
             "gossip), not per-step allreduce baselines")
+    if sc.topology_seed_schedule is not None:
+        raise NotImplementedError(
+            "backend='proc' does not yet support time-varying topologies "
+            "(per-round topology_seed schedules); use the in-process "
+            "backend")
     topo = sc.topo()
     gossip = topo.is_gossip
+    h_active = sc.h_spec is not None and sc.h_spec.active
     numeric = problem is not None
     if numeric and problem.n_clusters != sc.n_clusters:
         raise ValueError("problem.n_clusters != scenario.n_clusters")
@@ -236,8 +247,7 @@ def run_proc(sc: Scenario, problem=None, *,
     wire = int(compressor.wire_bytes(shapes, rank=sc.rank))
     alive = (np.ones(C, bool) if sc.initial_alive is None
              else np.asarray(sc.initial_alive, bool).copy())
-    base_mm = (MixingMatrix.metropolis(topo)
-               if (gossip and numeric) else None)
+    base_mm = MixingMatrix.metropolis(topo) if gossip else None
     epochs = {c: 0 for c in range(C)}
 
     if numeric:
@@ -386,7 +396,16 @@ def run_proc(sc: Scenario, problem=None, *,
             step_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=1)
             t_steps = np.array([sc.t_step_s * sc.faults.step_multiplier(c, r)
                                 * step_j[c] for c in range(C)])
-            slowest = int(max(alive_ids, key=lambda c: t_steps[c]))
+            # per-cluster local-step schedule: same plan_h host arithmetic
+            # (and, under gossip, the same spectral-gap clamp on the same
+            # masked matrix) as the in-process simulator — the broadcast H
+            # schedule cannot drift from the modeled one
+            gap = (base_mm.masked(alive).spectral_gap(alive)
+                   if (gossip and h_active) else None)
+            h_map = _ada.plan_h(sc.h_spec, h_t, t_steps, alive,
+                                spectral_gap=gap)
+            leg = compute_leg(h_map, t_steps, alive)
+            slowest = leg.slowest_cluster
             bw_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=2)
             bws = np.array([sc.link.bytes_per_s
                             * sc.faults.bandwidth_factor(c, r) * bw_j[c]
@@ -401,7 +420,7 @@ def run_proc(sc: Scenario, problem=None, *,
             if ctrl is not None:
                 rank_t, ranks_map = ctrl.decide(
                     compressor, shapes, topo, alive, bws, sc.link.latency_s,
-                    h_t * float(t_steps[slowest]), gossip)
+                    leg.t_barrier_s, gossip)
                 wire_r = int(compressor.wire_bytes(shapes, rank=rank_t))
             ranks_tuple = (tuple(ranks_map[c] for c in alive_ids)
                            if ranks_map is not None else None)
@@ -414,8 +433,7 @@ def run_proc(sc: Scenario, problem=None, *,
                                        wire_by_cluster=wire_by)
                 bottleneck = gc.bottleneck_cluster
                 wire_total = gc.wire_bytes_total
-                W_r = (base_mm.masked(alive).W if base_mm is not None
-                       else None)
+                W_r = (base_mm.masked(alive).W if numeric else None)
             elif n_alive >= 2:
                 bottleneck = int(min(alive_ids, key=lambda c: bws[c]))
                 wire_total = round_wire_total("gather", n_alive, wire_r)
@@ -427,9 +445,17 @@ def run_proc(sc: Scenario, problem=None, *,
             for c in alive_ids:
                 rmsg: Dict[str, Any] = {
                     "type": "round", "round": r,
-                    "compute_target_s": float(h_t * t_steps[c]),
+                    "compute_target_s": float(leg.t_by[c]),
                     "latency_s": float(sc.link.latency_s),
                 }
+                if h_active and any(h_map[j] != h_t for j in alive_ids):
+                    # heterogeneous round: broadcast this worker's
+                    # local-step count (the numeric worker masks its
+                    # fixed-length scan with it).  Uniform-at-budget
+                    # rounds deliberately OMIT the key so every worker
+                    # runs the plain scalar-H program — the same dispatch
+                    # the in-process simulator makes on the same h_map
+                    rmsg["h_steps"] = int(h_map[c])
                 if ctrl is not None:
                     # broadcast the controller decision: this worker's send
                     # rank for the round (gossip: its own per-edge rank)
@@ -498,6 +524,7 @@ def run_proc(sc: Scenario, problem=None, *,
             t_compute_meas, t_comm_workers = 0.0, 0.0
             losses, hash_rows, miss_tags = [], [], []
             pend_rows: Dict[int, Any] = {}
+            t_comp_by: Dict[int, float] = {}
             for c in list(contributors):
                 if not alive[c]:
                     continue
@@ -507,6 +534,7 @@ def run_proc(sc: Scenario, problem=None, *,
                     crash_tags.append(f"crash(c{c})")
                     handles[c].kill()
                     continue
+                t_comp_by[c] = float(msg["t_compute"])
                 t_compute_meas = max(t_compute_meas,
                                      float(msg["t_compute"]))
                 t_comm_workers = max(t_comm_workers,
@@ -549,7 +577,8 @@ def run_proc(sc: Scenario, problem=None, *,
                     param_hash = uniq[0]
 
             survivors = [int(i) for i in np.flatnonzero(alive)]
-            tokens = sc.tokens_per_step * h_t * len(survivors) / max(C, 1)
+            tokens = (sc.tokens_per_step
+                      * sum(h_map[c] for c in survivors) / max(C, 1))
             events.append(RoundEvent(
                 round=r, alive=tuple(survivors),
                 rejoined=tuple(int(i) for i in np.flatnonzero(rejoined)),
@@ -563,7 +592,15 @@ def run_proc(sc: Scenario, problem=None, *,
                         + tuple(sorted(miss_tags))),
                 loss=(float(np.mean(losses)) if losses else None),
                 param_hash=param_hash, wire_bytes_total=wire_total,
-                ranks=ranks_tuple))
+                ranks=ranks_tuple,
+                h_by=(tuple(h_map[c] for c in survivors)
+                      if h_active and survivors else None),
+                t_compute_by=(tuple(t_comp_by.get(c, 0.0)
+                                    for c in survivors)
+                              if survivors else None),
+                idle_by=(tuple(t_compute_meas - t_comp_by.get(c, 0.0)
+                               for c in survivors)
+                         if survivors else None)))
 
         if numeric and alive.any():
             if gossip:

@@ -66,6 +66,11 @@ def check_equivalence(sc: Scenario, problem=None, *,
             tl_proc.rank_schedule() == tl_model.rank_schedule()
             and [e.ranks for e in tl_proc.events]
             == [e.ranks for e in tl_model.events]),
+        # heterogeneous-H runs: the per-cluster local-step schedule the
+        # coordinator broadcast must be identical to the in-process plan
+        "h_schedule_proc": tl_proc.h_schedule(),
+        "h_schedule_model": tl_model.h_schedule(),
+        "h_schedule_match": tl_proc.h_schedule() == tl_model.h_schedule(),
     }
     if len(tl_proc.events) != len(tl_model.events):
         report["ok"] = report["structural_match"] = False
@@ -76,7 +81,8 @@ def check_equivalence(sc: Scenario, problem=None, *,
     for ep, em in zip(tl_proc.events, tl_model.events):
         row: Dict[str, Any] = {"round": ep.round}
         struct_ok = (ep.alive == em.alive and ep.rejoined == em.rejoined
-                     and ep.h_steps == em.h_steps and ep.rank == em.rank
+                     and ep.h_steps == em.h_steps and ep.h_by == em.h_by
+                     and ep.rank == em.rank
                      and ep.ranks == em.ranks
                      and ep.wire_bytes == em.wire_bytes
                      and ep.wire_bytes_total == em.wire_bytes_total
@@ -135,6 +141,7 @@ def check_equivalence(sc: Scenario, problem=None, *,
 
     report["ok"] = (report["structural_match"] and report["timing_ok"]
                     and report["rank_schedule_match"]
+                    and report["h_schedule_match"]
                     and report["hash_match"] is not False)
     report["timelines"] = {"proc": tl_proc, "model": tl_model}
     return report
@@ -157,9 +164,17 @@ def format_report(report: Dict[str, Any]) -> str:
         lines.append("rank schedule [proc]:  "
                      + " ".join("-" if r is None else str(r) for r in sched)
                      + f"  (match={report['rank_schedule_match']})")
+    hsched = report.get("h_schedule_proc") or []
+    if any(isinstance(h, list) for h in hsched):
+        lines.append("H schedule [proc]:  "
+                     + " ".join("/".join(str(v) for v in h)
+                                if isinstance(h, list) else str(h)
+                                for h in hsched)
+                     + f"  (match={report['h_schedule_match']})")
     lines.append(
         "equivalence: structural={structural_match} bitwise={bitwise} "
         "timing={timing_ok} ranks={rank_schedule_match} "
+        "h={h_schedule_match} "
         "(max err {max_abs_time_err_s:.3f}s / "
         "{max_rel_time_err:.1%})  => {verdict}".format(
             bitwise=bitwise,

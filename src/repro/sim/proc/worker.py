@@ -95,8 +95,20 @@ class _NumericRuntime:
         self.error = self.zeros            # sync mode: carried EF buffer
         self.comp_state = self.compressor.init_state(self.params)
 
-        one_cluster = spec.one_cluster_fn()
-        self.inner_j = jax.jit(one_cluster)
+        # heterogeneous local-step scheduling: a round header carrying
+        # "h_steps" means a heterogeneous round — run the masked
+        # fixed-length scan (compiled once, H as a TRACED argument; the
+        # same masked op sequence the in-process simulator vmaps over its
+        # h_vec, hence bit-identical rows).  A header WITHOUT the key is a
+        # uniform-at-budget round and runs the plain scalar-H program —
+        # the masked program is a different compiled computation (XLA may
+        # tile reductions differently around the selects), so the
+        # dispatch must mirror the coordinator's exactly.
+        self.dynamic_h = bool(cfg.get("dynamic_h"))
+        self.h_max = int(spec.h_steps)
+        self.inner_j = jax.jit(spec.one_cluster_fn())
+        self.inner_h_j = (jax.jit(spec.one_cluster_fn_h())
+                          if self.dynamic_h else None)
         if self.dynamic_rank:
             self.compress_j = jax.jit(
                 lambda d, s, r: self.compressor.roundtrip(d, s, r))
@@ -128,13 +140,24 @@ class _NumericRuntime:
         # mix_stacked runs per row in the in-process simulator
         self.mix_j = jax.jit(lambda w_row, parts: mix_row(w_row, parts))
 
+    def inner(self, params, opt, h: Optional[int]):
+        """One inner leg; ``h`` present (heterogeneous round) runs the
+        masked scan with ``h`` traced, ``h`` absent runs the plain
+        scalar-H program."""
+        if h is not None and self.inner_h_j is not None:
+            hh = self.jnp.asarray(int(h), self.jnp.int32)
+            return self.inner_h_j(params, opt, self.cluster, hh)
+        return self.inner_j(params, opt, self.cluster)
+
     def warmup(self, gossip: bool) -> None:
         """Compile every jitted function on the real shapes so round 0's
         measured time is transport+sleep, not XLA compile."""
         jax = self.jax
         hat, _ = self.compress(self.pending, self.comp_state, self.warm_rank)
-        p_inner, _, losses = self.inner_j(self.params, self.inner_opt,
-                                          self.cluster)
+        p_inner, _, losses = self.inner(self.params, self.inner_opt, None)
+        if self.inner_h_j is not None:
+            jax.block_until_ready(
+                self.inner(self.params, self.inner_opt, self.h_max))
         pend = self.ed_j(self.pending, hat, self.params, p_inner)
         raw = self.raw_j(self.params, p_inner, self.error)
         err = self.err_j(raw, hat)
@@ -269,8 +292,8 @@ def main(argv=None) -> None:
             t0 = time.monotonic()
             out = {"p_inner": None, "inner_new": None, "loss": None}
             if rt is not None:
-                p_inner, inner_new, losses = rt.inner_j(
-                    rt.params, rt.inner_opt, rt.cluster)
+                p_inner, inner_new, losses = rt.inner(
+                    rt.params, rt.inner_opt, msg.get("h_steps"))
                 rt.jax.block_until_ready(p_inner)
                 out.update(p_inner=p_inner, inner_new=inner_new,
                            loss=float(np.mean(np.asarray(losses))))

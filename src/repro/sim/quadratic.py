@@ -110,6 +110,38 @@ class QuadraticSpec:
 
         return one_cluster
 
+    def one_cluster_fn_h(self):
+        """(params_global, inner_opt, c, h) -> (params, opt', mean_loss):
+        the per-cluster-H variant — a fixed ``self.h_steps``-length scan
+        of which only the first ``h`` (traced) steps apply
+        (``core.diloco.masked_local_steps``).  With ``h == h_steps`` the
+        carried state is bit-identical to ``one_cluster_fn()``; a proc
+        worker jits this with its own scalar ``h`` while ``problem()``
+        vmaps it over the schedule vector — the same op sequence per
+        cluster (the quadratic stays matmul-free, so vmapping does not
+        perturb the arithmetic)."""
+        import jax
+
+        from repro.core.diloco import masked_local_steps
+        from repro.optim import adamw
+
+        cluster_loss = self.cluster_loss_fn()
+        h_max, lr = self.h_steps, self.inner_lr
+
+        def one_cluster_h(params_g, opt_state, c, h):
+            def step(carry, _i):
+                p, o = carry
+                loss, g = jax.value_and_grad(
+                    lambda q: cluster_loss(q, c))(p)
+                p, o = adamw.update(g, o, p, lr=lr)
+                return (p, o), loss
+
+            (p, o), mean_loss = masked_local_steps(
+                step, (params_g, opt_state), h_max, h)
+            return p, o, mean_loss
+
+        return one_cluster_h
+
     def problem(self):
         """The in-process ``NumericProblem`` (vmapped over clusters)."""
         import jax
@@ -121,6 +153,7 @@ class QuadraticSpec:
         params = self.init_params()
         cluster_loss = self.cluster_loss_fn()
         one_cluster = self.one_cluster_fn()
+        one_cluster_h = self.one_cluster_fn_h()
         n = self.n_clusters
 
         opt0 = adamw.init(params)
@@ -140,6 +173,17 @@ class QuadraticSpec:
             return jax.vmap(one_cluster)(params_stacked, inner_opt_stacked,
                                          jnp.arange(n))
 
+        def inner_fn_h(params_g, inner_opt_stacked, t, h_vec):
+            # per-cluster H: each row runs its own h_vec[c] of the shared
+            # masked scan; aux is the per-cluster mean loss
+            f = lambda opt, c, h: one_cluster_h(params_g, opt, c, h)
+            return jax.vmap(f)(inner_opt_stacked, jnp.arange(n), h_vec)
+
+        def inner_fn_h_stacked(params_stacked, inner_opt_stacked, t, h_vec):
+            return jax.vmap(one_cluster_h)(params_stacked,
+                                           inner_opt_stacked,
+                                           jnp.arange(n), h_vec)
+
         def eval_fn(p):
             return float(np.mean([float(cluster_loss(p, c))
                                   for c in range(n)]))
@@ -148,7 +192,9 @@ class QuadraticSpec:
                               inner_fn=inner_fn, outer_lr=self.outer_lr,
                               outer_momentum=self.outer_momentum,
                               eval_fn=eval_fn,
-                              inner_fn_stacked=inner_fn_stacked)
+                              inner_fn_stacked=inner_fn_stacked,
+                              inner_fn_h=inner_fn_h,
+                              inner_fn_h_stacked=inner_fn_h_stacked)
 
 
 def make_quadratic_problem(n_clusters: int, *, d: int = 16, n_mats: int = 2,

@@ -12,7 +12,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core import comm
-from repro.core.adaptive import AdaptiveSpec
+from repro.core.adaptive import AdaptiveSpec, HSpec
 from repro.sim.faults import FaultSchedule
 
 
@@ -56,6 +56,15 @@ class Scenario:
     # coordinator broadcasts the per-round decision in the round header);
     # None = fixed rank.  ``spec.r1=None`` resolves to the compressor rank.
     adaptive: Optional[AdaptiveSpec] = None
+
+    # heterogeneous local-step scheduling (``core.adaptive.HSpec``): None/
+    # "global" runs the uniform h_steps budget everywhere (the paper's
+    # setting); policy="balance" sets each cluster's H from its modeled
+    # step time so all clusters land near the barrier together (slow
+    # sites do fewer local steps), clamped under gossip by the mixing
+    # matrix's spectral-gap certificate.  Applied by BOTH backends,
+    # including the numeric leg (masked fixed-length scan).
+    h_spec: Optional[HSpec] = None
     delay: bool = True                   # §2.3 one-step-delay overlap
     allreduce_per_step: bool = False     # vanilla-DDP/CocktailSGD style:
                                          # ring allreduce EVERY local step
@@ -66,6 +75,11 @@ class Scenario:
     topology: str = "star"
     topology_degree: int = 0             # random k-regular degree (0=auto)
     topology_seed: int = 0               # random topology edge seed
+    # dynamic time-varying topology (NoLoCo-style fresh random partners):
+    # a per-round seed schedule for the "random" kind — round r draws the
+    # k-regular graph from seed schedule[r % len] instead of the fixed
+    # topology_seed.  In-process backend only (proc raises).
+    topology_seed_schedule: Optional[Tuple[int, ...]] = None
 
     # what is being shipped: explicit shapes win; else a synthetic tree
     param_shapes: Optional[Dict[str, Tuple[int, ...]]] = None
@@ -81,13 +95,30 @@ class Scenario:
             return dict(self.param_shapes)
         return synthetic_shapes(self.n_params)
 
-    def topo(self):
+    def topo(self, rnd: Optional[int] = None):
         """The ``repro.topology.Topology`` this scenario communicates
-        over (built fresh; Topology construction is deterministic)."""
+        over (built fresh; Topology construction is deterministic).
+        With a ``topology_seed_schedule``, ``rnd`` selects round ``rnd``'s
+        fresh random graph (``rnd=None`` gives the base graph)."""
         from repro.topology import make_topology
+        seed = self.topology_seed
+        if rnd is not None and self.topology_seed_schedule:
+            seed = int(self.topology_seed_schedule[
+                rnd % len(self.topology_seed_schedule)])
         return make_topology(self.topology, self.n_clusters,
-                             degree=self.topology_degree,
-                             seed=self.topology_seed)
+                             degree=self.topology_degree, seed=seed)
+
+    def __post_init__(self):
+        if self.topology_seed_schedule is not None:
+            if self.topology != "random":
+                raise ValueError(
+                    "topology_seed_schedule redraws the random k-regular "
+                    f"graph per round; topology {self.topology!r} is fixed")
+            if not self.topology_seed_schedule:
+                raise ValueError("topology_seed_schedule must be non-empty")
+            object.__setattr__(self, "topology_seed_schedule",
+                               tuple(int(s)
+                                     for s in self.topology_seed_schedule))
 
     @property
     def is_gossip(self) -> bool:
@@ -111,10 +142,15 @@ class Scenario:
             "rank": self.rank,
             "adaptive": (None if self.adaptive is None
                          else self.adaptive.to_dict()),
+            "h_spec": (None if self.h_spec is None
+                       else self.h_spec.to_dict()),
             "delay": self.delay,
             "allreduce_per_step": self.allreduce_per_step,
             "topology": self.topology,
             "topology_degree": self.topology_degree,
             "topology_seed": self.topology_seed,
+            "topology_seed_schedule": (
+                None if self.topology_seed_schedule is None
+                else list(self.topology_seed_schedule)),
             "seed": self.seed,
         }

@@ -56,6 +56,13 @@ class NumericProblem:
                                      # (n_clusters, ...) leading axis
                                      # (each cluster trains from its OWN
                                      # outer params)
+    inner_fn_h: Optional[Callable] = None        # per-cluster-H variant:
+                                     # inner_fn(params, opt, t, h_vec)
+                                     # where h_vec is a (n_clusters,)
+                                     # int32 local-step schedule (masked
+                                     # fixed-length scan; aux = per-
+                                     # cluster mean loss)
+    inner_fn_h_stacked: Optional[Callable] = None  # gossip x per-cluster H
 
 
 def make_quadratic_problem(n_clusters: int, **kw) -> NumericProblem:
@@ -106,7 +113,7 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
     """
     from repro.core import adaptive as _ada
     from repro.core.compression import make_compressor
-    from repro.topology import (MixingMatrix, gossip_round_comm,
+    from repro.topology import (MixingMatrix, compute_leg, gossip_round_comm,
                                 round_wire_total)
     from repro.topology import mixing as topo_mixing
 
@@ -123,7 +130,36 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
     if gossip and sc.allreduce_per_step:
         raise ValueError("allreduce_per_step models the per-step DDP "
                          "baseline; gossip topologies sync per round only")
-    base_mm = MixingMatrix.metropolis(topo) if gossip else None
+    h_active = sc.h_spec is not None and sc.h_spec.active
+    if h_active and sc.allreduce_per_step:
+        raise ValueError("allreduce_per_step has no outer-round barrier to "
+                         "balance; h_spec needs the DiLoCo round structure")
+
+    # dynamic time-varying topology: a fresh random graph (and mixing
+    # matrix) per round, cached by seed — round r communicates over
+    # sc.topo(r)
+    _topo_cache: Dict[int, Any] = {}
+
+    def topo_at(rnd: int):
+        if sc.topology_seed_schedule is None:
+            return topo
+        key = rnd % len(sc.topology_seed_schedule)
+        if key not in _topo_cache:
+            _topo_cache[key] = sc.topo(rnd)
+        return _topo_cache[key]
+
+    _mm_cache: Dict[int, MixingMatrix] = {}
+
+    def mm_at(rnd: int, topo_r) -> Optional[MixingMatrix]:
+        if not gossip:
+            return None
+        if sc.topology_seed_schedule is None:
+            key = -1
+        else:
+            key = rnd % len(sc.topology_seed_schedule)
+        if key not in _mm_cache:
+            _mm_cache[key] = MixingMatrix.metropolis(topo_r)
+        return _mm_cache[key]
 
     # --- numeric state (real diloco rounds) --------------------------------
     num = None
@@ -144,6 +180,11 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                     f"topology {sc.topology!r} needs a stacked inner_fn "
                     "(each cluster trains from its own outer params); the "
                     "NumericProblem provides no inner_fn_stacked")
+            if h_active and numeric.inner_fn_h_stacked is None:
+                raise ValueError(
+                    f"h policy {sc.h_spec.policy!r} needs a per-cluster-H "
+                    "stacked inner_fn (masked scan); the NumericProblem "
+                    "provides no inner_fn_h_stacked")
             state = diloco.init_state(
                 diloco.stack_replicas(numeric.params, C),
                 numeric.inner_opt_stacked, C, compressor,
@@ -155,18 +196,51 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                 return diloco.diloco_round(st, numeric.inner_fn_stacked,
                                            compressor, mix, rcfg,
                                            rank_scalar)
+
+            def _round_h(st, rank_scalar, W, h_vec):
+                mix = lambda tree: topo_mixing.mix_stacked(W, tree)
+                mix.returns_stacked = True
+                return diloco.diloco_round_h(
+                    st, numeric.inner_fn_h_stacked, compressor, mix,
+                    rcfg, h_vec, rank_scalar)
         else:
+            if h_active and numeric.inner_fn_h is None:
+                raise ValueError(
+                    f"h policy {sc.h_spec.policy!r} needs a per-cluster-H "
+                    "inner_fn (masked scan); the NumericProblem provides "
+                    "no inner_fn_h")
             state = diloco.init_state(numeric.params,
                                       numeric.inner_opt_stacked,
                                       C, compressor)
 
             def _round(st, rank_scalar, alive_vec):
-                cm = lambda tree: membership.masked_cluster_mean(tree,
-                                                                 alive_vec)
-                return diloco.diloco_round(st, numeric.inner_fn, compressor,
-                                           cm, rcfg, rank_scalar)
+                cm = lambda tree: membership.masked_cluster_mean(
+                    tree, alive_vec)
+                return diloco.diloco_round(st, numeric.inner_fn,
+                                           compressor, cm, rcfg,
+                                           rank_scalar)
 
-        num = {"state": state, "round": jax.jit(_round), "jnp": jnp,
+            def _round_h(st, rank_scalar, alive_vec, h_vec):
+                cm = lambda tree: membership.masked_cluster_mean(
+                    tree, alive_vec)
+                return diloco.diloco_round_h(st, numeric.inner_fn_h,
+                                             compressor, cm, rcfg,
+                                             h_vec, rank_scalar)
+
+        # NOTE on the two round programs: a round whose planned schedule is
+        # uniform at the budget H runs the SCALAR program — bit-for-bit
+        # today's path — and only genuinely heterogeneous rounds run the
+        # masked-scan program.  The dispatch is host-side on the planned
+        # h_map, identical on both backends (the coordinator only puts
+        # "h_steps" in the round header for heterogeneous rounds), because
+        # the masked program is a *different compiled computation*: XLA may
+        # tile e.g. the AdamW grad-clip norm reduction differently around
+        # the selects, which is a last-ulp difference the scalar-vs-uniform
+        # guarantee must not depend on.  jit compiles lazily, so runs that
+        # never hit a heterogeneous round never pay the second compile.
+        num = {"state": state, "round": jax.jit(_round),
+               "round_h": (jax.jit(_round_h) if h_active else None),
+               "jnp": jnp,
                "membership": membership, "jax": jax,
                "mean": jax.jit(membership.masked_cluster_mean),
                "comp0": compressor.init_state(numeric.params)}
@@ -214,6 +288,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
         alive, rejoined = sc.faults.membership(r, alive)
         alive_ids = tuple(int(i) for i in np.flatnonzero(alive))
         n_alive = len(alive_ids)
+        topo_r = topo_at(r)
+        mm_r = mm_at(r, topo_r)
 
         h_t = sc.h_steps
 
@@ -221,11 +297,15 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
         step_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=1)
         t_steps = np.array([sc.t_step_s * sc.faults.step_multiplier(c, r)
                             * step_j[c] for c in range(C)])
-        if n_alive:
-            slowest = int(max(alive_ids, key=lambda c: t_steps[c]))
-            t_compute = h_t * float(t_steps[slowest])
-        else:
-            slowest, t_compute = -1, 0.0
+        # per-cluster local-step schedule: slow sites do fewer steps so the
+        # barrier tightens; under gossip the spread is clamped by the
+        # masked mixing matrix's spectral-gap certificate
+        gap = (mm_r.masked(alive).spectral_gap(alive)
+               if (gossip and h_active and n_alive) else None)
+        h_map = _ada.plan_h(sc.h_spec, h_t, t_steps, alive,
+                            spectral_gap=gap)
+        leg = compute_leg(h_map, t_steps, alive)
+        slowest, t_compute = leg.slowest_cluster, leg.t_barrier_s
 
         # ---- link state (modeled per-cluster bandwidths) -----------------
         bw_j = _jitter_factors(sc.seed, r, C, sc.link.jitter, salt=2)
@@ -259,8 +339,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             else:
                 rank_t = entry
         elif ctrl is not None:
-            rank_t, ranks_map = ctrl.decide(compressor, shapes, topo, alive,
-                                            bws, sc.link.latency_s,
+            rank_t, ranks_map = ctrl.decide(compressor, shapes, topo_r,
+                                            alive, bws, sc.link.latency_s,
                                             t_compute, gossip)
         ranks_tuple = (tuple(ranks_map[c] for c in alive_ids)
                        if ranks_map is not None else None)
@@ -273,7 +353,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             # per-edge adaptive ranks give each sender its own payload size
             wire_by = (compressor.wire_bytes_per_edge(shapes, ranks_map)
                        if ranks_map is not None else None)
-            gc = gossip_round_comm(topo, alive, wire, bws, sc.link.latency_s,
+            gc = gossip_round_comm(topo_r, alive, wire, bws,
+                                   sc.link.latency_s,
                                    wire_by_cluster=wire_by)
             t_comm, bottleneck = gc.t_comm_s, gc.bottleneck_cluster
             wire_total = gc.wire_bytes_total
@@ -300,7 +381,7 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             bottleneck, t_comm, exposed, wire_total = -1, 0.0, 0.0, 0
 
         t_round = t_compute + exposed
-        tokens = sc.tokens_per_step * h_t * n_alive / max(C, 1)
+        tokens = sc.tokens_per_step * sum(h_map.values()) / max(C, 1)
 
         # ---- numeric leg: one REAL diloco round over the alive set -------
         loss = None
@@ -393,11 +474,22 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                 rank_scalar = (None if rank_t is None
                                else jnp.asarray(rank_t, jnp.int32))
             alive_vec = jnp.asarray(alive, jnp.float32)
+            het_round = h_active and any(h_map[c] != h_t for c in alive_ids)
+            round_fn, round_args = num["round"], []
+            if het_round:
+                # dead rows get the budget H (deterministic filler: their
+                # pendings are zeroed after the round and their state is
+                # reset on rejoin, so the value never reaches a hash)
+                h_vec_np = np.full((C,), h_t, np.int32)
+                for c, hv in h_map.items():
+                    h_vec_np[c] = hv
+                round_fn, round_args = num["round_h"], [jnp.asarray(h_vec_np)]
             if gossip:
-                W_r = base_mm.masked(alive).W
-                st, aux = num["round"](st, rank_scalar, jnp.asarray(W_r))
+                W_r = mm_r.masked(alive).W
+                st, aux = round_fn(st, rank_scalar, jnp.asarray(W_r),
+                                   *round_args)
             else:
-                st, aux = num["round"](st, rank_scalar, alive_vec)
+                st, aux = round_fn(st, rank_scalar, alive_vec, *round_args)
             # dead clusters neither train nor accumulate error
             if (~alive).any():
                 st = reset_buffers(st, ~alive)
@@ -432,7 +524,13 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             bottleneck_cluster=bottleneck, tokens=tokens,
             faults=sc.faults.active(r), loss=loss, param_hash=param_hash,
             wire_bytes_total=wire_total, disagreement=disagreement,
-            ranks=ranks_tuple))
+            ranks=ranks_tuple,
+            h_by=(tuple(h_map[c] for c in alive_ids) if h_active and n_alive
+                  else None),
+            t_compute_by=(tuple(leg.t_by[c] for c in alive_ids)
+                          if n_alive else None),
+            idle_by=(tuple(leg.idle_by[c] for c in alive_ids)
+                     if n_alive else None)))
 
     tl = Timeline(scenario=sc.meta(), events=events)
     if num is not None:

@@ -86,6 +86,19 @@ class RoundEvent:
                                        # order over the alive set): a
                                        # degraded uplink's edges carry a
                                        # lower rank than healthy ones
+    h_by: Optional[Tuple[int, ...]] = None    # per-cluster executed local
+                                       # steps (alive-id order) when an
+                                       # ``HSpec`` policy is active;
+                                       # ``h_steps`` stays the round's
+                                       # budget H (what "global" runs)
+    t_compute_by: Optional[Tuple[float, ...]] = None  # per-cluster compute
+                                       # seconds (alive-id order): modeled
+                                       # h_c*t_step_c in-process, measured
+                                       # wall clock on the proc backend
+    idle_by: Optional[Tuple[float, ...]] = None       # per-cluster barrier
+                                       # wait (t_compute_s - own compute) —
+                                       # the straggler waste the balance
+                                       # H-policy shrinks
 
 
 @dataclass
@@ -123,6 +136,24 @@ class Timeline:
         return (sum(e.exposed_comm_s for e in self.events) / t
                 if t > 0 else 0.0)
 
+    @property
+    def total_barrier_idle_s(self) -> float:
+        """Cluster-seconds burnt waiting at the end-of-round barrier,
+        summed over rounds and clusters (``RoundEvent.idle_by``) — the
+        straggler waste ``benchmarks/straggler_h.py`` compares across H
+        policies."""
+        return sum(sum(e.idle_by) for e in self.events
+                   if e.idle_by is not None)
+
+    @property
+    def barrier_idle_frac(self) -> float:
+        """Idle cluster-seconds as a fraction of all compute-side
+        cluster-seconds (own compute + barrier wait)."""
+        busy = sum(sum(e.t_compute_by) for e in self.events
+                   if e.t_compute_by is not None)
+        idle = self.total_barrier_idle_s
+        return idle / (busy + idle) if busy + idle > 0 else 0.0
+
     def losses(self) -> List[float]:
         return [e.loss for e in self.events if e.loss is not None]
 
@@ -136,6 +167,8 @@ class Timeline:
                 "tokens_per_s": round(self.tokens_per_s, 3),
                 "total_wire_bytes": self.total_wire_bytes,
                 "exposed_comm_frac": round(self.exposed_comm_frac, 6),
+                "total_barrier_idle_s": round(self.total_barrier_idle_s, 6),
+                "barrier_idle_frac": round(self.barrier_idle_frac, 6),
                 "structural_fingerprint": self.structural_fingerprint(),
             },
             "events": [asdict(e) for e in self.events],
@@ -157,9 +190,17 @@ class Timeline:
                           sort_keys=True).encode("utf-8")
         return hashlib.sha256(blob).hexdigest()
 
-    STRUCTURAL_FIELDS = ("round", "alive", "rejoined", "h_steps", "rank",
-                         "ranks", "wire_bytes", "wire_bytes_total", "faults",
-                         "param_hash")
+    STRUCTURAL_FIELDS = ("round", "alive", "rejoined", "h_steps", "h_by",
+                         "rank", "ranks", "wire_bytes", "wire_bytes_total",
+                         "faults", "param_hash")
+
+    def h_schedule(self) -> List[Any]:
+        """Per-round executed local-step counts — the H-policy's decision
+        trace, the analogue of ``rank_schedule()``.  Rounds scheduled by a
+        per-cluster policy record the per-cluster list (``RoundEvent.h_by``,
+        alive-id order); global rounds record the scalar budget."""
+        return [list(e.h_by) if e.h_by is not None else e.h_steps
+                for e in self.events]
 
     def rank_schedule(self) -> List[Any]:
         """Per-round executed compressor ranks — the adaptive controller's

@@ -11,8 +11,8 @@ with its graph neighbors only (NoLoCo-style neighbor averaging).
 Importing this package is jax-free (graph/accounting arithmetic is numpy);
 only the mix operators themselves touch jax, lazily.
 """
-from repro.topology.accounting import (GossipComm, gossip_round_comm,
-                                       round_wire_total)
+from repro.topology.accounting import (ComputeLeg, GossipComm, compute_leg,
+                                       gossip_round_comm, round_wire_total)
 from repro.topology.graphs import (GATHER_KINDS, GOSSIP_KINDS, KINDS,
                                    Topology, full, make_topology, ring,
                                    random_regular, star, torus)
@@ -25,4 +25,5 @@ __all__ = [
     "MixingMatrix", "mixing_op", "mix_row", "mix_stacked",
     "consensus_distance",
     "GossipComm", "gossip_round_comm", "round_wire_total",
+    "ComputeLeg", "compute_leg",
 ]

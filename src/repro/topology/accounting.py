@@ -23,6 +23,43 @@ from repro.topology.graphs import Topology
 
 
 @dataclass(frozen=True)
+class ComputeLeg:
+    """One round's compute side of the barrier, per cluster.
+
+    ``t_by[c]`` is cluster c's own local-training seconds
+    (``h_c * t_step_c``), ``t_barrier_s`` the round's compute leg (the
+    slowest alive cluster — everyone waits at the outer sync), and
+    ``idle_by[c]`` the barrier wait each cluster burns
+    (``t_barrier_s - t_by[c]``) — the waste the heterogeneous-H scheduler
+    exists to shrink.
+    """
+    t_barrier_s: float
+    slowest_cluster: int               # argmax own compute time (-1: none)
+    t_by: Dict[int, float]             # cluster -> own compute seconds
+    idle_by: Dict[int, float]          # cluster -> barrier wait seconds
+
+
+def compute_leg(h_by: Dict[int, int], t_steps: Sequence[float],
+                alive: np.ndarray) -> ComputeLeg:
+    """Per-round compute/barrier accounting for a (possibly per-cluster)
+    local-step schedule ``h_by`` (``core.adaptive.plan_h`` output) over the
+    alive set.  One implementation shared by the in-process simulator and
+    the proc coordinator — the modeled compute targets, barrier time, and
+    the ``slowest_cluster`` structural field can never drift between the
+    backends.  Deterministic tie-break: first alive cluster with the max
+    time wins (ascending-id ``max``, both backends)."""
+    alive = np.asarray(alive, bool)
+    ids = [int(i) for i in np.flatnonzero(alive)]
+    if not ids:
+        return ComputeLeg(0.0, -1, {}, {})
+    t_by = {c: float(int(h_by[c]) * float(t_steps[c])) for c in ids}
+    slowest = max(ids, key=lambda c: (t_by[c], -c))
+    barrier = t_by[slowest]
+    idle_by = {c: barrier - t_by[c] for c in ids}
+    return ComputeLeg(barrier, int(slowest), t_by, idle_by)
+
+
+@dataclass(frozen=True)
 class GossipComm:
     t_comm_s: float                    # slowest cluster's neighbor exchange
     bottleneck_cluster: int            # argmax per-cluster comm time (-1)

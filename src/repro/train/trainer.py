@@ -43,15 +43,31 @@ class TrainConfig:
     adaptive_mode: str = "paper"
     adaptive_window: int = 5      # Alg. 3 window c
     hetero: float = 0.0           # per-cluster data heterogeneity (xi^2>0)
+    # heterogeneous local-step scheduling (core.adaptive.HSpec): "balance"
+    # gives each cluster its own per-round H from step_times (the measured
+    # or assumed per-cluster step seconds) so slow sites do fewer local
+    # steps; the inner scan stays h_steps long and masks the tail
+    # (core.diloco.masked_local_steps) — a uniform schedule is bitwise the
+    # scalar path
+    h_policy: str = "global"      # global | balance
+    h_min: int = 1
+    step_times: Optional[Any] = None   # per-cluster step seconds (len C)
     seed: int = 0
 
 
-def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables):
+def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables,
+                  h_vec=None):
     """Returns inner_fn(params, inner_opt_stacked, round_idx) -> (stacked
     params after H local AdamW steps per cluster, new inner state).
     Data is drawn deterministically from per-cluster PRNG streams; with
     tcfg.hetero > 0 each cluster prefers a different successor slot
-    (Assumption 3.3 heterogeneity)."""
+    (Assumption 3.3 heterogeneity).
+
+    ``h_vec`` (a (C,) int32 per-cluster local-step schedule, e.g. from
+    ``core.adaptive.plan_h``) switches to heterogeneous-H mode: every
+    cluster runs the same ``h_steps``-long masked scan but only its own
+    first ``h_vec[c]`` steps apply, and the per-round aux becomes the
+    per-cluster mean loss."""
     from repro.data.synthetic import _gen_batch
 
     branching = 4
@@ -65,32 +81,40 @@ def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables):
     else:
         bias_all = None
 
-    def one_cluster(params, opt_state, cluster_idx, round_idx):
-        def step(carry, h):
-            params, opt_state = carry
-            key = jax.random.fold_in(
-                jax.random.fold_in(
-                    jax.random.fold_in(jax.random.PRNGKey(tcfg.seed + 7),
-                                       cluster_idx), round_idx), h)
-            toks = _gen_batch(key, tcfg.local_batch, tcfg.seq_len, 4,
-                              data_tables,
-                              None if bias_all is None
-                              else bias_all[cluster_idx])
-            batch = {"tokens": toks}
-            if cfg.modality != "text":
-                emb = jax.random.normal(
-                    key, (tcfg.local_batch, cfg.n_frontend_tokens,
-                          cfg.d_model), jnp.float32) * 0.02
-                batch["frontend"] = emb
-            (loss, _), g = jax.value_and_grad(
-                lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
-            params, opt_state = adamw.update(g, opt_state, params,
-                                             lr=tcfg.inner_lr)
-            return (params, opt_state), loss
+    def step_body(carry, h, cluster_idx, round_idx):
+        # shared step so the plain and h-masked scans run the identical body
+        params, opt_state = carry
+        key = jax.random.fold_in(
+            jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(tcfg.seed + 7),
+                                   cluster_idx), round_idx), h)
+        toks = _gen_batch(key, tcfg.local_batch, tcfg.seq_len, 4,
+                          data_tables,
+                          None if bias_all is None
+                          else bias_all[cluster_idx])
+        batch = {"tokens": toks}
+        if cfg.modality != "text":
+            emb = jax.random.normal(
+                key, (tcfg.local_batch, cfg.n_frontend_tokens,
+                      cfg.d_model), jnp.float32) * 0.02
+            batch["frontend"] = emb
+        (loss, _), g = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt_state = adamw.update(g, opt_state, params,
+                                         lr=tcfg.inner_lr)
+        return (params, opt_state), loss
 
+    def one_cluster(params, opt_state, cluster_idx, round_idx):
+        step = lambda carry, h: step_body(carry, h, cluster_idx, round_idx)
         (params, opt_state), losses = jax.lax.scan(
             step, (params, opt_state), jnp.arange(tcfg.h_steps))
         return params, opt_state, losses
+
+    def one_cluster_h(params, opt_state, cluster_idx, round_idx, h_c):
+        step = lambda carry, h: step_body(carry, h, cluster_idx, round_idx)
+        (params, opt_state), mean_loss = diloco.masked_local_steps(
+            step, (params, opt_state), tcfg.h_steps, h_c)
+        return params, opt_state, mean_loss
 
     def inner_fn(params, inner_opt_stacked, round_idx):
         f = lambda opt, ci: one_cluster(params, opt, ci, round_idx)
@@ -98,7 +122,19 @@ def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables):
             inner_opt_stacked, jnp.arange(tcfg.n_clusters))
         return params_s, opt_s, losses
 
-    return inner_fn
+    if h_vec is None:
+        return inner_fn
+
+    h_arr = jnp.asarray(h_vec, jnp.int32)
+
+    def inner_fn_h(params, inner_opt_stacked, round_idx):
+        f = lambda opt, ci, hc: one_cluster_h(params, opt, ci, round_idx,
+                                              hc)
+        params_s, opt_s, mean_losses = jax.vmap(f)(
+            inner_opt_stacked, jnp.arange(tcfg.n_clusters), h_arr)
+        return params_s, opt_s, mean_losses
+
+    return inner_fn_h
 
 
 def cluster_mean(stacked_tree):
@@ -113,6 +149,9 @@ class RunResult:
     h_per_round: List[int]
     r_per_round: List[int]
     wall_s: float
+    # per-cluster executed local steps per round (heterogeneous h_policy
+    # only; empty under the global policy) — h_per_round stays the budget
+    h_by_per_round: List[tuple] = field(default_factory=list)
 
 
 def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
@@ -141,7 +180,29 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
     eval_data = SyntheticLM(cfg.vocab_size, tcfg.seq_len, 16,
                             seed=tcfg.seed, data_shard=9999)
     eval_batch = with_frontend(eval_data.next_batch(), cfg)
-    inner_fn = make_inner_fn(cfg, tcfg, data.table)
+
+    # heterogeneous local-step schedule: the single-host trainer has no
+    # modeled clock, so the per-cluster step times come from the config
+    # (measured on the real sites, or assumed); they are static, hence one
+    # schedule serves every round
+    h_by = None
+    if tcfg.h_policy != "global":
+        t_by = (tcfg.step_times if tcfg.step_times is not None
+                else (1.0,) * tcfg.n_clusters)
+        if len(t_by) != tcfg.n_clusters:
+            raise ValueError(f"step_times has {len(t_by)} entries for "
+                             f"{tcfg.n_clusters} clusters")
+        h_map = adaptive.plan_h(
+            adaptive.HSpec(policy=tcfg.h_policy, h_min=tcfg.h_min),
+            tcfg.h_steps, np.asarray(t_by, float),
+            np.ones(tcfg.n_clusters, bool))
+        h_by = tuple(h_map[c] for c in range(tcfg.n_clusters))
+    # uniform-at-budget schedules run the plain scan (bitwise today's
+    # path); only a genuinely heterogeneous schedule pays the masked
+    # program — the same dispatch rule the simulator backends apply
+    uniform = h_by is None or all(h == tcfg.h_steps for h in h_by)
+    inner_fn = make_inner_fn(cfg, tcfg, data.table,
+                             h_vec=None if uniform else h_by)
 
     def _round(state, rank_scalar):
         return diloco.diloco_round(state, inner_fn, compressor,
@@ -156,7 +217,7 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
     ada_state = adaptive.AdaGradCmpState.create(ada_cfg)
 
     shapes = tree_shapes(params)
-    losses, evals, wires, hs, rs = [], [], [], [], []
+    losses, evals, wires, hs, rs, h_rows = [], [], [], [], [], []
     t0 = time.time()
     rank_scalar = jnp.asarray(ada_state.r_t, jnp.int32)
     for r in range(n_rounds):
@@ -173,11 +234,14 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
             sum(int(np.prod(s)) * 4 for s in shapes.values()))
         hs.append(h_exec if tcfg.adaptive else tcfg.h_steps)
         rs.append(r_exec)
+        if h_by is not None:
+            h_rows.append(h_by)
         if tcfg.adaptive and tcfg.compress:
             ada_state = adaptive.observe_mean_pseudo_grad(
                 ada_state, cluster_mean(state.delta_pending), ada_cfg)
             rank_scalar = jnp.asarray(ada_state.r_t, jnp.int32)
-    return RunResult(losses, evals, wires, hs, rs, time.time() - t0)
+    return RunResult(losses, evals, wires, hs, rs, time.time() - t0,
+                     h_by_per_round=h_rows)
 
 
 def run_allreduce_training(cfg: ModelConfig, tcfg: TrainConfig,

@@ -25,6 +25,22 @@ if not os.environ.get("REPRO_FULL_XLA_OPT"):
         os.environ["XLA_FLAGS"] = (
             _flags + " --xla_backend_optimization_level=0").strip()
 
+# --- persistent jax compilation cache --------------------------------------
+# The remaining tier-1 cost is the per-arch value_and_grad compiles; jax's
+# persistent compilation cache (works on CPU in 0.4.x via env vars alone)
+# makes re-runs skip them entirely.  Opt out with REPRO_NO_JAX_CACHE=1;
+# point JAX_COMPILATION_CACHE_DIR elsewhere to relocate (CI caches this
+# directory between runs in both tier-1 jobs).  Must be set before jax
+# initializes, hence here and not in a fixture.
+if not os.environ.get("REPRO_NO_JAX_CACHE"):
+    os.environ.setdefault(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro-jax-cache"))
+    # default min-compile-time is 1 s; at 0.5 s the mid-sized jits (sim
+    # numeric rounds, compressor roundtrips) get cached too
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS",
+                          "0.5")
+
 # --- hypothesis fallback (must happen at import time, before collection) ---
 if importlib.util.find_spec("hypothesis") is None:
     _here = os.path.dirname(__file__)

@@ -221,6 +221,35 @@ def test_adaptive_bandwidth_timing_only_equivalence():
     assert sched[1] < sched[0] and sched[2] < sched[0]
 
 
+def test_h_balance_timing_only_equivalence():
+    """Heterogeneous local-step scheduling on real processes: the
+    coordinator plans per-cluster H from the same modeled step times as
+    the in-process simulator and broadcasts each worker's count in the
+    round header — identical H schedules, identical structural
+    fingerprints (which now cover h_by), measured timing within
+    tolerance.  The straggler's shorter leg must show up on the wall
+    clock."""
+    from repro.core.adaptive import HSpec
+    sc = proc_scenario(rounds=4, h_steps=4, t_step_s=0.03,
+                       faults=FaultSchedule((Straggler(1, 1, 3, 4.0),)),
+                       h_spec=HSpec(policy="balance"))
+    rep = check_equivalence(sc, None)
+    assert rep["structural_match"], rep
+    assert rep["h_schedule_match"], rep["h_schedule_proc"]
+    assert rep["timing_ok"], rep
+    assert rep["proc_fingerprint"] == rep["model_fingerprint"]
+    sched = rep["h_schedule_proc"]
+    assert sched[0] == [4, 4, 4]            # clean round: uniform budget
+    assert sched[1][1] == 1                 # 4x straggler: 1/4 of the steps
+    assert sched[1][0] == sched[1][2] == 4
+    # balance keeps the barrier near the healthy clusters' full budget:
+    # the straggler round is NOT ~4x slower (it is under global H)
+    tl = rep["timelines"]["proc"]
+    assert tl.events[1].t_compute_s < 2.0 * tl.events[0].t_compute_s
+    # per-cluster measured compute recorded; the straggler idles least
+    assert len(tl.events[1].t_compute_by) == 3
+
+
 def test_structural_fingerprint_ignores_wall_clock():
     """Same scenario, different step time: measured/modeled seconds change,
     the structural fingerprint (participants/budgets/wire/hashes) doesn't."""
@@ -337,6 +366,31 @@ def test_proc_gossip_adaptive_per_edge_bitwise_equivalence():
             assert all(e.ranks[c] == 8 for c in (0, 1, 3))   # its edges only
         else:
             assert e.ranks == (8, 8, 8, 8)
+
+
+@pytest.mark.slow
+def test_proc_h_balance_numeric_bitwise_equivalence():
+    """Per-cluster H end-to-end on the proc backend: heterogeneous rounds
+    run the masked fixed-length scan (H broadcast in the round header,
+    traced into one compile), uniform rounds dispatch to the plain
+    scalar-H program on BOTH backends, and per-round param hashes + the H
+    schedule are bit-identical through a straggler window."""
+    from repro.core.adaptive import HSpec
+    sc = proc_scenario(
+        n_clusters=3, rounds=6, h_steps=4, t_step_s=0.05,
+        link=LinkProfile(bytes_per_s=100_000, jitter=0.1),
+        faults=FaultSchedule((Straggler(1, 1, 4, 3.0),)),
+        n_params=1e5, h_spec=HSpec(policy="balance"))
+    spec = QuadraticSpec(n_clusters=3, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep
+    assert rep["h_schedule_match"], rep["h_schedule_proc"]
+    assert rep["structural_match"] and rep["timing_ok"], rep
+    assert rep["final_params_bitwise_equal"]
+    sched = rep["h_schedule_proc"]
+    assert any(min(row) < max(row) for row in sched)   # heterogeneous rounds
+    losses = rep["timelines"]["proc"].losses()
+    assert losses[-1] < losses[0]
 
 
 @pytest.mark.slow
