@@ -12,4 +12,13 @@ cd "$(dirname "$0")/.."
 # processes via repro.sim.proc) must resolve the package from any cwd;
 # a pre-set PYTHONPATH is honored after ours
 export PYTHONPATH="$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+
+# pytest-xdist (optional) parallelizes the fast tier across cores; --runslow
+# runs stay serial — each slow test already spawns worker subprocesses /
+# multi-device jax jobs of its own and would oversubscribe the box
+XDIST=()
+if python -c "import xdist" >/dev/null 2>&1 \
+    && [[ " $* " != *" --runslow "* ]]; then
+  XDIST=(-n auto)
+fi
+exec python -m pytest -x -q ${XDIST[@]+"${XDIST[@]}"} "$@"

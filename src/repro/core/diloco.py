@@ -203,6 +203,22 @@ def _error_feedback(cfg: "RoundConfig", delta_ref, delta_hat, Delta_rows,
     return jax.tree.map(lambda d, D: d - D, delta_ref, Delta_rows)
 
 
+def pseudo_grad(anchor, params_local, error=None):
+    """Single-cluster pseudo-gradient delta = (theta_anchor - theta_local)
+    + e, fp32, no leading cluster axis — the delta-extraction arithmetic
+    shared by the proc worker's EF leg and the sharded pipeline-parallel
+    inner engine (``parallel.inner_engine.extract_delta``).  One
+    implementation keeps the two engines' deltas definitionally identical;
+    the stacked round loop uses the ``_pseudo_grad`` variants below."""
+    if error is None:
+        error = jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), anchor)
+    return jax.tree.map(
+        lambda a, p, e: (a.astype(jnp.float32)
+                         - p.astype(jnp.float32)) + e,
+        anchor, params_local, error)
+
+
 def _pseudo_grad(anchor, params_inner, err, gossip: bool):
     """delta = (theta_anchor - theta_local) + e, per cluster."""
     if gossip:

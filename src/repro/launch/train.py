@@ -12,11 +12,140 @@ step functions (launch/steps.py), run for real on
 Usage (8 simulated devices, 2 clusters x 2 data x 2 model):
   python -m repro.launch.train --arch granite-3-8b --smoke \
       --devices 8 --clusters 2 --rounds 8 --h-steps 10
+
+``--inner pp`` switches the inner loop to the sharded pipeline-parallel
+engine (parallel/inner_engine.py): the mesh becomes
+(clusters, data, --pp-stages), every cluster's H AdamW steps run through
+the shard_map GPipe loss, the whole round state lives in one
+cluster-stacked ``DiLoCoTrainState`` placed by ``state_shardings``, and
+the outer compress -> mean -> Nesterov round consumes the gathered delta
+from ``extract_delta`` — the same code path the sim gates certify on the
+unit mesh:
+  python -m repro.launch.train --arch granite-3-8b --smoke \
+      --inner pp --devices 8 --clusters 2 --data 2 --pp-stages 2
 """
 import argparse
 import dataclasses
 import os
 import sys
+
+
+def _run_pp(args) -> None:
+    """DiLoCoX rounds with the pipeline-parallel inner engine on a
+    cluster-stacked (clusters, data, model) mesh.
+
+    Each cluster row holds its own full replica of the round state — local
+    params, inner AdamW moments, outer Nesterov momentum, EF residual —
+    exactly as the paper's decentralized clusters do (no parameter
+    server); the outer rows stay identical because every cluster applies
+    the same averaged delta.  The comm leg here runs sequentially after
+    the inner steps (it's a driver, not the overlap-scheduled runtime),
+    but the DELAYED round arithmetic matches ``core.diloco.diloco_round``:
+    round t averages delta^{t-1} and the outer update lands on the
+    anchor."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import get_config
+    from repro.core import diloco
+    from repro.core.compression import make_compressor, tree_shapes
+    from repro.data.synthetic import SyntheticLM
+    from repro.optim import adamw, nesterov
+    from repro.parallel import inner_engine as IE
+    from repro.parallel import pipeline as PP
+
+    if args.adaptive or args.h_policy != "global":
+        raise SystemExit("--inner pp supports the static round schedule "
+                         "only (no --adaptive / --h-policy balance yet)")
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    C = args.clusters
+    assert C * args.data * args.pp_stages == args.devices, (
+        "--devices must equal clusters * data * pp-stages")
+    Bc = args.global_batch // C
+    assert Bc % args.pp_micro == 0, (
+        "per-cluster batch (global-batch/clusters) must divide --pp-micro")
+
+    mesh = jax.make_mesh((C, args.data, args.pp_stages),
+                         ("clusters", "data", "model"))
+    pcfg = PP.PipelineConfig(n_stages=args.pp_stages, n_micro=args.pp_micro)
+
+    # one cluster's state, broadcast to a (C,)-stacked DiLoCoTrainState and
+    # placed by the explicit sharding rules (stage dim -> "model", leading
+    # replica dim -> "clusters")
+    st1 = IE.init_train_state(cfg, pcfg, jax.random.PRNGKey(0))
+    stack = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (C,) + x.shape).copy(), t)
+    state = IE.DiLoCoTrainState(params=stack(st1.params),
+                                inner_opt=stack(st1.inner_opt),
+                                outer_opt=stack(st1.outer_opt),
+                                error=stack(st1.error))
+    state = IE.shard_train_state(state, mesh, cluster_stacked=True)
+    anchor = state.params
+    delta_pending = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), state.params)
+
+    compressor = make_compressor("diloco_x", rank=args.rank)
+    comp1 = compressor.init_state(st1.params)
+    comp_state = jax.tree.map(
+        lambda x: (jnp.broadcast_to(x, (C,) + x.shape).copy()
+                   if hasattr(x, "shape") else x), comp1)
+
+    train_step = jax.jit(IE.make_pp_train_step(
+        cfg, mesh, pcfg, inner_lr=args.inner_lr, cluster_stacked=True))
+
+    def outer_round(state, anchor, delta_pending, comp_state):
+        # comm leg: average LAST round's pseudo-grads (one-step delay)
+        delta_hat, comp_state = diloco.per_cluster_compress(
+            compressor, delta_pending, comp_state,
+            jnp.asarray(args.rank, jnp.int32))
+        Delta = jax.tree.map(lambda x: x.mean(0), delta_hat)
+        Delta_rows = jax.tree.map(
+            lambda D, d: jnp.broadcast_to(D[None], d.shape), Delta,
+            delta_pending)
+        # Alg. 2 error feedback: e = delta - Delta (vs the applied average)
+        err = jax.tree.map(lambda d, Dr: d - Dr, delta_pending, Delta_rows)
+        # next round's pending delta, gathered from the sharded state
+        delta_new = IE.extract_delta(anchor, state._replace(error=err))
+        # delayed outer Nesterov on the anchor, applied row-wise (rows
+        # stay identical: same Delta everywhere)
+        params_new, outer_opt = nesterov.update(
+            Delta_rows, state.outer_opt, anchor,
+            lr=args.outer_lr, momentum=args.outer_momentum)
+        state = IE.DiLoCoTrainState(params=params_new,
+                                    inner_opt=state.inner_opt,
+                                    outer_opt=outer_opt, error=err)
+        return state, params_new, delta_new, comp_state
+
+    outer_jit = jax.jit(outer_round)
+
+    data = [SyntheticLM(cfg.vocab_size, args.seq_len, Bc, seed=0,
+                        data_shard=i) for i in range(C)]
+    tok_sharding = NamedSharding(mesh, P("clusters", "data", None))
+    wire = compressor.wire_bytes(tree_shapes(st1.params))
+
+    from repro.checkpoint import checkpoint as ckpt_lib
+    for r in range(args.rounds):
+        losses = []
+        for h in range(args.h_steps):
+            toks = jnp.stack([d.next_batch()["tokens"] for d in data])
+            toks = jax.device_put(toks, tok_sharding)
+            params, inner_opt, loss = train_step(state.params,
+                                                 state.inner_opt, toks)
+            state = state._replace(params=params, inner_opt=inner_opt)
+            losses.append(float(loss) / C)
+        state, anchor, delta_pending, comp_state = outer_jit(
+            state, anchor, delta_pending, comp_state)
+        print(f"round {r}: mean_loss={np.mean(losses):.4f} "
+              f"H={args.h_steps} wire_per_cluster={wire/1e6:.2f}MB")
+        if args.ckpt_dir:
+            ckpt_lib.save(os.path.join(args.ckpt_dir, f"round_{r:04d}"),
+                          {"params": state.params}, step=r,
+                          meta={"arch": args.arch, "inner": "pp"})
+    print("TRAIN-DRIVER-OK")
 
 
 def main() -> None:
@@ -47,11 +176,23 @@ def main() -> None:
                          "(measured on the real sites) for --h-policy "
                          "balance; default: uniform (== global)")
     ap.add_argument("--h-min", type=int, default=1)
+    ap.add_argument("--inner", default="gspmd", choices=["gspmd", "pp"],
+                    help="inner engine: gspmd = the vmapped cluster-stacked "
+                         "step (launch/steps.py); pp = the sharded "
+                         "pipeline-parallel engine "
+                         "(parallel/inner_engine.py) with --pp-stages "
+                         "stages per cluster")
+    ap.add_argument("--pp-stages", type=int, default=2)
+    ap.add_argument("--pp-micro", type=int, default=4)
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+    if args.inner == "pp":
+        _run_pp(args)
+        return
 
     import jax
     import jax.numpy as jnp

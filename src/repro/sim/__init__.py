@@ -7,6 +7,8 @@ injectable faults: stragglers, link degradation, membership churn
 """
 from repro.sim.faults import (FaultSchedule, Join, Leave, LinkDegradation,
                               Straggler)
+from repro.sim.pp_problem import PPSpec
+from repro.sim.problems import problem_from_dict
 from repro.sim.quadratic import QuadraticSpec
 from repro.sim.scenario import LinkProfile, Scenario, synthetic_shapes
 from repro.sim.simulator import (NumericProblem, compare_methods,
@@ -17,6 +19,7 @@ from repro.sim.timeline import (RoundEvent, Timeline, combine_row_hashes,
 __all__ = [
     "FaultSchedule", "Join", "Leave", "LinkDegradation", "Straggler",
     "LinkProfile", "Scenario", "synthetic_shapes", "QuadraticSpec",
+    "PPSpec", "problem_from_dict",
     "NumericProblem", "compare_methods", "make_quadratic_problem",
     "simulate", "RoundEvent", "Timeline", "tree_hash", "combine_row_hashes",
 ]

@@ -1,0 +1,176 @@
+"""Serializable pipeline-parallel LM problem for the simulator backends.
+
+The pp counterpart of ``sim/quadratic.QuadraticSpec``: a tiny dense
+decoder LM (``configs.base.reduced`` dims) whose inner loop runs H AdamW
+steps through the sharded GPipe pipeline loss
+(``parallel.inner_engine.make_pp_one_cluster``) on a per-cluster
+("data","model") unit mesh of faked host devices — the real thing the
+proc worker and the in-process simulator both execute when
+``Scenario.inner_engine == "pp"``.
+
+Same bitwise discipline as the quadratic:
+
+ - ``one_cluster_fn()`` / ``one_cluster_fn_h()`` expose the exact worker
+   signatures ``(params_g, opt, c[, h])``; the cluster index is traced and
+   only feeds integer PRNG derivations (batch keys), so constant-folding
+   it in the in-process unroll cannot perturb the float arithmetic.
+ - ``problem()`` lifts them with a python-level unroll over clusters
+   (``make_pp_inner_fns``), NOT vmap — vmapping the pipeline's matmuls
+   would change accumulation order by ~1 ulp (the ``per_cluster_compress``
+   lesson).
+ - Batches are **round-invariant** (keyed by seed, cluster, inner step
+   only): the worker's inner function takes no round index, so any
+   round-dependence would silently diverge the two backends.
+
+The process (main or worker) must initialize jax with at least
+``xla_device_count`` faked devices; ``repro.sim.problems`` exposes the
+count jax-free so ``proc/worker.py`` can set XLA_FLAGS before its first
+jax import.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Any, Dict
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PPSpec:
+    """Cluster c trains a reduced dense decoder on its own synthetic token
+    stream through the pipeline-parallel inner engine.  Heterogeneity
+    comes from the per-cluster data (distinct PRNG folds), like real
+    decentralized corpora — not from a target offset."""
+    n_clusters: int
+    arch: str = "granite-3-8b"
+    n_layers: int = 2
+    vocab_size: int = 64
+    seq_len: int = 8
+    local_batch: int = 4
+    n_stages: int = 2
+    n_micro: int = 2
+    data_parallel: int = 1
+    h_steps: int = 2
+    inner_lr: float = 1e-3
+    seed: int = 0
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.5
+
+    # ---- serialization (worker subprocess bootstrap) ----------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": "pp_lm", **asdict(self)}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "PPSpec":
+        d = dict(d)
+        if d.pop("kind", "pp_lm") != "pp_lm":
+            raise ValueError(f"unknown problem kind {d!r}")
+        return PPSpec(**d)
+
+    @property
+    def engine(self) -> str:
+        """Inner-engine tag cross-checked against Scenario.inner_engine."""
+        return "pp"
+
+    @property
+    def xla_device_count(self) -> int:
+        """Devices the hosting process must fake BEFORE jax initializes
+        (``--xla_force_host_platform_device_count``)."""
+        return self.data_parallel * self.n_stages
+
+    # ---- deterministic construction ---------------------------------------
+    def model_config(self):
+        import dataclasses
+
+        from repro.configs.base import get_config
+
+        cfg = get_config(self.arch).reduced()
+        return dataclasses.replace(cfg, n_layers=self.n_layers,
+                                   vocab_size=self.vocab_size)
+
+    def _engine(self):
+        from repro.parallel import inner_engine as IE
+        from repro.parallel import pipeline as PP
+
+        cfg = self.model_config()
+        pcfg = PP.PipelineConfig(n_stages=self.n_stages,
+                                 n_micro=self.n_micro)
+        mesh = IE.unit_mesh(pcfg, self.data_parallel)
+        return cfg, pcfg, mesh
+
+    def batch_fn(self):
+        """(c, i) -> tokens (B, S), round-invariant (see module doc)."""
+        import jax
+
+        base = jax.random.PRNGKey(self.seed + 13)
+        B, S, V = self.local_batch, self.seq_len, self.vocab_size
+
+        def fn(c, i):
+            key = jax.random.fold_in(jax.random.fold_in(base, c), i)
+            return jax.random.randint(key, (B, S), 0, V)
+
+        return fn
+
+    def init_params(self):
+        import jax
+
+        from repro.parallel import pipeline as PP
+
+        cfg = self.model_config()
+        pcfg = PP.PipelineConfig(n_stages=self.n_stages,
+                                 n_micro=self.n_micro)
+        return PP.init_pp_params(cfg, jax.random.PRNGKey(self.seed), pcfg)
+
+    def one_cluster_fn(self):
+        """(params_global, inner_opt, c) -> (params_H, inner_opt', losses)
+        — the exact per-cluster program a proc worker jits."""
+        from repro.parallel import inner_engine as IE
+
+        cfg, pcfg, mesh = self._engine()
+        one, _ = IE.make_pp_one_cluster(cfg, pcfg, mesh,
+                                        inner_lr=self.inner_lr,
+                                        h_steps=self.h_steps,
+                                        batch_fn=self.batch_fn())
+        return one
+
+    def one_cluster_fn_h(self):
+        """(params_global, inner_opt, c, h) -> (params, opt', mean_loss):
+        the masked fixed-length variant (``diloco.masked_local_steps``);
+        uniform-at-budget rounds must dispatch to ``one_cluster_fn`` (the
+        PR 5 rule — the masked program compiles differently)."""
+        from repro.parallel import inner_engine as IE
+
+        cfg, pcfg, mesh = self._engine()
+        _, one_h = IE.make_pp_one_cluster(cfg, pcfg, mesh,
+                                          inner_lr=self.inner_lr,
+                                          h_steps=self.h_steps,
+                                          batch_fn=self.batch_fn())
+        return one_h
+
+    def problem(self):
+        """The in-process ``NumericProblem`` (unrolled over clusters),
+        tagged ``engine="pp"`` so ``simulate`` can cross-check it against
+        ``Scenario.inner_engine``."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.optim import adamw
+        from repro.parallel import inner_engine as IE
+        from repro.sim.simulator import NumericProblem
+
+        params = self.init_params()
+        one = self.one_cluster_fn()
+        one_h = self.one_cluster_fn_h()
+        inner_fn, inner_fn_h = IE.make_pp_inner_fns(one, one_h,
+                                                    self.n_clusters)
+
+        opt0 = adamw.init(params)
+        inner_stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_clusters,)
+                                       + x.shape).copy(), opt0)
+
+        return NumericProblem(params=params,
+                              inner_opt_stacked=inner_stacked,
+                              inner_fn=inner_fn, outer_lr=self.outer_lr,
+                              outer_momentum=self.outer_momentum,
+                              inner_fn_h=inner_fn_h, engine="pp")

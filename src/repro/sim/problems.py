@@ -1,0 +1,33 @@
+"""Problem-kind registry for the simulator backends (jax-free import).
+
+A numeric problem crosses the process boundary as a JSON dict with a
+``kind`` discriminator (``spec.to_dict()``).  The proc worker rebuilds its
+spec through ``problem_from_dict`` instead of hard-wiring one spec class,
+and reads ``xla_device_count`` *jax-free* — the pp engine needs
+``--xla_force_host_platform_device_count`` in XLA_FLAGS before the
+worker's first jax import, so the count must come from the raw dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.sim.quadratic import QuadraticSpec
+
+
+def problem_from_dict(d: Dict[str, Any]):
+    """Rebuild a problem spec from its ``to_dict()`` payload."""
+    kind = d.get("kind", "quadratic")
+    if kind == "quadratic":
+        return QuadraticSpec.from_dict(d)
+    if kind == "pp_lm":
+        from repro.sim.pp_problem import PPSpec
+        return PPSpec.from_dict(d)
+    raise ValueError(f"unknown problem kind {kind!r}")
+
+
+def xla_device_count(d: Dict[str, Any]) -> int:
+    """Faked host devices the hosting process needs for this problem dict
+    (1 = no pipeline mesh; computed without importing jax)."""
+    if d.get("kind") == "pp_lm":
+        return int(d.get("data_parallel", 1)) * int(d.get("n_stages", 1))
+    return 1

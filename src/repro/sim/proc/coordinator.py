@@ -226,6 +226,20 @@ def run_proc(sc: Scenario, problem=None, *,
     numeric = problem is not None
     if numeric and problem.n_clusters != sc.n_clusters:
         raise ValueError("problem.n_clusters != scenario.n_clusters")
+    if numeric:
+        # mirror the in-process simulator's inner-engine validation: the
+        # declared Scenario.inner_engine must match the problem's engine,
+        # and the pp engine is gather-only (a gossip worker would need a
+        # stacked pp program — a different compiled computation)
+        engine = getattr(problem, "engine", "scalar")
+        if engine != sc.inner_engine:
+            raise ValueError(
+                f"Scenario.inner_engine={sc.inner_engine!r} but the "
+                f"problem was built for engine {engine!r}")
+        if engine == "pp" and gossip:
+            raise NotImplementedError(
+                "backend='proc' runs inner_engine='pp' over gather "
+                "topologies only (see simulate()'s matching check)")
 
     C = sc.n_clusters
     compressor = make_compressor(sc.compressor, **sc.compressor_kw)

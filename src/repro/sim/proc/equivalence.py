@@ -32,6 +32,20 @@ from repro.sim.proc.coordinator import run_proc
 from repro.sim.scenario import Scenario
 
 
+def _leaves(tree):
+    """Flatten a params pytree (nested dicts/lists) to leaves in sorted-key
+    order — the scalar engine's flat dict and the pp engine's nested
+    ``{"embed", "stages", ...}`` tree both pass through unchanged shape."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaves(tree[k])
+    elif isinstance(tree, (list, tuple)):
+        for x in tree:
+            yield from _leaves(x)
+    else:
+        yield tree
+
+
 def check_equivalence(sc: Scenario, problem=None, *,
                       time_rtol: float = 0.5, time_atol: float = 0.3,
                       crash_at: Optional[Dict[int, int]] = None
@@ -71,6 +85,16 @@ def check_equivalence(sc: Scenario, problem=None, *,
         "h_schedule_proc": tl_proc.h_schedule(),
         "h_schedule_model": tl_model.h_schedule(),
         "h_schedule_match": tl_proc.h_schedule() == tl_model.h_schedule(),
+        # inner-engine fields: both timelines must have replayed the same
+        # engine ("scalar" single-replica vs "pp" sharded pipeline mesh) —
+        # a pp hash compared against a scalar hash would be a vacuous gate
+        "inner_engine_proc": tl_proc.scenario.get("inner_engine", "scalar"),
+        "inner_engine_model": tl_model.scenario.get("inner_engine",
+                                                    "scalar"),
+        "inner_engine_match": (
+            tl_proc.scenario.get("inner_engine", "scalar")
+            == tl_model.scenario.get("inner_engine", "scalar")
+            == sc.inner_engine),
     }
     if len(tl_proc.events) != len(tl_model.events):
         report["ok"] = report["structural_match"] = False
@@ -127,21 +151,27 @@ def check_equivalence(sc: Scenario, problem=None, *,
             # model: the stacked tree — compare row-by-row (dead rows have
             # no worker to compare against and are masked out of every
             # mix/bootstrap anyway)
-            same = (fp is not None and fm is not None and len(fp) > 0
-                    and all(
-                        np.array_equal(np.asarray(row[k]),
-                                       np.asarray(fm[k])[c])
-                        for c, row in fp.items() for k in row))
+            fml = list(_leaves(fm)) if fm is not None else []
+            same = fp is not None and fm is not None and len(fp) > 0
+            for c, row in (fp or {}).items():
+                rl = list(_leaves(row))
+                same = same and len(rl) == len(fml) and all(
+                    np.array_equal(np.asarray(a), np.asarray(b)[c])
+                    for a, b in zip(rl, fml))
         else:
-            same = (fp is not None and fm is not None and all(
-                np.array_equal(np.asarray(fp[k]), np.asarray(fm[k]))
-                for k in fp))
+            fpl = list(_leaves(fp)) if fp is not None else []
+            fml = list(_leaves(fm)) if fm is not None else []
+            same = (fp is not None and fm is not None
+                    and len(fpl) == len(fml) and all(
+                        np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(fpl, fml)))
         report["final_params_bitwise_equal"] = bool(same)
         report["hash_match"] &= bool(same)
 
     report["ok"] = (report["structural_match"] and report["timing_ok"]
                     and report["rank_schedule_match"]
                     and report["h_schedule_match"]
+                    and report["inner_engine_match"]
                     and report["hash_match"] is not False)
     report["timelines"] = {"proc": tl_proc, "model": tl_model}
     return report
@@ -174,7 +204,8 @@ def format_report(report: Dict[str, Any]) -> str:
     lines.append(
         "equivalence: structural={structural_match} bitwise={bitwise} "
         "timing={timing_ok} ranks={rank_schedule_match} "
-        "h={h_schedule_match} "
+        "h={h_schedule_match} engine={inner_engine_proc}"
+        "({inner_engine_match}) "
         "(max err {max_abs_time_err_s:.3f}s / "
         "{max_rel_time_err:.1%})  => {verdict}".format(
             bitwise=bitwise,

@@ -65,12 +65,12 @@ class _NumericRuntime:
 
         from repro.core.compression import make_compressor
         from repro.optim import adamw, nesterov
-        from repro.sim.quadratic import QuadraticSpec
+        from repro.sim.problems import problem_from_dict
         from repro.topology.mixing import mix_row
 
         self.jax, self.jnp = jax, jnp
         self.nesterov = nesterov
-        spec = QuadraticSpec.from_dict(cfg["problem"])
+        spec = problem_from_dict(cfg["problem"])
         self.n_clusters = int(cfg.get("n_clusters", spec.n_clusters))
         self.cluster = jnp.asarray(cfg["cluster"], jnp.int32)
         self.compressor = make_compressor(cfg["compressor"]["name"],
@@ -221,6 +221,19 @@ def main(argv=None) -> None:
     gossip = bool(cfg.get("gossip", False))
     report_pending = bool(cfg.get("report_pending", False))
     my_epoch = int(cfg.get("epoch", 0))
+
+    if cfg.get("problem") is not None:
+        # pp problems run their inner loop on a faked ("data","model")
+        # device mesh: the device count must be forced BEFORE the first
+        # jax import (jax locks it at init), i.e. before _NumericRuntime.
+        # The count comes from the raw problem dict, jax-free.
+        from repro.sim.problems import xla_device_count
+        n_dev = xla_device_count(cfg["problem"])
+        flags = os.environ.get("XLA_FLAGS", "")
+        if n_dev > 1 and "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={n_dev}"
+            ).strip()
 
     mesh = PeerMesh(cluster) if gossip else None
     rt = _NumericRuntime(cfg) if cfg.get("problem") is not None else None

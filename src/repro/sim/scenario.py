@@ -81,6 +81,15 @@ class Scenario:
     # topology_seed.  In-process backend only (proc raises).
     topology_seed_schedule: Optional[Tuple[int, ...]] = None
 
+    # inner engine: "scalar" is the historical single-replica inner loop
+    # (quadratic/trainer vmap); "pp" runs each cluster's H local steps
+    # through the sharded pipeline-parallel engine
+    # (parallel/inner_engine.py) on a per-cluster ("data","model") mesh of
+    # faked host devices.  Timing-only scenarios may declare either (the
+    # engine only changes the numeric leg); numeric runs cross-check the
+    # declared engine against the problem's ``engine`` tag.
+    inner_engine: str = "scalar"
+
     # what is being shipped: explicit shapes win; else a synthetic tree
     param_shapes: Optional[Dict[str, Tuple[int, ...]]] = None
     n_params: float = 1.0e9
@@ -109,6 +118,10 @@ class Scenario:
                              degree=self.topology_degree, seed=seed)
 
     def __post_init__(self):
+        if self.inner_engine not in ("scalar", "pp"):
+            raise ValueError(
+                f"inner_engine must be 'scalar' or 'pp', "
+                f"got {self.inner_engine!r}")
         if self.topology_seed_schedule is not None:
             if self.topology != "random":
                 raise ValueError(
@@ -145,6 +158,7 @@ class Scenario:
             "h_spec": (None if self.h_spec is None
                        else self.h_spec.to_dict()),
             "delay": self.delay,
+            "inner_engine": self.inner_engine,
             "allreduce_per_step": self.allreduce_per_step,
             "topology": self.topology,
             "topology_degree": self.topology_degree,

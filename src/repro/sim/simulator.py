@@ -63,6 +63,11 @@ class NumericProblem:
                                      # fixed-length scan; aux = per-
                                      # cluster mean loss)
     inner_fn_h_stacked: Optional[Callable] = None  # gossip x per-cluster H
+    engine: str = "scalar"           # which inner engine built the fns:
+                                     # "scalar" (single-replica) or "pp"
+                                     # (sharded pipeline-parallel unit
+                                     # mesh); cross-checked against
+                                     # Scenario.inner_engine
 
 
 def make_quadratic_problem(n_clusters: int, **kw) -> NumericProblem:
@@ -168,6 +173,20 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
         import jax.numpy as jnp
 
         from repro.core import diloco, membership
+
+        engine = getattr(numeric, "engine", "scalar")
+        if engine != sc.inner_engine:
+            raise ValueError(
+                f"Scenario.inner_engine={sc.inner_engine!r} but the "
+                f"NumericProblem was built for engine {engine!r} "
+                "(PPSpec.problem() tags engine='pp'; quadratic/trainer "
+                "problems are 'scalar')")
+        if engine == "pp" and gossip:
+            raise ValueError(
+                "inner_engine='pp' supports gather topologies only: the "
+                "gossip leg needs a stacked inner_fn, and stacking C "
+                "pipeline meshes in one program would compile a different "
+                "(non-bitwise) computation than a lone pp worker")
 
         rcfg = diloco.RoundConfig(
             outer_lr=numeric.outer_lr, outer_momentum=numeric.outer_momentum,

@@ -52,7 +52,30 @@ class TrainConfig:
     h_policy: str = "global"      # global | balance
     h_min: int = 1
     step_times: Optional[Any] = None   # per-cluster step seconds (len C)
+    # inner engine: "scalar" runs single-replica inner steps (vmapped over
+    # clusters, the historical path); "pp" runs every cluster's H steps
+    # through the sharded pipeline-parallel engine
+    # (parallel.inner_engine) on a ("data","model") unit mesh of
+    # pp_stages faked devices — the hosting process must set
+    # XLA_FLAGS=--xla_force_host_platform_device_count>=pp_stages BEFORE
+    # jax initializes (text models only; see parallel/inner_engine.py)
+    inner_engine: str = "scalar"  # scalar | pp
+    pp_stages: int = 2
+    pp_micro: int = 2
     seed: int = 0
+
+
+def _hetero_bias(tcfg: TrainConfig, branching: int):
+    """Per-cluster successor-slot bias (Assumption 3.3 heterogeneity) —
+    shared by the scalar and pp inner engines so both draw the same
+    per-cluster data distribution."""
+    if tcfg.hetero <= 0:
+        return None
+    base = jnp.zeros((tcfg.n_clusters, branching))
+    boost = jnp.log(1.0 + tcfg.hetero * branching
+                    / (1 - tcfg.hetero + 1e-9))
+    return jax.vmap(lambda i: base[0].at[i % branching].set(boost))(
+        jnp.arange(tcfg.n_clusters))
 
 
 def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables,
@@ -71,15 +94,7 @@ def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables,
     from repro.data.synthetic import _gen_batch
 
     branching = 4
-    if tcfg.hetero > 0:
-        base = jnp.zeros((tcfg.n_clusters, branching))
-        boost = jnp.log(1.0 + tcfg.hetero * branching
-                        / (1 - tcfg.hetero + 1e-9))
-        bias_all = jax.vmap(
-            lambda i: base[0].at[i % branching].set(boost))(
-            jnp.arange(tcfg.n_clusters))
-    else:
-        bias_all = None
+    bias_all = _hetero_bias(tcfg, branching)
 
     def step_body(carry, h, cluster_idx, round_idx):
         # shared step so the plain and h-masked scans run the identical body
@@ -137,6 +152,79 @@ def make_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables,
     return inner_fn_h
 
 
+def make_pp_inner_fn(cfg: ModelConfig, tcfg: TrainConfig, data_tables,
+                     mesh, pcfg, h_vec=None):
+    """Pipeline-parallel counterpart of ``make_inner_fn``: the same
+    per-(cluster, round, step) PRNG data stream, but every inner step runs
+    through ``parallel.inner_engine.make_pp_train_step`` (the shard_map
+    GPipe loss on the unit mesh) instead of the single-replica loss, and
+    the clusters are UNROLLED python-side rather than vmapped — vmapping
+    would batch the pipeline matmuls into a different (~1 ulp) program
+    (see ``inner_engine.make_pp_inner_fns``).  Numerics vs the scalar
+    engine are tolerance-level, not bitwise (inner_engine module doc)."""
+    from repro.data.synthetic import _gen_batch
+    from repro.parallel import inner_engine as IE
+
+    branching = 4
+    bias_all = _hetero_bias(tcfg, branching)
+    train_step = IE.make_pp_train_step(cfg, mesh, pcfg,
+                                       inner_lr=tcfg.inner_lr)
+
+    def step_body(carry, h, cluster_idx, round_idx):
+        params, opt_state = carry
+        key = jax.random.fold_in(
+            jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(tcfg.seed + 7),
+                                   cluster_idx), round_idx), h)
+        toks = _gen_batch(key, tcfg.local_batch, tcfg.seq_len, branching,
+                          data_tables,
+                          None if bias_all is None
+                          else bias_all[cluster_idx])
+        params, opt_state, loss = train_step(params, opt_state, toks)
+        return (params, opt_state), loss
+
+    def one_cluster(params, opt_state, cluster_idx, round_idx):
+        step = lambda carry, h: step_body(carry, h, cluster_idx, round_idx)
+        (params, opt_state), losses = jax.lax.scan(
+            step, (params, opt_state), jnp.arange(tcfg.h_steps))
+        return params, opt_state, losses
+
+    def one_cluster_h(params, opt_state, cluster_idx, round_idx, h_c):
+        step = lambda carry, h: step_body(carry, h, cluster_idx, round_idx)
+        (params, opt_state), mean_loss = diloco.masked_local_steps(
+            step, (params, opt_state), tcfg.h_steps, h_c)
+        return params, opt_state, mean_loss
+
+    def _stack(trees):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    if h_vec is None:
+        def inner_fn(params, inner_opt_stacked, round_idx):
+            outs = [one_cluster(params,
+                                diloco.take_row(inner_opt_stacked, c),
+                                jnp.asarray(c, jnp.int32), round_idx)
+                    for c in range(tcfg.n_clusters)]
+            return (_stack([o[0] for o in outs]),
+                    _stack([o[1] for o in outs]),
+                    _stack([o[2] for o in outs]))
+
+        return inner_fn
+
+    h_list = [int(h) for h in h_vec]
+
+    def inner_fn_h(params, inner_opt_stacked, round_idx):
+        outs = [one_cluster_h(params,
+                              diloco.take_row(inner_opt_stacked, c),
+                              jnp.asarray(c, jnp.int32), round_idx,
+                              jnp.asarray(h_list[c], jnp.int32))
+                for c in range(tcfg.n_clusters)]
+        return (_stack([o[0] for o in outs]),
+                _stack([o[1] for o in outs]),
+                _stack([o[2] for o in outs]))
+
+    return inner_fn_h
+
+
 def cluster_mean(stacked_tree):
     return jax.tree.map(lambda x: x.mean(axis=0), stacked_tree)
 
@@ -158,8 +246,23 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
                         eval_every: int = 1) -> RunResult:
     """Full training run; returns per-round mean train loss + eval loss on a
     held-out stream + per-round wire bytes (feeds the throughput model)."""
+    if tcfg.inner_engine not in ("scalar", "pp"):
+        raise ValueError(f"inner_engine must be 'scalar' or 'pp', got "
+                         f"{tcfg.inner_engine!r}")
+    pp = tcfg.inner_engine == "pp"
     rng = jax.random.PRNGKey(tcfg.seed)
-    params = M.init_params(cfg, rng)
+    if pp:
+        if cfg.modality != "text":
+            raise ValueError("inner_engine='pp' supports text models only "
+                             "(the pipeline loss takes a token batch)")
+        from repro.parallel import inner_engine as IE
+        from repro.parallel import pipeline as PP
+        pcfg = PP.PipelineConfig(n_stages=tcfg.pp_stages,
+                                 n_micro=tcfg.pp_micro)
+        mesh = IE.unit_mesh(pcfg)      # raises if too few faked devices
+        params = PP.init_pp_params(cfg, rng, pcfg)
+    else:
+        params = M.init_params(cfg, rng)
     compressor = make_compressor(tcfg.compressor, **tcfg.compressor_kw)
 
     # per-cluster inner optimizer states (stacked)
@@ -201,15 +304,24 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
     # path); only a genuinely heterogeneous schedule pays the masked
     # program — the same dispatch rule the simulator backends apply
     uniform = h_by is None or all(h == tcfg.h_steps for h in h_by)
-    inner_fn = make_inner_fn(cfg, tcfg, data.table,
-                             h_vec=None if uniform else h_by)
+    if pp:
+        inner_fn = make_pp_inner_fn(cfg, tcfg, data.table, mesh, pcfg,
+                                    h_vec=None if uniform else h_by)
+    else:
+        inner_fn = make_inner_fn(cfg, tcfg, data.table,
+                                 h_vec=None if uniform else h_by)
 
     def _round(state, rank_scalar):
         return diloco.diloco_round(state, inner_fn, compressor,
                                    cluster_mean, rcfg, rank_scalar)
 
     round_jit = jax.jit(_round)
-    eval_jit = jax.jit(lambda p: M.loss_fn(p, cfg, eval_batch)[0])
+    if pp:
+        pp_eval_loss = PP.make_pp_loss(cfg, mesh, pcfg,
+                                       cluster_stacked=False)
+        eval_jit = jax.jit(lambda p: pp_eval_loss(p, eval_batch["tokens"]))
+    else:
+        eval_jit = jax.jit(lambda p: M.loss_fn(p, cfg, eval_batch)[0])
 
     ada_cfg = adaptive.AdaGradCmpConfig(
         r1=getattr(compressor, "rank", 64), h1=tcfg.h_steps,

@@ -1,6 +1,9 @@
 """Mode B shard_map pipeline: loss/grad equivalence with the sequential
-model. Runs in a subprocess so the 8 host devices don't leak into the main
-pytest process (which must keep 1 device per spec)."""
+model, parametrized over stage counts (1 = degenerate single-stage, 2, 4)
+crossed with uneven layer counts so the padded-slot path is exercised at
+every width: (1,3) lps=3 pad=0, (2,5) lps=3 pad=1, (4,6) lps=2 pad=2.
+Each combo runs in its own subprocess so the 8 host devices don't leak
+into the main pytest process (which must keep 1 device per spec)."""
 import os
 import subprocess
 import sys
@@ -11,17 +14,19 @@ import pytest
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    STAGES = int(os.environ["PP_STAGES"])
+    LAYERS = int(os.environ["PP_LAYERS"])
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs.base import get_config
     from repro.models import model as M
     from repro.parallel import pipeline as PP
 
-    # n_layers=5 with n_stages=2 exercises the padded-slot path (lps=3, pad=1)
     cfg = dataclasses.replace(get_config('granite-3-8b').reduced(),
-                              n_layers=5, vocab_size=128)
-    pcfg = PP.PipelineConfig(n_stages=2, n_micro=4)
-    mesh = jax.make_mesh((1, 2, 2), ("clusters", "data", "model"))
+                              n_layers=LAYERS, vocab_size=128)
+    pcfg = PP.PipelineConfig(n_stages=STAGES, n_micro=4)
+    lps, pad = PP.layers_per_stage(cfg, pcfg)
+    mesh = jax.make_mesh((1, 2, STAGES), ("clusters", "data", "model"))
 
     params = PP.init_pp_params(cfg, jax.random.PRNGKey(0), pcfg)
     paramsC = jax.tree.map(lambda x: x[None], params)
@@ -58,15 +63,19 @@ SCRIPT = textwrap.dedent("""
         errs[name] = float(jnp.abs(a - b).max())
     worst = max(errs.values())
     assert worst < 1e-3, errs
-    print("PIPELINE-EQUIV-OK", loss_pp, worst)
+    print(f"PIPELINE-EQUIV-OK stages={STAGES} layers={LAYERS} "
+          f"lps={lps} pad={pad} loss={loss_pp} worst_grad_err={worst}")
 """)
 
 
 @pytest.mark.slow
-def test_pipeline_matches_sequential():
+@pytest.mark.parametrize("stages,layers", [(1, 3), (2, 5), (4, 6)])
+def test_pipeline_matches_sequential(stages, layers):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PP_STAGES"] = str(stages)
+    env["PP_LAYERS"] = str(layers)
     r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
-    assert "PIPELINE-EQUIV-OK" in r.stdout
+    assert f"PIPELINE-EQUIV-OK stages={stages} layers={layers}" in r.stdout
