@@ -85,6 +85,52 @@ def build_rows(results: List[dict], h_steps: int = 125) -> List[dict]:
     return rows
 
 
+def outer_step_rows(rank: int = 2048, block: int = 256) -> List[dict]:
+    """Analytic fused-vs-unfused Alg. 1 outer-step compressor cost at the
+    full 107B-config matrix shapes (paper rank 2048), on the v5e roofline
+    constants above.
+
+    FLOPs are identical either way (3 rank-r projections + Cholesky-QR);
+    what fusion changes is HBM traffic.  Per-element passes over the
+    (m, n) matrix: the unfused chain pays ~11 (EF add read x2 + write,
+    three matmul reads of M, reconstruct write + read x2 for the EF
+    residual and the cast, residual/cast writes), the fused pipeline ~8
+    (each of the three kernels streams delta+e once, reconstruct and
+    residual never round-trip).  Factor traffic: ~7 (m+n) r unfused
+    (projection writes, orthonormalize, separate quantize+pack+unpack
+    passes) vs ~3 (m+n) r fused (pack in the projection flush, dequant
+    inside the reconstruct kernel).  Wire time is the int4+scales payload
+    at the paper's 1 Gbps inter-cluster link — the column that decides
+    whether the outer step stays wire-dominated (the overlap budget of
+    §2.3 only has to hide max(compute, wire))."""
+    shapes = [("attn_qkv_8192x8192", 8192, 8192),
+              ("mlp_up_8192x49152", 8192, 49152),
+              ("mlp_down_49152x8192", 49152, 8192)]
+    rows = []
+    for name, m, n in shapes:
+        r = min(rank, m, n)
+        flops = 6.0 * m * n * r + 4.0 * m * r * r + (4.0 / 3.0) * r ** 3
+        bytes_unfused = 4.0 * (11 * m * n + 7 * (m + n) * r)
+        bytes_fused = 4.0 * (8 * m * n + 3 * (m + n) * r)
+        t_unf = max(flops / PEAK_FLOPS, bytes_unfused / HBM_BW)
+        t_fus = max(flops / PEAK_FLOPS, bytes_fused / HBM_BW)
+        wire_bytes = (m + n) * r / 2 + math.ceil((m + n) * r / block) * 2
+        t_wire = wire_bytes / DCN_BW
+        rows.append({
+            "matrix": name, "m": m, "n": n, "rank": r,
+            "gflops": flops / 1e9,
+            "hbm_mb_unfused": bytes_unfused / 1e6,
+            "hbm_mb_fused": bytes_fused / 1e6,
+            "hbm_traffic_cut_x": bytes_unfused / bytes_fused,
+            "t_outer_unfused_s": t_unf,
+            "t_outer_fused_s": t_fus,
+            "t_wire_1gbps_s": t_wire,
+            "wire_dominated": t_wire > t_fus,
+            "outer_compute_frac_of_wire": t_fus / t_wire,
+        })
+    return rows
+
+
 def advice(row: dict) -> str:
     d = row.get("dominant")
     if d == "memory":

@@ -38,6 +38,10 @@ def main() -> None:
                          "tiny kernel timings, no training (implies "
                          "--skip-convergence)")
     ap.add_argument("--out-dir", default="benchmarks/out")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every section's metrics dict (plus "
+                         "the failure list) to PATH — the machine-readable "
+                         "artifact CI uploads as the perf trajectory")
     args = ap.parse_args()
     if args.smoke:
         args.skip_convergence = True
@@ -183,6 +187,18 @@ def main() -> None:
             raise AssertionError("straggler-h acceptance criteria failed")
     section("straggler_h", straggler_h_bench)
 
+    # analytic fused-vs-unfused outer-step compressor roofline (no inputs)
+    def roofline_outer() -> None:
+        from benchmarks import roofline
+        rows = roofline.outer_step_rows()
+        blobs["roofline_outer_step"] = rows
+        for row in rows:
+            print(f"roofline_outer.{row['matrix']}.hbm_cut,"
+                  f"{row['hbm_traffic_cut_x']:.2f},x_traffic")
+            print(f"roofline_outer.{row['matrix']}.wire_dominated,"
+                  f"{int(row['wire_dominated'])},bool")
+    section("roofline_outer_step", roofline_outer)
+
     # roofline (if the dry-run matrix has been produced)
     def roofline_rows() -> None:
         from benchmarks import roofline
@@ -196,6 +212,10 @@ def main() -> None:
 
     with open(os.path.join(args.out_dir, "results.json"), "w") as f:
         json.dump(blobs, f, indent=1, default=str)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"sections": blobs, "failures": failures},
+                      f, indent=1, default=str)
     if failures:
         print(f"benchmarks.done,0,bool  # FAILED: {', '.join(failures)}")
         sys.exit(1)

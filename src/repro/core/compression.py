@@ -177,6 +177,22 @@ class LowRankQuant(Compressor):
     block: int = 256
     min_dim_for_lowrank: int = 64  # small tensors skip the low-rank stage
     name: str = "diloco_x"
+    # "ref": the unfused jnp op-chain below.  "pallas": the fused
+    # compress+EF kernel pipeline (kernels/fused_compress.py, interpret
+    # mode on CPU) — same wire format bit-for-bit, reconstruction within a
+    # documented reorder-ulp bound of the ref chain, identical adaptive-
+    # rank masking contract.  Threaded through ``per_cluster_compress``
+    # unchanged (the backend only changes what ``roundtrip`` dispatches
+    # to); the proc/in-process equivalence gates stay bitwise per backend.
+    backend: str = "ref"
+
+    def __post_init__(self):
+        if self.backend not in ("ref", "pallas"):
+            raise ValueError(f"backend must be 'ref' or 'pallas', "
+                             f"got {self.backend!r}")
+        if self.backend == "pallas" and self.bits != 4:
+            raise ValueError("the pallas backend implements the int4 wire "
+                             f"format (bits=4); got bits={self.bits}")
 
     def init_state(self, params) -> Any:
         """Warm-start Q per matrix-shaped param (PowerSGD memory)."""
@@ -189,10 +205,35 @@ class LowRankQuant(Compressor):
             return jax.random.normal(key, (n, r), jnp.float32)
         return jax.tree.map(mk, params)
 
+    def _quant_only_pallas(self, x):
+        """quantize_sim via the quant4 pallas kernels. Same elementwise f32
+        op sequence; under jit both paths are bitwise equal. (Eagerly,
+        quantize_sim's `amax / 7.0` is an exact IEEE divide while the
+        interpreted kernel — always jitted — gets XLA's divide-by-constant
+        → reciprocal-multiply rewrite, so scales can differ by 1 ulp.)"""
+        from repro.kernels.quant4 import (quant4_pack_pallas,
+                                          quant4_unpack_pallas)
+        flat = x.reshape(-1).astype(jnp.float32)
+        rows = -(-flat.size // self.block)
+        p, s = quant4_pack_pallas(flat, self.block,
+                                  rows_per_tile=min(rows, 1024))
+        out = quant4_unpack_pallas(p, s, flat.size, self.block,
+                                   rows_per_tile=min(rows, 1024))
+        return out.reshape(x.shape).astype(x.dtype)
+
     def _one(self, x, q_prev, rank_scalar):
         m, n = matrix_shape(x.shape)
         if q_prev.size == 0:     # quant-only path for small/1-D tensors
+            if self.backend == "pallas":
+                return self._quant_only_pallas(x), q_prev
             return quantize_sim(x, self.bits, self.block), q_prev
+        if self.backend == "pallas":
+            from repro.kernels.fused_compress import fused_compress_ef
+            M = to_matrix(x).astype(jnp.float32)
+            hat, _, q_new, _ = fused_compress_ef(
+                M, None, q_prev, rank_scalar, block=self.block,
+                compute_error=False)
+            return hat.reshape(x.shape).astype(x.dtype), q_new
         M = to_matrix(x).astype(jnp.float32)
         r = q_prev.shape[1]
         # rank mask: columns >= r_t contribute nothing (adaptive rank)

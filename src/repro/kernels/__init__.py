@@ -1,3 +1,33 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the compute hot-spots DiLoCoX actually optimizes.
+
+Modules
+-------
+- ``lowrank_mm.py`` / ``quant4.py`` / ``flash.py``: single-op kernels
+  (PowerSGD projections, block-256 symmetric int4 pack/unpack, flash
+  attention) with eager references in ``ref.py``.
+- ``fused_compress.py``: the fused Alg. 1+2 outer-step pipeline —
+  one pass computes the EF-corrected delta (δ + e), its rank-r PowerSGD
+  projection with f32 VMEM accumulation, block-wise int4 quantize+pack
+  of both factors, and the *new* EF residual e' = (δ + e) − decompress,
+  plus the decompress dual for the receive side.  The unfused oracle
+  chain is ``ref.outer_step_ref``; ``ops.fused_outer_step`` dispatches
+  between them on ``REPRO_USE_PALLAS=1``.
+
+Adaptive-rank contract (jit shape stability)
+--------------------------------------------
+All rank-r entry points accept a traced ``rank_scalar`` r_t ≤ r_max and
+keep every output at the static r_max shape, with columns ≥ r_t masked
+to exactly zero (factors, warm-start Q, packed payload codes).  One
+compiled executable therefore serves the whole Alg. 3 rank schedule.
+
+Interpret mode vs real TPU
+--------------------------
+This repo runs the kernels in Pallas interpret mode on CPU, where each
+grid step pays a Python-level tile copy — so the CPU lane favors
+single-tile (full-matrix) grids and hoists the EF add into the driver.
+On hardware the trade-offs invert (HBM traffic dominates, VMEM tiling
+binds): keep the kernels' ``with_e`` fused path and real tile grids.
+Per-module docstrings carry the specific caveats; numeric gates live in
+``tests/test_kernels.py`` (bit-identical packing vs ``quant4_pack_ref``,
+ulp-bounded reconstruction, exact decompress dual).
+"""

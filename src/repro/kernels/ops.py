@@ -49,6 +49,24 @@ def quant_dequant(x: jnp.ndarray, block: int = 256) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# fused outer-step compressor (EF add + PowerSGD + quant4 pack + recon + EF)
+# ---------------------------------------------------------------------------
+
+def fused_outer_step(delta, error, q_prev, rank_scalar=None,
+                     block: int = 256):
+    """One parameter matrix's full outer-step compression: returns
+    ``(delta_hat, e_new, q_new, payload)`` — the fused Pallas pipeline
+    under REPRO_USE_PALLAS=1, the unfused jnp op-chain otherwise.  Same
+    wire bytes either way; reconstruction agrees within the reorder-ulp
+    bound gated in tests/test_kernels.py."""
+    if _use_pallas():
+        from repro.kernels.fused_compress import fused_compress_ef
+        return fused_compress_ef(delta, error, q_prev, rank_scalar,
+                                 block=block)
+    return ref.outer_step_ref(delta, error, q_prev, rank_scalar, block)
+
+
+# ---------------------------------------------------------------------------
 # matmul (PowerSGD projection hot spot)
 # ---------------------------------------------------------------------------
 

@@ -8,6 +8,8 @@ Numerics match core.compression.quantize_sim exactly.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -55,6 +57,59 @@ def quant4_roundtrip_ref(x: jnp.ndarray, block: int = 256) -> jnp.ndarray:
 
 def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return (a.astype(jnp.float32) @ b.astype(jnp.float32)).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused outer-step compressor (kernels/fused_compress.py) — unfused oracle
+# ---------------------------------------------------------------------------
+
+class FusedPayload(NamedTuple):
+    """Wire payload of one compressed parameter matrix: packed int4 factor
+    codes + per-block scales, in ``quant4_pack_ref``'s flat row-major
+    layout.  ``p_factor``/``q_factor`` are the *pre-quantization* f32
+    factors (warm-start/audit fields — they never go on the wire; the
+    tests ref-pack them to assert the in-kernel pack is bit-identical)."""
+    packed_p: jnp.ndarray     # uint8 (ceil(m*r/block) * block//2,)
+    scales_p: jnp.ndarray     # f32   (ceil(m*r/block),)
+    packed_q: jnp.ndarray     # uint8 (ceil(n*r/block) * block//2,)
+    scales_q: jnp.ndarray     # f32   (ceil(n*r/block),)
+    p_factor: jnp.ndarray     # f32 (m, r)
+    q_factor: jnp.ndarray     # f32 (n, r)
+
+
+def outer_step_ref(delta: jnp.ndarray, error, q_prev: jnp.ndarray,
+                   rank_scalar=None, block: int = 256):
+    """The unfused op-chain the fused Pallas pipeline replaces, one XLA op
+    per arrow: EF add -> P = M Qm -> Cholesky-QR -> Q = M^T P -> quantize
+    factors -> pack (wire) -> reconstruct -> EF residual.  Numerics match
+    ``core.compression.LowRankQuant`` (``quantize_sim`` and
+    ``quant4_pack_ref`` compute identical values) — this is both the
+    correctness oracle for ``fused_compress_ef`` and the "before" side of
+    the outer-step benchmark.  Returns (delta_hat, e_new, q_new, payload).
+    """
+    from repro.core.compression import _orthonormalize
+    m, n = delta.shape
+    r = q_prev.shape[1]
+    M = delta.astype(jnp.float32)
+    if error is not None:
+        M = M + error.astype(jnp.float32)
+    if rank_scalar is not None:
+        cm = (jnp.arange(r) < rank_scalar).astype(jnp.float32)
+    else:
+        cm = jnp.ones((r,), jnp.float32)
+    qm = q_prev.astype(jnp.float32) * cm
+    P = M @ qm
+    P = _orthonormalize(P) * cm
+    Q = M.T @ P
+    pP, sP, _ = quant4_pack_ref(P.reshape(-1), block)
+    pQ, sQ, _ = quant4_pack_ref(Q.reshape(-1), block)
+    Pq = quant4_unpack_ref(pP, sP, m * r, block).reshape(m, r)
+    Qq = quant4_unpack_ref(pQ, sQ, n * r, block).reshape(n, r)
+    rec = Pq @ Qq.T
+    delta_hat = rec.astype(delta.dtype)
+    e_new = M - rec
+    q_new = jnp.where(jnp.sum(Q * Q) > 0, Q, qm)
+    return delta_hat, e_new, q_new, FusedPayload(pP, sP, pQ, sQ, P, Q)
 
 
 # ---------------------------------------------------------------------------

@@ -124,3 +124,184 @@ def test_flash_attention_long_block_sweep():
         out = flash_attention_pallas(q, k, v, bq=bq, bk=bk)
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                    rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused outer-step compressor (kernels/fused_compress.py)
+# ---------------------------------------------------------------------------
+
+# Documented ulp bound for the fused reconstruct vs the oracle recon from
+# the SAME payload: the only numeric freedom is matmul accumulation order,
+# so |fused - oracle| <= ULP_K * eps * (|Pq| @ |Qq|^T) elementwise.
+# ULP_K = 16 is generous (measured 0-2 ulp on CPU) to stay stable across
+# both CI jax versions.
+ULP_K = 16
+
+
+def _fused_case(m, n, r, rt, dtype=jnp.float32, row_cap=2048):
+    from repro.kernels.fused_compress import fused_compress_ef
+
+    d = (jax.random.normal(jax.random.PRNGKey(0), (m, n)) * 0.3).astype(dtype)
+    e = jax.random.normal(jax.random.PRNGKey(1), (m, n)) * 0.05
+    q = jax.random.normal(jax.random.PRNGKey(2), (n, r))
+    rs = None if rt is None else jnp.int32(rt)
+    hat, e_new, q_new, pay = jax.jit(
+        lambda d_, e_, q_: fused_compress_ef(d_, e_, q_, rs,
+                                             row_cap=row_cap))(d, e, q)
+    return d, e, q, hat, e_new, q_new, pay
+
+
+def _assert_fused_contract(m, n, r, rt, d, e, hat, e_new, q_new, pay):
+    """The full fused-kernel contract: wire bytes bit-identical to the ref
+    packer, recon/EF within the ulp bound of the payload's own oracle
+    recon, decompress dual exact, adaptive-rank columns exactly zero."""
+    from repro.kernels.fused_compress import fused_decompress
+
+    # 1) pack bytes bit-identical to ref.quant4_pack_ref on the factors
+    pP, sP, _ = ref.quant4_pack_ref(np.asarray(pay.p_factor).reshape(-1))
+    pQ, sQ, _ = ref.quant4_pack_ref(np.asarray(pay.q_factor).reshape(-1))
+    np.testing.assert_array_equal(np.asarray(pay.packed_p), np.asarray(pP))
+    np.testing.assert_array_equal(np.asarray(pay.packed_q), np.asarray(pQ))
+    np.testing.assert_allclose(np.asarray(pay.scales_p), np.asarray(sP),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(pay.scales_q), np.asarray(sQ),
+                               rtol=1e-6)
+
+    # 2) recon within the documented ulp bound of the payload's oracle
+    Pq = np.asarray(ref.quant4_unpack_ref(
+        pay.packed_p, pay.scales_p, m * r)).reshape(m, r)
+    Qq = np.asarray(ref.quant4_unpack_ref(
+        pay.packed_q, pay.scales_q, n * r)).reshape(n, r)
+    oracle = Pq @ Qq.T
+    bound = ULP_K * np.finfo(np.float32).eps * (np.abs(Pq) @ np.abs(Qq).T)
+    gap = np.abs(np.asarray(hat, np.float32) - oracle)
+    if hat.dtype == jnp.bfloat16:       # cast after recon adds a bf16 ulp
+        bound = bound + 0.008 * np.abs(oracle) + 1e-6
+    assert np.all(gap <= bound + 1e-30), \
+        f"recon gap {gap.max()} exceeds ulp bound {bound.max()}"
+
+    # 3) EF residual: e' = (delta + e) - recon (f32 chain)
+    M = np.asarray(d, np.float32) + np.asarray(e, np.float32)
+    assert e_new.dtype == jnp.float32 and e_new.shape == (m, n)
+    ef_gap = np.abs(np.asarray(e_new) - (M - oracle))
+    assert np.all(ef_gap <= bound + 2e-6 * np.abs(M) + 1e-6)
+
+    # 4) decompress dual reproduces the forward kernel's recon exactly
+    dec = fused_decompress(pay.packed_p, pay.scales_p, pay.packed_q,
+                           pay.scales_q, m, n, r,
+                           out_dtype=hat.dtype)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(hat))
+
+    # 5) adaptive rank: masked columns are exactly zero end to end
+    if rt is not None:
+        assert not np.asarray(pay.p_factor)[:, rt:].any()
+        assert not np.asarray(pay.q_factor)[:, rt:].any()
+        assert not np.asarray(q_new)[:, rt:].any()
+
+
+def test_fused_compress_smoke():
+    """Fast tier-1 gate: one small aligned case end to end."""
+    m, n, r, rt = 64, 48, 8, None
+    d, e, q, hat, e_new, q_new, pay = _fused_case(m, n, r, rt)
+    _assert_fused_contract(m, n, r, rt, d, e, hat, e_new, q_new, pay)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("m,n,r,rt", [
+    (256, 256, 32, None),     # tile-aligned
+    (257, 129, 8, 5),         # non-tile-multiple rows+cols, adaptive rank
+    (128, 128, 64, 32),       # r = half masked
+    (33, 500, 12, 7),         # wide, blocks straddle row boundaries
+    (300, 200, 16, None),     # padded both dims
+    (2048, 512, 64, 48),      # multi-tile rows at default row_cap
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_compress_shapes_dtypes(m, n, r, rt, dtype):
+    d, e, q, hat, e_new, q_new, pay = _fused_case(m, n, r, rt, dtype)
+    _assert_fused_contract(m, n, r, rt, d, e, hat, e_new, q_new, pay)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("row_cap", [128, 512])
+def test_fused_compress_small_tiles(row_cap):
+    """The multi-grid-step path (k-loop accumulation + tile-boundary
+    packing) must honor the same contract as single-tile grids."""
+    m, n, r, rt = 384, 320, 16, 10
+    d, e, q, hat, e_new, q_new, pay = _fused_case(m, n, r, rt,
+                                                  row_cap=row_cap)
+    _assert_fused_contract(m, n, r, rt, d, e, hat, e_new, q_new, pay)
+
+
+@pytest.mark.slow
+def test_fused_vs_ref_chain():
+    """Chain-vs-chain: the fused pipeline against the independently-run
+    unfused ref op-chain.  Scales can differ by 1 ulp between the two
+    (XLA's divide-by-constant rewrite), which near a rounding tie can
+    flip a single int4 code — so the bound allows one code step per
+    factor on top of the reorder ulp bound."""
+    from repro.kernels.fused_compress import fused_compress_ef
+
+    for m, n, r, rt in [(128, 96, 16, None), (200, 333, 8, 6)]:
+        d = jax.random.normal(jax.random.PRNGKey(3), (m, n)) * 0.3
+        e = jax.random.normal(jax.random.PRNGKey(4), (m, n)) * 0.05
+        q = jax.random.normal(jax.random.PRNGKey(5), (n, r))
+        rs = None if rt is None else jnp.int32(rt)
+        hat_f, e_f, qn_f, pay_f = jax.jit(lambda a, b, c: fused_compress_ef(
+            a, b, c, rs))(d, e, q)
+        hat_r, e_r, qn_r, pay_r = jax.jit(lambda a, b, c: ref.outer_step_ref(
+            a, b, c, rs))(d, e, q)
+        sP = np.asarray(pay_r.scales_p).max()
+        sQ = np.asarray(pay_r.scales_q).max()
+        Pq = np.abs(np.asarray(pay_r.p_factor)).max()
+        Qq = np.abs(np.asarray(pay_r.q_factor)).max()
+        atol = sP * Qq + sQ * Pq            # one int4 step per factor
+        np.testing.assert_allclose(np.asarray(hat_f), np.asarray(hat_r),
+                                   rtol=0, atol=atol)
+        np.testing.assert_allclose(np.asarray(qn_f), np.asarray(qn_r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_fused_rank_scalar_traced():
+    """jit-shape-stable adaptive rank: ONE compiled function serves every
+    r_t; masked columns stay exactly zero and smaller r_t reconstructs
+    strictly less energy."""
+    from repro.kernels.fused_compress import fused_compress_ef
+
+    m, n, r = 96, 128, 16
+    d = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    e = jnp.zeros((m, n))
+    q = jax.random.normal(jax.random.PRNGKey(2), (n, r))
+    fn = jax.jit(lambda d_, e_, q_, rt: fused_compress_ef(d_, e_, q_, rt))
+    norms = []
+    for rt in (16, 8, 4):
+        hat, _, q_new, pay = fn(d, e, q, jnp.int32(rt))
+        assert hat.shape == (m, n) and q_new.shape == (n, r)
+        if rt < r:
+            assert not np.asarray(pay.q_factor)[:, rt:].any()
+        norms.append(float(jnp.linalg.norm(hat)))
+    assert norms[0] > norms[1] > norms[2] > 0
+
+
+def test_fused_ops_dispatch(monkeypatch):
+    """kernels.ops.fused_outer_step routes by REPRO_USE_PALLAS and both
+    routes satisfy the same contract."""
+    from repro.kernels import ops
+
+    m, n, r = 48, 64, 8
+    d = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    e = jax.random.normal(jax.random.PRNGKey(1), (m, n)) * 0.1
+    q = jax.random.normal(jax.random.PRNGKey(2), (n, r))
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    hat_r, e_r, qn_r, pay_r = ops.fused_outer_step(d, e, q)
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    hat_p, e_p, qn_p, pay_p = ops.fused_outer_step(d, e, q)
+    assert hat_r.shape == hat_p.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(pay_p.packed_p),
+                                  np.asarray(ref.quant4_pack_ref(
+                                      np.asarray(pay_p.p_factor).reshape(-1)
+                                  )[0]))
+    np.testing.assert_allclose(np.asarray(hat_p), np.asarray(hat_r),
+                               rtol=0, atol=0.3)
+    np.testing.assert_allclose(np.asarray(qn_p), np.asarray(qn_r),
+                               rtol=1e-5, atol=1e-5)

@@ -498,3 +498,44 @@ def test_proc_pp_numeric_bitwise_equivalence():
                        capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
     assert "PP-PROC-EQUIV-OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# pallas compressor backend: its own equivalence leg (the ref backend's
+# bitwise gates above are untouched — backend selection rides the same
+# compressor_kw JSON that already flows coordinator -> worker)
+# ---------------------------------------------------------------------------
+
+def test_inprocess_pallas_backend_deterministic():
+    """Fast leg: the in-process simulator with backend="pallas" is
+    run-to-run deterministic (same losses bitwise) and actually trains."""
+    sc = proc_scenario(
+        n_clusters=2, rounds=4, h_steps=3, t_step_s=0.02,
+        compressor_kw={"rank": 8, "min_dim_for_lowrank": 8,
+                       "backend": "pallas"})
+    spec = QuadraticSpec(n_clusters=2, d=8, n_mats=2, h_steps=3, seed=0)
+    tl1 = simulate(sc, numeric=spec.problem())
+    tl2 = simulate(sc, numeric=spec.problem())
+    l1, l2 = tl1.losses(), tl2.losses()
+    assert l1 == l2                          # bitwise-identical trajectory
+    assert l1[-1] < l1[0]                    # it actually trains
+
+
+@pytest.mark.slow
+def test_proc_pallas_backend_bitwise_equivalence():
+    """Slow leg: proc workers running the fused pallas compressor match
+    the in-process simulator bit-for-bit — the same guarantee the ref
+    backend has, per backend (pallas vs pallas; cross-backend agreement
+    is gated separately in tests/test_compression.py)."""
+    sc = proc_scenario(
+        n_clusters=2, rounds=5, h_steps=4, t_step_s=0.04,
+        compressor_kw={"rank": 8, "min_dim_for_lowrank": 8,
+                       "backend": "pallas"},
+        n_params=2e5)
+    spec = QuadraticSpec(n_clusters=2, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep
+    assert rep["structural_match"] and rep["timing_ok"], rep
+    assert rep["final_params_bitwise_equal"]
+    losses = rep["timelines"]["proc"].losses()
+    assert losses[-1] < losses[0]
