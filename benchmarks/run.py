@@ -216,6 +216,20 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump({"sections": blobs, "failures": failures},
                       f, indent=1, default=str)
+
+    # Prometheus text exposition of every numeric leaf (same flattening
+    # the trajectory diff uses), for scraping benchmark history into a
+    # dashboard without parsing the nested JSON
+    import re
+    from benchmarks.trajectory import flatten
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()
+    for path, value in sorted(flatten(blobs).items()):
+        name = "bench_" + re.sub(r"[^a-zA-Z0-9_]", "_", path)
+        reg.gauge(name, help=f"benchmark leaf {path}").set(value)
+    reg.gauge("bench_failures",
+              help="benchmark sections that raised").set(len(failures))
+    reg.write_prometheus(os.path.join(args.out_dir, "results.prom"))
     if failures:
         print(f"benchmarks.done,0,bool  # FAILED: {', '.join(failures)}")
         sys.exit(1)

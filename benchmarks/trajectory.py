@@ -1,0 +1,153 @@
+"""Benchmark trajectory diff: current run vs the previous artifact.
+
+  python -m benchmarks.trajectory CURRENT.json PREVIOUS.json \
+      [--threshold 2.0] [--warn-only]
+
+Both files are ``benchmarks/run.py --json`` artifacts
+(``{"sections": {...}, "failures": [...]}``), but the loader is
+schema-tolerant: a file without a ``sections`` key is flattened whole, so
+older artifacts (or hand-made baselines) still diff.  Every numeric leaf
+becomes a dotted path (``fig4_opt-1.3b.methods.diloco_x.tokens_per_s``)
+and matching paths are compared as a ratio.
+
+Regression heuristic: a leaf regresses when it moves by more than
+``--threshold``x in EITHER direction (default 2x).  Benchmarks mix
+higher-is-better (tokens/s) and lower-is-better (loss, µs/call) metrics
+and this tool doesn't know which is which, so any 2x jump — up or down —
+is worth a human look; that is deliberately a tripwire, not a verdict.
+Leaves present on only one side are listed but never fail the run (the
+benchmark set grows PR over PR).
+
+Exit status: 1 when any leaf regresses, unless ``--warn-only`` (the CI
+mode — artifact retention makes the previous file best-effort, so the
+step must not gate merges on its availability).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+# ratios are meaningless next to zero; leaves smaller than this are
+# compared by absolute difference against the same threshold instead
+_EPS = 1e-12
+
+
+def flatten(doc: Any, prefix: str = "") -> Dict[str, float]:
+    """Numeric leaves of a nested dict/list as {dotted.path: float}.
+    Bools are skipped (they're pass/fail flags, not magnitudes); list
+    elements use their index as the path segment."""
+    out: Dict[str, float] = {}
+    if isinstance(doc, bool):
+        return out
+    if isinstance(doc, (int, float)):
+        out[prefix or "value"] = float(doc)
+        return out
+    if isinstance(doc, dict):
+        items = [(str(k), v) for k, v in doc.items()]
+    elif isinstance(doc, list):
+        items = [(str(i), v) for i, v in enumerate(doc)]
+    else:
+        return out
+    for k, v in items:
+        path = f"{prefix}.{k}" if prefix else k
+        out.update(flatten(v, path))
+    return out
+
+
+def load_metrics(path: str) -> Dict[str, float]:
+    """Flatten a run.py artifact; tolerate both the ``{"sections": ...}``
+    wrapper and a bare metrics document."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict) and isinstance(doc.get("sections"), dict):
+        doc = doc["sections"]
+    return flatten(doc)
+
+
+def compare(current: Dict[str, float], previous: Dict[str, float],
+            threshold: float = 2.0) -> Dict[str, Any]:
+    """Diff two flattened metric maps.
+
+    Returns ``{"rows": [(path, prev, cur, factor, regressed)],
+    "regressions": [...], "only_current": [...], "only_previous": [...]}``
+    with rows sorted by severity (largest factor first)."""
+    rows: List[Tuple[str, float, float, float, bool]] = []
+    for path in sorted(set(current) & set(previous)):
+        prev, cur = previous[path], current[path]
+        if abs(prev) < _EPS or abs(cur) < _EPS:
+            # near-zero side: ratio blows up on noise — compare absolutely
+            factor = 1.0 if abs(cur - prev) < threshold else float("inf")
+        else:
+            factor = max(abs(cur / prev), abs(prev / cur))
+        regressed = factor > threshold or (cur * prev < 0)
+        rows.append((path, prev, cur, factor, regressed))
+    rows.sort(key=lambda r: (-r[3], r[0]))
+    return {
+        "rows": rows,
+        "regressions": [r for r in rows if r[4]],
+        "only_current": sorted(set(current) - set(previous)),
+        "only_previous": sorted(set(previous) - set(current)),
+    }
+
+
+def format_table(diff: Dict[str, Any], max_rows: int = 40) -> str:
+    lines = [f"{'metric':58s} {'previous':>12s} {'current':>12s} "
+             f"{'factor':>8s}"]
+    for path, prev, cur, factor, regressed in diff["rows"][:max_rows]:
+        mark = "  <-- REGRESSION" if regressed else ""
+        fstr = "inf" if factor == float("inf") else f"{factor:.2f}x"
+        lines.append(f"{path[:58]:58s} {prev:12.4g} {cur:12.4g} "
+                     f"{fstr:>8s}{mark}")
+    hidden = len(diff["rows"]) - max_rows
+    if hidden > 0:
+        lines.append(f"... {hidden} more leaves within threshold")
+    for key, label in (("only_current", "new"), ("only_previous", "gone")):
+        if diff[key]:
+            lines.append(f"{label} ({len(diff[key])}): "
+                         + ", ".join(diff[key][:8])
+                         + (" ..." if len(diff[key]) > 8 else ""))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="diff two benchmark artifacts; exit 1 on >threshold "
+                    "regressions")
+    ap.add_argument("current", help="this run's --json artifact")
+    ap.add_argument("previous", help="the prior run's artifact")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="flag leaves that moved more than THIS x either "
+                         "way (default 2.0)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but always exit 0 (CI mode)")
+    args = ap.parse_args(argv)
+
+    try:
+        current = load_metrics(args.current)
+    except (OSError, ValueError) as e:
+        print(f"trajectory: cannot read current artifact: {e}",
+              file=sys.stderr)
+        sys.exit(0 if args.warn_only else 2)
+    try:
+        previous = load_metrics(args.previous)
+    except (OSError, ValueError) as e:
+        # no baseline is the common cold-start case — never an error
+        print(f"trajectory: no previous artifact ({e}); nothing to diff")
+        sys.exit(0)
+
+    diff = compare(current, previous, threshold=args.threshold)
+    print(format_table(diff))
+    n = len(diff["regressions"])
+    if n:
+        print(f"trajectory: {n} leaves moved >"
+              f"{args.threshold}x vs previous run"
+              + (" (warn-only)" if args.warn_only else ""))
+        sys.exit(0 if args.warn_only else 1)
+    print(f"trajectory: ok ({len(diff['rows'])} shared leaves within "
+          f"{args.threshold}x)")
+
+
+if __name__ == "__main__":
+    main()

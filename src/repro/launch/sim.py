@@ -102,12 +102,49 @@ def parse_faults(args, ap):
     return FaultSchedule(tuple(ev))
 
 
+def emit_obs(args, tl, modeled=None) -> None:
+    """Overlap-ledger summary + optional trace / metrics exports for a
+    finished run (either backend).  Strictly read-only consumers of the
+    timeline — nothing here can perturb the round math."""
+    from repro.obs import (MetricsRegistry, OverlapLedger, get_logger,
+                           ledger as obs_ledger, trace as obs_trace)
+    log = get_logger("launch.sim")
+
+    led = OverlapLedger.from_timeline(tl)
+    log.info(led.summary(), **led.to_dict()["summary"])
+    if modeled is not None:
+        d = obs_ledger.drift(tl, modeled)
+        log.info(f"modeled-vs-measured drift: {d['final_drift_s']:+.3f}s "
+                 f"({100 * d['final_drift_frac']:+.1f}%) over "
+                 f"{len(d['per_round_s'])} rounds",
+                 final_drift_s=d["final_drift_s"],
+                 final_drift_frac=d["final_drift_frac"],
+                 cumulative_s=d["cumulative_s"])
+    if args.trace:
+        trace = obs_trace.timeline_trace(tl)
+        errs = obs_trace.validate_chrome_trace(trace)
+        if errs:    # the exporter must never emit an invalid trace
+            log.warning(f"trace failed its own schema check: {errs[:3]}")
+        obs_trace.save(trace, args.trace)
+        log.info(f"wrote {args.trace} (trace fingerprint "
+                 f"{obs_trace.trace_fingerprint(trace)[:16]})")
+    if args.metrics_out:
+        reg = MetricsRegistry(run_meta=tl.scenario)
+        reg.observe_timeline(tl)
+        reg.write_jsonl(args.metrics_out + ".jsonl")
+        reg.write_prometheus(args.metrics_out + ".prom")
+        log.info(f"wrote {args.metrics_out}.jsonl and "
+                 f"{args.metrics_out}.prom")
+
+
 def run_proc_cli(args, sc) -> None:
     """Drive the multi-process backend (real sockets, token-bucket links)."""
+    from repro.obs import get_logger
     from repro.sim import QuadraticSpec
     from repro.sim.proc import check_equivalence, run_proc
     from repro.sim.proc.equivalence import format_report
 
+    log = get_logger("launch.sim")
     spec = None
     if not args.timing_only:
         spec = QuadraticSpec(n_clusters=args.clusters, d=args.problem_d,
@@ -115,28 +152,32 @@ def run_proc_cli(args, sc) -> None:
 
     if args.check_equivalence:
         report = check_equivalence(sc, spec)
-        print(format_report(report))
+        log.info(format_report(report))
         timelines = report.pop("timelines")
-        print("proc structural fingerprint: "
-              f"{report['proc_fingerprint']}")
+        emit_obs(args, timelines["proc"], modeled=timelines["model"])
+        log.info("proc structural fingerprint: "
+                 f"{report['proc_fingerprint']}",
+                 fingerprint=report["proc_fingerprint"])
         if args.json:
             blob = {"report": report,
                     "proc": timelines["proc"].to_dict(),
                     "model": timelines["model"].to_dict()}
             with open(args.json, "w") as f:
                 json.dump(blob, f, indent=1)
-            print(f"wrote {args.json}")
+            log.info(f"wrote {args.json}")
         if not report["ok"]:
             sys.exit(1)
         return
 
     tl = run_proc(sc, spec)
-    print(tl.table())
-    print(f"proc structural fingerprint: {tl.structural_fingerprint()}")
+    log.info(tl.table())
+    emit_obs(args, tl)
+    log.info(f"proc structural fingerprint: {tl.structural_fingerprint()}",
+             fingerprint=tl.structural_fingerprint())
     if args.json:
         with open(args.json, "w") as f:
             json.dump(tl.to_dict(), f, indent=1)
-        print(f"wrote {args.json}")
+        log.info(f"wrote {args.json}")
 
 
 def main() -> None:
@@ -229,10 +270,30 @@ def main() -> None:
                     help="run the Fig. 4 method comparison on this scenario")
     ap.add_argument("--json", default="",
                     help="also dump the timeline JSON to this path")
+    ap.add_argument("--trace", default="",
+                    help="write the per-round phase spans as Chrome-trace-"
+                         "event JSON (load in chrome://tracing or "
+                         "ui.perfetto.dev); modeled spans on the model "
+                         "backend, measured wall clock on proc")
+    ap.add_argument("--metrics-out", default="",
+                    help="metrics export prefix: writes PREFIX.jsonl (one "
+                         "record per round) and PREFIX.prom (Prometheus "
+                         "text exposition)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="also emit machine-readable JSON log lines on "
+                         "stderr (stdout output is unchanged)")
     args = ap.parse_args()
     for k, v in _DEFAULTS[args.backend].items():
         if getattr(args, k) is None:
             setattr(args, k, v)
+
+    # human-readable lines go to stdout exactly as the old print()s did
+    # (CI greps the fingerprint line there); --log-json adds structured
+    # JSON records on stderr
+    from repro.obs import configure_logging, get_logger
+    configure_logging(stream=sys.stdout,
+                      json_stream=(sys.stderr if args.log_json else None))
+    log = get_logger("launch.sim")
 
     from repro.sim import (FaultSchedule, Join, Leave, LinkProfile,
                            Scenario, Straggler, compare_methods,
@@ -246,9 +307,9 @@ def main() -> None:
         faults = FaultSchedule((
             Straggler(1, 1, min(3, args.rounds - 1), 2.5),
             Leave(1, args.rounds // 2), Join(1, args.rounds - 1)))
-        print(f"(no fault flags: demo faults "
-              f"{[e.describe() for e in faults.events]}; --no-faults to "
-              f"disable)")
+        log.info(f"(no fault flags: demo faults "
+                 f"{[e.describe() for e in faults.events]}; --no-faults to "
+                 f"disable)")
 
     adaptive_spec = None
     if args.adaptive != "off":
@@ -261,8 +322,8 @@ def main() -> None:
             r1=args.rank, h1=args.h_steps, r_min=args.adaptive_rmin)
         if (args.backend == "model" and adaptive_spec.needs_spectral
                 and not args.numeric):
-            print(f"(--adaptive {args.adaptive} needs the realized "
-                  "pseudo-gradient spectrum: enabling --numeric)")
+            log.info(f"(--adaptive {args.adaptive} needs the realized "
+                     "pseudo-gradient spectrum: enabling --numeric)")
             args.numeric = True
         if (args.backend == "proc" and adaptive_spec.needs_spectral
                 and args.timing_only):
@@ -314,15 +375,18 @@ def main() -> None:
                      "use benchmarks/gossip_vs_gather.py for the "
                      "gossip-vs-gather comparison")
         cmp = compare_methods(sc, rank=args.rank)
-        print(f"{'method':>12} {'tokens_per_s':>14} {'x_vs_allreduce':>15}")
+        log.info(f"{'method':>12} {'tokens_per_s':>14} "
+                 f"{'x_vs_allreduce':>15}")
         for name, tps in cmp["tokens_per_s"].items():
-            print(f"{name:>12} {tps:>14.1f} "
-                  f"{cmp['speedup_vs_allreduce'][name]:>15.1f}")
+            log.info(f"{name:>12} {tps:>14.1f} "
+                     f"{cmp['speedup_vs_allreduce'][name]:>15.1f}",
+                     method=name, tokens_per_s=tps,
+                     x_vs_allreduce=cmp["speedup_vs_allreduce"][name])
         if args.json:
             blob = {k: tl.to_dict() for k, tl in cmp["timelines"].items()}
             with open(args.json, "w") as f:
                 json.dump(blob, f, indent=1)
-            print(f"wrote {args.json}")
+            log.info(f"wrote {args.json}")
         return
 
     numeric = None
@@ -331,12 +395,14 @@ def main() -> None:
                                          h_steps=args.h_steps,
                                          seed=args.seed)
     tl = simulate(sc, numeric=numeric)
-    print(tl.table())
-    print(f"timeline fingerprint: {tl.fingerprint()[:16]}")
+    log.info(tl.table())
+    emit_obs(args, tl)
+    log.info(f"timeline fingerprint: {tl.fingerprint()[:16]}",
+             fingerprint=tl.fingerprint())
     if args.json:
         with open(args.json, "w") as f:
             json.dump(tl.to_dict(), f, indent=1)
-        print(f"wrote {args.json}")
+        log.info(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

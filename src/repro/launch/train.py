@@ -25,9 +25,33 @@ unit mesh:
       --inner pp --devices 8 --clusters 2 --data 2 --pp-stages 2
 """
 import argparse
+import contextlib
 import dataclasses
 import os
 import sys
+
+
+def _setup_obs(args):
+    """Logger (stdout, byte-stable lines) + optional wall-clock tracer.
+    Returns ``(log, tracer, span)`` where ``span`` is a no-op context
+    factory when ``--trace`` is off."""
+    from repro.obs import Tracer, configure_logging, get_logger
+    configure_logging(stream=sys.stdout,
+                      json_stream=(sys.stderr if args.log_json else None))
+    log = get_logger("launch.train")
+    tracer = Tracer("train-driver") if args.trace else None
+    if tracer is not None:
+        span = tracer.span
+    else:
+        def span(name, **kw):
+            return contextlib.nullcontext()
+    return log, tracer, span
+
+
+def _finish_obs(args, log, tracer) -> None:
+    if tracer is not None:
+        tracer.write(args.trace)
+        log.info(f"wrote {args.trace}")
 
 
 def _run_pp(args) -> None:
@@ -127,25 +151,36 @@ def _run_pp(args) -> None:
     tok_sharding = NamedSharding(mesh, P("clusters", "data", None))
     wire = compressor.wire_bytes(tree_shapes(st1.params))
 
+    log, tracer, span = _setup_obs(args)
+    from repro.obs import profile as prof
     from repro.checkpoint import checkpoint as ckpt_lib
-    for r in range(args.rounds):
-        losses = []
-        for h in range(args.h_steps):
-            toks = jnp.stack([d.next_batch()["tokens"] for d in data])
-            toks = jax.device_put(toks, tok_sharding)
-            params, inner_opt, loss = train_step(state.params,
-                                                 state.inner_opt, toks)
-            state = state._replace(params=params, inner_opt=inner_opt)
-            losses.append(float(loss) / C)
-        state, anchor, delta_pending, comp_state = outer_jit(
-            state, anchor, delta_pending, comp_state)
-        print(f"round {r}: mean_loss={np.mean(losses):.4f} "
-              f"H={args.h_steps} wire_per_cluster={wire/1e6:.2f}MB")
-        if args.ckpt_dir:
-            ckpt_lib.save(os.path.join(args.ckpt_dir, f"round_{r:04d}"),
-                          {"params": state.params}, step=r,
-                          meta={"arch": args.arch, "inner": "pp"})
-    print("TRAIN-DRIVER-OK")
+    with prof.capture("train-pp"):
+        for r in range(args.rounds):
+            with span("round", round=r):
+                losses = []
+                with span("inner", round=r):
+                    for h in range(args.h_steps):
+                        toks = jnp.stack(
+                            [d.next_batch()["tokens"] for d in data])
+                        toks = jax.device_put(toks, tok_sharding)
+                        params, inner_opt, loss = train_step(
+                            state.params, state.inner_opt, toks)
+                        state = state._replace(params=params,
+                                               inner_opt=inner_opt)
+                        losses.append(float(loss) / C)
+                with span("outer", round=r):
+                    state, anchor, delta_pending, comp_state = outer_jit(
+                        state, anchor, delta_pending, comp_state)
+            log.info(f"round {r}: mean_loss={np.mean(losses):.4f} "
+                     f"H={args.h_steps} wire_per_cluster={wire/1e6:.2f}MB",
+                     round=r, mean_loss=float(np.mean(losses)),
+                     h_steps=args.h_steps, wire_bytes=wire)
+            if args.ckpt_dir:
+                ckpt_lib.save(os.path.join(args.ckpt_dir, f"round_{r:04d}"),
+                              {"params": state.params}, step=r,
+                              meta={"arch": args.arch, "inner": "pp"})
+    log.info("TRAIN-DRIVER-OK")
+    _finish_obs(args, log, tracer)
 
 
 def main() -> None:
@@ -185,6 +220,11 @@ def main() -> None:
     ap.add_argument("--pp-stages", type=int, default=2)
     ap.add_argument("--pp-micro", type=int, default=4)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--trace", default="",
+                    help="write a wall-clock Chrome-trace JSON of the "
+                         "driver's round/inner/outer spans here")
+    ap.add_argument("--log-json", action="store_true",
+                    help="mirror log lines as JSON objects on stderr")
     args = ap.parse_args()
 
     os.environ.setdefault(
@@ -264,10 +304,14 @@ def main() -> None:
         {"tokens": jax.ShapeDtypeStruct((C, Bc, args.seq_len), jnp.int32)},
         mesh, cluster_stacked=True)
 
+    log, tracer, span = _setup_obs(args)
+    from repro.obs import profile as prof
     from repro.checkpoint import checkpoint as ckpt_lib
     # static (non-adaptive) budgets have a round-invariant schedule —
     # plan it once outside the loop
     h_vec_static = plan_round_h(args.h_steps) if balance_h else None
+    prof_cm = contextlib.ExitStack()
+    prof_cm.enter_context(prof.capture("train-gspmd"))
     for r in range(args.rounds):
         # pre-observe controller state = what this round executes (same
         # accounting rule as train/trainer.py: the post-observe state is
@@ -280,29 +324,38 @@ def main() -> None:
             h_vec = [h_t] * C
         het_round = any(hc != h_t for hc in h_vec)
         losses = []
-        for h in range(max(h_vec)):
-            toks = jnp.stack([d.next_batch()["tokens"] for d in data])
-            batch = {"tokens": jax.device_put(toks, bsh["tokens"])}
-            if cfg.modality != "text":
-                fe = jax.random.normal(
-                    jax.random.fold_in(rng, r * 1000 + h),
-                    (C, Bc, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
-                batch["frontend"] = fe
-            if het_round:
-                active = jnp.asarray([h < hc for hc in h_vec], bool)
-                params, opt, loss = train_step_h(params, opt, batch,
-                                                 active)
-            else:
-                params, opt, loss = train_step(params, opt, batch)
-            losses.append(float(loss))
-        rank_scalar = jnp.asarray(r_exec, jnp.int32)
-        params, outer_state = outer_step(params, outer_state, rank_scalar)
+        with span("round", round=r):
+            with span("inner", round=r):
+                for h in range(max(h_vec)):
+                    toks = jnp.stack([d.next_batch()["tokens"]
+                                      for d in data])
+                    batch = {"tokens": jax.device_put(toks, bsh["tokens"])}
+                    if cfg.modality != "text":
+                        fe = jax.random.normal(
+                            jax.random.fold_in(rng, r * 1000 + h),
+                            (C, Bc, cfg.n_frontend_tokens,
+                             cfg.d_model)) * 0.02
+                        batch["frontend"] = fe
+                    if het_round:
+                        active = jnp.asarray([h < hc for hc in h_vec],
+                                             bool)
+                        params, opt, loss = train_step_h(params, opt,
+                                                         batch, active)
+                    else:
+                        params, opt, loss = train_step(params, opt, batch)
+                    losses.append(float(loss))
+            with span("outer", round=r):
+                rank_scalar = jnp.asarray(r_exec, jnp.int32)
+                params, outer_state = outer_step(params, outer_state,
+                                                 rank_scalar)
         wire = mc.wire_bytes_tree(params1, ccfg,
                                   rank=r_exec if args.adaptive else None)
         h_str = (f"H={h_t}" if not het_round
                  else "H=" + "/".join(str(hc) for hc in h_vec))
-        print(f"round {r}: mean_loss={np.mean(losses):.4f} "
-              f"{h_str} r={r_exec} wire_per_cluster={wire/1e6:.2f}MB")
+        log.info(f"round {r}: mean_loss={np.mean(losses):.4f} "
+                 f"{h_str} r={r_exec} wire_per_cluster={wire/1e6:.2f}MB",
+                 round=r, mean_loss=float(np.mean(losses)), h=h_vec,
+                 rank=int(r_exec), wire_bytes=wire)
         if args.adaptive:
             ada = adaptive.observe_mean_pseudo_grad(
                 ada, jax.tree.map(lambda x: x.mean(0),
@@ -311,7 +364,9 @@ def main() -> None:
             ckpt_lib.save(os.path.join(args.ckpt_dir, f"round_{r:04d}"),
                           {"params": params, "outer": outer_state._asdict()},
                           step=r, meta={"arch": args.arch})
-    print("TRAIN-DRIVER-OK")
+    prof_cm.close()
+    log.info("TRAIN-DRIVER-OK")
+    _finish_obs(args, log, tracer)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,9 @@
+"""Trace validator CLI: ``python -m repro.obs TRACE.json [...]``.
+
+Exits non-zero if any file fails the Chrome-trace-event schema check
+(see ``repro.obs.trace.validate_chrome_trace``).
+"""
+from repro.obs.trace import main
+
+if __name__ == "__main__":
+    main()

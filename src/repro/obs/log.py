@@ -1,0 +1,100 @@
+"""Structured logger for the CLIs and trainers.
+
+Replaces ad-hoc ``print()`` paths with one funnel that can emit the same
+line two ways at once:
+
+ - a **human-readable** line on a configurable stream (default stderr;
+   the CLIs point it at stdout so their existing output — which tests and
+   CI grep — stays byte-identical to the old ``print()``s);
+ - an optional **machine-readable** JSON line per record on a second
+   stream (``--log-json`` in the CLIs), carrying the structured fields
+   that the human line flattens away.
+
+No global logging-module state is touched: this is a tiny, explicit
+funnel, not a ``logging`` wrapper, so importing it can never reconfigure
+a host application's handlers.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, TextIO
+
+_LEVELS = {"debug": 10, "info": 20, "warning": 30, "error": 40}
+
+_UNSET = object()
+
+
+class _Config:
+    def __init__(self) -> None:
+        self.stream: Optional[TextIO] = None       # None -> sys.stderr
+        self.json_stream: Optional[TextIO] = None  # None -> no JSON lines
+        self.level: str = "info"
+
+
+_cfg = _Config()
+
+
+def configure(*, stream: Any = _UNSET, json_stream: Any = _UNSET,
+              level: Any = _UNSET) -> None:
+    """Point the human stream / JSON stream somewhere (or set the level).
+
+    ``stream=None`` restores the stderr default; ``json_stream=None``
+    disables JSON lines.  Only the keywords you pass change.
+    """
+    if stream is not _UNSET:
+        _cfg.stream = stream
+    if json_stream is not _UNSET:
+        _cfg.json_stream = json_stream
+    if level is not _UNSET:
+        if level not in _LEVELS:
+            raise ValueError(f"unknown log level {level!r}")
+        _cfg.level = level
+
+
+class Logger:
+    """Named emitter.  ``info("text", k=v, ...)`` prints exactly ``text``
+    on the human stream (so routed ``print()`` lines stay byte-identical
+    — the values a human should see belong in the message itself) and,
+    when configured, a JSON object carrying ``fields`` on the machine
+    stream."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def log(self, level: str, msg: str, **fields: Any) -> None:
+        if _LEVELS[level] < _LEVELS[_cfg.level]:
+            return
+        stream = _cfg.stream if _cfg.stream is not None else sys.stderr
+        line = msg
+        if _LEVELS[level] >= _LEVELS["warning"]:
+            line = f"{level.upper()}: {line}"
+        print(line, file=stream)
+        if _cfg.json_stream is not None:
+            rec: Dict[str, Any] = {"ts": round(time.time(), 6),
+                                   "level": level, "logger": self.name,
+                                   "msg": msg}
+            rec.update(fields)
+            print(json.dumps(rec, default=str), file=_cfg.json_stream)
+
+    def debug(self, msg: str, **fields: Any) -> None:
+        self.log("debug", msg, **fields)
+
+    def info(self, msg: str, **fields: Any) -> None:
+        self.log("info", msg, **fields)
+
+    def warning(self, msg: str, **fields: Any) -> None:
+        self.log("warning", msg, **fields)
+
+    def error(self, msg: str, **fields: Any) -> None:
+        self.log("error", msg, **fields)
+
+
+_loggers: Dict[str, Logger] = {}
+
+
+def get_logger(name: str) -> Logger:
+    if name not in _loggers:
+        _loggers[name] = Logger(name)
+    return _loggers[name]

@@ -1,0 +1,216 @@
+"""Metrics registry: counters / gauges / histograms over ``RoundEvent``s.
+
+``MetricsRegistry.observe_round(event)`` folds one round into the
+standard metric set (wire bytes, hidden/exposed comm seconds, barrier
+idle, tokens, loss, compressor rank, fault count) and records a flat
+per-round dict for the JSONL sink.  Two exports:
+
+ - ``write_jsonl(path)`` — one JSON object per round (the machine-
+   readable per-round record, schema-stable across backends);
+ - ``prometheus_text()`` — the final counters/gauges/histograms in
+   Prometheus text exposition format (written once per run; point a
+   file-based scraper or ``promtool`` at it).
+
+Pure-python, jax-free, and strictly read-only: nothing here feeds back
+into the round math.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+_DEF_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+
+class Counter:
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help, self.value = name, help, 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        if v < 0:
+            raise ValueError(f"counter {self.name} cannot decrease")
+        self.value += v
+
+
+class Gauge:
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help, self.value = name, help, 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: Sequence[float] = _DEF_BUCKETS):
+        self.name, self.help = name, help
+        self.buckets: Tuple[float, ...] = tuple(sorted(buckets))
+        self.counts = [0] * (len(self.buckets) + 1)  # +1 for +Inf
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        self.sum += v
+        self.count += 1
+        for i, le in enumerate(self.buckets):
+            if v <= le:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+
+class MetricsRegistry:
+    """Create-or-get metric accessors plus the standard round fold."""
+
+    def __init__(self, run_meta: Optional[Dict[str, Any]] = None):
+        self._metrics: Dict[str, Any] = {}
+        self.run_meta = dict(run_meta or {})
+        self.round_records: List[Dict[str, Any]] = []
+
+    def _get(self, cls, name: str, **kw):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name, **kw)
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{m.kind}")
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help=help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help=help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Sequence[float] = _DEF_BUCKETS) -> Histogram:
+        return self._get(Histogram, name, help=help, buckets=buckets)
+
+    # ---- the standard RoundEvent fold -------------------------------------
+    def observe_round(self, e: Any) -> Dict[str, Any]:
+        """Fold one ``RoundEvent``; returns (and records) the flat
+        per-round dict the JSONL sink writes."""
+        hidden = max(0.0, e.t_comm_s - e.exposed_comm_s)
+        idle = sum(e.idle_by) if e.idle_by is not None else 0.0
+        self.counter("repro_rounds_total",
+                     "outer rounds completed").inc()
+        self.counter("repro_wire_bytes_total",
+                     "bytes crossing all links").inc(
+            float(e.wire_bytes_total or e.wire_bytes))
+        self.counter("repro_compute_seconds_total",
+                     "barrier compute seconds").inc(e.t_compute_s)
+        self.counter("repro_hidden_comm_seconds_total",
+                     "comm seconds overlapped behind compute").inc(hidden)
+        self.counter("repro_exposed_comm_seconds_total",
+                     "comm seconds on the critical path").inc(
+            e.exposed_comm_s)
+        self.counter("repro_barrier_idle_seconds_total",
+                     "cluster-seconds idling at the round barrier").inc(
+            idle)
+        self.counter("repro_tokens_total", "tokens trained").inc(e.tokens)
+        self.counter("repro_faults_total", "fault tags observed").inc(
+            len(e.faults))
+        self.gauge("repro_alive_clusters",
+                   "clusters alive last round").set(len(e.alive))
+        if e.rank is not None:
+            self.gauge("repro_compressor_rank",
+                       "compressor rank r_t last round").set(e.rank)
+        if e.loss is not None:
+            self.gauge("repro_loss", "mean loss last round").set(e.loss)
+        if e.disagreement is not None:
+            self.gauge("repro_disagreement",
+                       "gossip consensus RMS distance").set(e.disagreement)
+        self.histogram("repro_round_seconds",
+                       "round wall-clock seconds").observe(e.t_round_s)
+        self.histogram("repro_exposed_comm_seconds",
+                       "per-round exposed comm seconds").observe(
+            e.exposed_comm_s)
+
+        rec = {"round": e.round, "alive": list(e.alive),
+               "h_steps": e.h_steps, "rank": e.rank,
+               "t_compute_s": round(e.t_compute_s, 6),
+               "t_comm_s": round(e.t_comm_s, 6),
+               "hidden_comm_s": round(hidden, 6),
+               "exposed_comm_s": round(e.exposed_comm_s, 6),
+               "t_round_s": round(e.t_round_s, 6),
+               "barrier_idle_s": round(idle, 6),
+               "wire_bytes": e.wire_bytes,
+               "wire_bytes_total": e.wire_bytes_total,
+               "tokens": e.tokens, "loss": e.loss,
+               "disagreement": e.disagreement,
+               "ranks": (list(e.ranks) if e.ranks is not None else None),
+               "faults": list(e.faults)}
+        self.round_records.append(rec)
+        return rec
+
+    def observe_timeline(self, tl: Any) -> None:
+        for e in tl.events:
+            self.observe_round(e)
+
+    # ---- exports ----------------------------------------------------------
+    def write_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            if self.run_meta:
+                f.write(json.dumps({"meta": self.run_meta},
+                                   default=str) + "\n")
+            for rec in self.round_records:
+                f.write(json.dumps(rec, default=str) + "\n")
+
+    def snapshot(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for name, m in self._metrics.items():
+            if isinstance(m, Histogram):
+                out[name] = {"sum": m.sum, "count": m.count,
+                             "buckets": dict(zip(
+                                 [*map(str, m.buckets), "+Inf"],
+                                 _cumulative(m.counts)))}
+            else:
+                out[name] = m.value
+        return out
+
+    def prometheus_text(self) -> str:
+        lines: List[str] = []
+        for name, m in self._metrics.items():
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            if isinstance(m, Histogram):
+                cum = _cumulative(m.counts)
+                for le, c in zip([*self._fmt_les(m.buckets), "+Inf"], cum):
+                    lines.append(f'{name}_bucket{{le="{le}"}} {c}')
+                lines.append(f"{name}_sum {_fmt(m.sum)}")
+                lines.append(f"{name}_count {m.count}")
+            else:
+                lines.append(f"{name} {_fmt(m.value)}")
+        return "\n".join(lines) + "\n"
+
+    def write_prometheus(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.prometheus_text())
+
+    @staticmethod
+    def _fmt_les(buckets: Sequence[float]) -> List[str]:
+        return [_fmt(b) for b in buckets]
+
+
+def _cumulative(counts: Sequence[int]) -> List[int]:
+    out, acc = [], 0
+    for c in counts:
+        acc += c
+        out.append(acc)
+    return out
+
+
+def _fmt(v: float) -> str:
+    if isinstance(v, float) and (math.isinf(v) or math.isnan(v)):
+        return str(v)
+    if float(v) == int(v):
+        return str(int(v))
+    return repr(float(v))

@@ -191,19 +191,26 @@ def make_pp_train_step(cfg: ModelConfig, mesh: Mesh,
     loss_fn = PP.make_pp_loss(cfg, mesh, pcfg,
                               cluster_stacked=cluster_stacked)
 
+    from repro.obs import profile as _prof
+
     def train_step(params, opt, tokens):
-        loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
-        grads = dict(grads)
-        grads["active"] = jnp.zeros_like(grads["active"])
-        if cluster_stacked:
-            new_params, opt = jax.vmap(
-                lambda p_, g_, o_: adamw.update(g_, o_, p_, lr=inner_lr))(
-                params, grads, opt)
-        else:
-            new_params, opt = adamw.update(grads, opt, params, lr=inner_lr)
-        new_params = dict(new_params)
-        new_params["active"] = params["active"]
-        return new_params, opt, loss
+        # named scope shows up in REPRO_PROFILE captures / XLA HLO names;
+        # a nullcontext when profiling is off (identical trace either way)
+        with _prof.scope("pp_train_step"):
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+            grads = dict(grads)
+            grads["active"] = jnp.zeros_like(grads["active"])
+            if cluster_stacked:
+                new_params, opt = jax.vmap(
+                    lambda p_, g_, o_: adamw.update(g_, o_, p_,
+                                                    lr=inner_lr))(
+                    params, grads, opt)
+            else:
+                new_params, opt = adamw.update(grads, opt, params,
+                                               lr=inner_lr)
+            new_params = dict(new_params)
+            new_params["active"] = params["active"]
+            return new_params, opt, loss
 
     return train_step
 

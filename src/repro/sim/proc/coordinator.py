@@ -75,6 +75,13 @@ class WorkerDied(Exception):
     pass
 
 
+# deterministic ordering for the merged per-round span list (wall-clock
+# starts are noisy, so sorting by start alone would make the trace's event
+# order nondeterministic across runs of the same scenario)
+_SPAN_ORDER = {"gather": 0, "inner": 1, "idle": 2, "compress": 3,
+               "wire": 4, "mix": 5, "outer": 6}
+
+
 class _Handle:
     """One worker: process, connection, and a reader thread that turns the
     socket into a message queue (so the coordinator never blocks on one
@@ -539,6 +546,11 @@ def run_proc(sc: Scenario, problem=None, *,
             losses, hash_rows, miss_tags = [], [], []
             pend_rows: Dict[int, Any] = {}
             t_comp_by: Dict[int, float] = {}
+            span_rows: List[Tuple[str, int, float, float]] = []
+            if not gossip:
+                # the hub's own gather phase (round start -> every delta in)
+                span_rows.append(("gather", -1, 0.0,
+                                  round(t_gather_meas, 6)))
             for c in list(contributors):
                 if not alive[c]:
                     continue
@@ -559,6 +571,9 @@ def run_proc(sc: Scenario, problem=None, *,
                     hash_rows.append((c, msg["param_hash"]))
                 if msg.get("pending") is not None:
                     pend_rows[c] = msg["pending"]
+                for s in msg.get("spans") or []:
+                    span_rows.append((str(s[0]), int(s[1]),
+                                      float(s[2]), float(s[3])))
                 for j in msg.get("missing", []):
                     miss_tags.append(f"p2pmiss(c{c}<-c{j})")
             t_round_meas = time.monotonic() - t0
@@ -614,7 +629,11 @@ def run_proc(sc: Scenario, problem=None, *,
                               if survivors else None),
                 idle_by=(tuple(t_compute_meas - t_comp_by.get(c, 0.0)
                                for c in survivors)
-                         if survivors else None)))
+                         if survivors else None),
+                spans=(tuple(sorted(
+                    span_rows,
+                    key=lambda s: (s[1], _SPAN_ORDER.get(s[0], 99), s[2])))
+                    if span_rows else None)))
 
         if numeric and alive.any():
             if gossip:

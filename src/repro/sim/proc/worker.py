@@ -301,6 +301,17 @@ def main(argv=None) -> None:
                            msg.get("latency_s", 0.0))
         comm_out: Dict[str, Any] = {"t_comm": 0.0}
 
+        # measured phase spans (obs/trace.py taxonomy), relative to the
+        # round's own start; shipped in the done report.  list.append is
+        # GIL-atomic, so the overlapped comm thread can record too; the
+        # coordinator sorts the merged list deterministically.
+        t0_round = time.monotonic()
+        spans = []
+
+        def _span(name: str, start: float, end: float) -> None:
+            spans.append((name, cluster, round(start - t0_round, 6),
+                          round(max(0.0, end - start), 6)))
+
         def compute_leg():
             t0 = time.monotonic()
             out = {"p_inner": None, "inner_new": None, "loss": None}
@@ -310,10 +321,15 @@ def main(argv=None) -> None:
                 rt.jax.block_until_ready(p_inner)
                 out.update(p_inner=p_inner, inner_new=inner_new,
                            loss=float(np.mean(np.asarray(losses))))
+            t_inner_end = time.monotonic()
+            _span("inner", t0, t_inner_end)
             pad = float(msg.get("compute_target_s", 0.0)) \
                 - (time.monotonic() - t0)
             if pad > 0:
                 time.sleep(pad)
+            # always record idle (dur 0 when there was no pad) so the span
+            # structure stays deterministic across runs
+            _span("idle", t_inner_end, time.monotonic())
             out["t_compute"] = time.monotonic() - t0
             return out
 
@@ -330,15 +346,18 @@ def main(argv=None) -> None:
                     comm_out["hat"] = hat
                     comm_out["comp_state"] = comp_new
                     payload = _to_np(hat)
+                    _span("compress", t0, time.monotonic())
                 else:
                     comm_out["hat"] = None
                     payload = None
+                t_wire0 = time.monotonic()
                 if gossip:
                     comm_out["peer_hats"] = exchange_p2p(msg, r, payload)
                 else:
                     link.send({"type": "delta", "round": r,
                                "cluster": cluster, "hat": payload},
                               charge_bytes=msg.get("charge_bytes"))
+                _span("wire", t_wire0, time.monotonic())
             except BaseException as e:
                 comm_out["error"] = e
                 raise
@@ -363,6 +382,7 @@ def main(argv=None) -> None:
                 raw = rt.raw_j(rt.params, cmp_["p_inner"], rt.error)
             comm_leg(raw)
 
+        t_mix0 = time.monotonic()
         if gossip:
             Delta = (rt.mix(msg["w_row"], comm_out["peer_hats"],
                             comm_out["hat"]) if rt is not None else None)
@@ -371,8 +391,12 @@ def main(argv=None) -> None:
             assert avg["type"] == "avg", avg
             Delta = (rt.jax.tree.map(rt.jnp.asarray, avg["delta"])
                      if rt is not None else None)
+        # mix = neighbor mixing (gossip) or wait-for + apply the broadcast
+        # average (gather): the worker-side tail of the outer sync
+        _span("mix", t_mix0, time.monotonic())
 
         if rt is not None:
+            t_outer0 = time.monotonic()
             anchor = rt.params
             # gossip: classic compressor-local EF (e = δ − C(δ)) — see
             # core.diloco._error_feedback for why Alg. 2's δ − Δ form is
@@ -388,10 +412,12 @@ def main(argv=None) -> None:
             rt.inner_opt = cmp_["inner_new"]
             rt.comp_state = comm_out["comp_state"]
             param_hash = tree_hash(rt.params)
+            _span("outer", t_outer0, time.monotonic())
 
         done = {"type": "done", "round": r, "cluster": cluster,
                 "t_compute": cmp_["t_compute"],
                 "t_comm": comm_out["t_comm"],
+                "spans": spans,
                 "missing": (sorted(set(int(j) for j in msg["peers"])
                                    - set(comm_out.get("peer_hats", {})))
                             if gossip else []),

@@ -534,6 +534,23 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                 # keeping the two backends' rank schedules bit-identical
                 ctrl.observe(num["mean"](st.delta_pending, alive_vec))
 
+        # ---- telemetry: modeled phase spans (obs/trace.py consumes these;
+        # strictly read-only — derived from the same compute_leg/comm
+        # arithmetic that filled the timing fields above) ------------------
+        spans = []
+        for c in alive_ids:
+            spans.append(("inner", c, 0.0, float(leg.t_by[c])))
+            spans.append(("idle", c, float(leg.t_by[c]),
+                          float(leg.idle_by[c])))
+        if t_comm > 0:
+            # delayed rounds ship LAST round's delta while training, so the
+            # modeled wire span starts at 0; synchronous (and per-step
+            # allreduce) rounds put it after the compute leg
+            wire_start = (0.0 if (sc.delay and not sc.allreduce_per_step)
+                          else float(t_compute))
+            for c in alive_ids:
+                spans.append(("wire", c, wire_start, float(t_comm)))
+
         events.append(RoundEvent(
             round=r, alive=alive_ids,
             rejoined=tuple(int(i) for i in np.flatnonzero(rejoined)),
@@ -549,7 +566,8 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
             t_compute_by=(tuple(leg.t_by[c] for c in alive_ids)
                           if n_alive else None),
             idle_by=(tuple(leg.idle_by[c] for c in alive_ids)
-                     if n_alive else None)))
+                     if n_alive else None),
+            spans=(tuple(spans) if spans else None)))
 
     tl = Timeline(scenario=sc.meta(), events=events)
     if num is not None:

@@ -99,6 +99,16 @@ class RoundEvent:
                                        # wait (t_compute_s - own compute) —
                                        # the straggler waste the balance
                                        # H-policy shrinks
+    spans: Optional[Tuple[Tuple[str, int, float, float], ...]] = None
+                                       # per-round phase spans for the
+                                       # trace exporter (obs/trace.py):
+                                       # (name, cluster, start_s, dur_s)
+                                       # relative to round start — modeled
+                                       # in-process, measured wall clock on
+                                       # proc (cluster -1 = coordinator).
+                                       # Telemetry only: deliberately NOT
+                                       # in STRUCTURAL_FIELDS (proc spans
+                                       # carry wall clock)
 
 
 @dataclass
@@ -137,6 +147,21 @@ class Timeline:
                 if t > 0 else 0.0)
 
     @property
+    def total_hidden_comm_s(self) -> float:
+        """Comm seconds overlapped behind compute (the §2.3 win):
+        ``t_comm − exposed`` per round, clamped at 0 — proc measures the
+        two independently, so noise can push exposed past t_comm."""
+        return sum(max(0.0, e.t_comm_s - e.exposed_comm_s)
+                   for e in self.events)
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Fraction of all comm seconds hidden behind compute (1.0 when
+        the wire was never busy — nothing needed hiding)."""
+        comm = sum(e.t_comm_s for e in self.events)
+        return self.total_hidden_comm_s / comm if comm > 0 else 1.0
+
+    @property
     def total_barrier_idle_s(self) -> float:
         """Cluster-seconds burnt waiting at the end-of-round barrier,
         summed over rounds and clusters (``RoundEvent.idle_by``) — the
@@ -167,6 +192,8 @@ class Timeline:
                 "tokens_per_s": round(self.tokens_per_s, 3),
                 "total_wire_bytes": self.total_wire_bytes,
                 "exposed_comm_frac": round(self.exposed_comm_frac, 6),
+                "total_hidden_comm_s": round(self.total_hidden_comm_s, 6),
+                "overlap_efficiency": round(self.overlap_efficiency, 6),
                 "total_barrier_idle_s": round(self.total_barrier_idle_s, 6),
                 "barrier_idle_frac": round(self.barrier_idle_frac, 6),
                 "structural_fingerprint": self.structural_fingerprint(),
@@ -247,5 +274,6 @@ class Timeline:
             f"total {self.total_time_s:.2f}s  "
             f"{self.total_tokens:.0f} tokens  "
             f"{self.tokens_per_s:.1f} tok/s  "
-            f"exposed-comm {100 * self.exposed_comm_frac:.1f}%")
+            f"exposed-comm {100 * self.exposed_comm_frac:.1f}%  "
+            f"overlap-eff {100 * self.overlap_efficiency:.1f}%")
         return "\n".join(lines)

@@ -22,7 +22,13 @@ from repro.core import adaptive, diloco
 from repro.core.compression import Compressor, make_compressor, tree_shapes
 from repro.data.synthetic import SyntheticLM, with_frontend
 from repro.models import model as M
+from repro.obs import get_logger
 from repro.optim import adamw
+
+# debug-level per-round telemetry: silent under the default ("info")
+# threshold, so library output stays empty unless the host opts in via
+# obs.configure_logging(level="debug")
+_log = get_logger("train.trainer")
 
 
 @dataclass
@@ -346,6 +352,9 @@ def run_diloco_training(cfg: ModelConfig, tcfg: TrainConfig, n_rounds: int,
             sum(int(np.prod(s)) * 4 for s in shapes.values()))
         hs.append(h_exec if tcfg.adaptive else tcfg.h_steps)
         rs.append(r_exec)
+        _log.debug(f"round {r}: loss={losses[-1]:.4f} eval={evals[-1]:.4f}",
+                   round=r, loss=losses[-1], eval_loss=evals[-1],
+                   wire_bytes=wires[-1], h=hs[-1], rank=rs[-1])
         if h_by is not None:
             h_rows.append(h_by)
         if tcfg.adaptive and tcfg.compress:

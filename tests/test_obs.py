@@ -1,0 +1,426 @@
+"""Telemetry layer (repro.obs): Chrome-trace export + schema validation,
+structural trace fingerprints, metrics registry / Prometheus exposition,
+overlap ledger math, structured logger stability, the benchmark
+trajectory diff, and Timeline degenerate inputs.  Everything here is
+read-only observability — no test touches the numeric path."""
+import io
+import json
+import math
+
+import pytest
+
+from repro.obs import (MetricsRegistry, OverlapLedger, Tracer,
+                       timeline_trace, trace_fingerprint,
+                       validate_chrome_trace)
+from repro.obs import ledger as ledger_mod
+from repro.obs import log as log_mod
+from repro.sim import LinkProfile, Scenario, Timeline, simulate
+from repro.sim.timeline import RoundEvent
+
+
+def scenario(**kw):
+    base = dict(n_clusters=3, rounds=4, h_steps=10, t_step_s=1.0,
+                n_params=1e8, compressor="diloco_x",
+                compressor_kw={"rank": 32}, seed=3)
+    base.update(kw)
+    return Scenario(**base)
+
+
+def event(r=0, **kw):
+    base = dict(round=r, alive=(0, 1), rejoined=(), h_steps=4, rank=8,
+                t_compute_s=4.0, t_comm_s=2.0, exposed_comm_s=0.5,
+                t_round_s=4.5, wire_bytes=1000, slowest_cluster=0,
+                bottleneck_cluster=-1, tokens=100.0)
+    base.update(kw)
+    return RoundEvent(**base)
+
+
+# ---------------------------------------------------------------------------
+# trace export: schema validity, nesting, structural determinism
+# ---------------------------------------------------------------------------
+
+def test_modeled_trace_valid_and_json_round_trips(tmp_path):
+    tl = simulate(scenario(link=LinkProfile(jitter=0.1)))
+    trace = timeline_trace(tl)
+    assert validate_chrome_trace(trace) == []
+    # survives a disk round-trip as plain JSON
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps(trace))
+    loaded = json.loads(p.read_text())
+    assert validate_chrome_trace(loaded) == []
+    assert trace_fingerprint(loaded) == trace_fingerprint(trace)
+    # every complete event carries the full Chrome-trace field set and a
+    # round tag; the category says "modeled" on the in-process backend
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert xs, "no spans exported"
+    for ev in xs:
+        for k in ("name", "cat", "ph", "ts", "dur", "pid", "tid", "args"):
+            assert k in ev
+        assert ev["cat"] == "modeled"
+        assert ev["dur"] >= 0
+        assert isinstance(ev["args"]["round"], int)
+    # modeled spans cover the expected taxonomy
+    names = {e["name"] for e in xs}
+    assert {"round", "inner", "idle", "wire"} <= names
+
+
+def test_identical_seed_identical_structural_trace_fingerprint():
+    sc = scenario(link=LinkProfile(jitter=0.2))
+    fp = [trace_fingerprint(timeline_trace(simulate(sc)))
+          for _ in range(2)]
+    assert fp[0] == fp[1]
+    sc2 = scenario(link=LinkProfile(jitter=0.2), seed=99)
+    tr2 = timeline_trace(simulate(sc2))
+    # same scenario shape, different jitter draw: the structural
+    # fingerprint ignores ts/dur, so it still matches
+    assert trace_fingerprint(tr2) == fp[0]
+
+
+def test_trace_fingerprint_ignores_wall_clock():
+    tl = simulate(scenario())
+    trace = timeline_trace(tl)
+    shifted = json.loads(json.dumps(trace))
+    for ev in shifted["traceEvents"]:
+        if ev["ph"] == "X":
+            ev["ts"] += 123.0
+            ev["dur"] *= 3.0
+    assert trace_fingerprint(shifted) == trace_fingerprint(trace)
+
+
+def test_validator_catches_bad_traces():
+    assert validate_chrome_trace([1, 2]) != []
+    assert validate_chrome_trace({"nope": 1}) != []
+    missing = {"traceEvents": [{"ph": "X", "ts": 0.0, "dur": 1.0,
+                                "pid": 0}]}          # no name/tid
+    assert any("missing" in e for e in validate_chrome_trace(missing))
+    negdur = {"traceEvents": [{"name": "a", "ph": "X", "ts": 0.0,
+                               "dur": -1.0, "pid": 0, "tid": 0}]}
+    assert any("negative" in e for e in validate_chrome_trace(negdur))
+    # partial overlap in one (pid, tid) row: [0, 10) vs [5, 15)
+    overlap = {"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 10.0, "pid": 0,
+         "tid": 0},
+        {"name": "b", "ph": "X", "ts": 5.0, "dur": 10.0, "pid": 0,
+         "tid": 0}]}
+    assert any("overlap" in e for e in validate_chrome_trace(overlap))
+    # proper nesting on the same row is fine
+    nested = {"traceEvents": [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 10.0, "pid": 0,
+         "tid": 0},
+        {"name": "b", "ph": "X", "ts": 2.0, "dur": 3.0, "pid": 0,
+         "tid": 0}]}
+    assert validate_chrome_trace(nested) == []
+
+
+def test_spans_not_in_structural_timeline_fingerprint():
+    """RoundEvent.spans is telemetry: two timelines that differ only in
+    spans must share a structural fingerprint (the proc drift gate) while
+    the full fingerprint legitimately differs."""
+    e1 = event(spans=(("inner", 0, 0.0, 1.0),))
+    e2 = event(spans=(("inner", 0, 0.0, 2.5), ("wire", 1, 0.0, 9.0)))
+    a = Timeline(scenario={"n_clusters": 2}, events=[e1])
+    b = Timeline(scenario={"n_clusters": 2}, events=[e2])
+    assert "spans" not in Timeline.STRUCTURAL_FIELDS
+    assert a.structural_fingerprint() == b.structural_fingerprint()
+    assert a.fingerprint() != b.fingerprint()
+
+
+def test_tracer_records_nested_spans(tmp_path):
+    tr = Tracer("unit-test")
+    with tr.span("round", round=0):
+        with tr.span("inner", round=0):
+            pass
+    trace = tr.trace()
+    assert validate_chrome_trace(trace) == []
+    names = [e["name"] for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert sorted(names) == ["inner", "round"]
+    p = tmp_path / "t.json"
+    tr.write(str(p))
+    assert validate_chrome_trace(json.loads(p.read_text())) == []
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + exports
+# ---------------------------------------------------------------------------
+
+def test_metrics_fold_matches_timeline_aggregates(tmp_path):
+    tl = simulate(scenario())
+    reg = MetricsRegistry(run_meta={"backend": "model"})
+    reg.observe_timeline(tl)
+    snap = reg.snapshot()
+    assert snap["repro_rounds_total"] == len(tl.events)
+    assert snap["repro_wire_bytes_total"] == pytest.approx(
+        sum(e.wire_bytes_total or e.wire_bytes for e in tl.events))
+    assert snap["repro_hidden_comm_seconds_total"] == pytest.approx(
+        tl.total_hidden_comm_s)
+    assert snap["repro_exposed_comm_seconds_total"] == pytest.approx(
+        sum(e.exposed_comm_s for e in tl.events))
+    hist = snap["repro_round_seconds"]
+    assert hist["count"] == len(tl.events)
+    assert hist["sum"] == pytest.approx(tl.total_time_s)
+
+    # JSONL: meta line first, then one record per round, stable keys
+    p = tmp_path / "m.jsonl"
+    reg.write_jsonl(str(p))
+    lines = [json.loads(l) for l in p.read_text().splitlines()]
+    assert lines[0] == {"meta": {"backend": "model"}}
+    assert len(lines) - 1 == len(tl.events)
+    for rec, e in zip(lines[1:], tl.events):
+        assert rec["round"] == e.round
+        assert rec["t_round_s"] == pytest.approx(e.t_round_s, abs=1e-6)
+        assert rec["hidden_comm_s"] == pytest.approx(
+            max(0.0, e.t_comm_s - e.exposed_comm_s), abs=1e-6)
+
+
+def test_prometheus_text_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("repro_rounds_total", "rounds").inc(3)
+    reg.gauge("repro_loss", "loss").set(1.5)
+    h = reg.histogram("repro_round_seconds", "round s", buckets=(1.0, 5.0))
+    for v in (0.5, 2.0, 99.0):
+        h.observe(v)
+    text = reg.prometheus_text()
+    assert "# HELP repro_rounds_total rounds" in text
+    assert "# TYPE repro_rounds_total counter" in text
+    assert "repro_rounds_total 3" in text
+    assert "repro_loss 1.5" in text
+    # histogram buckets are cumulative and end at +Inf == _count
+    assert 'repro_round_seconds_bucket{le="1"} 1' in text
+    assert 'repro_round_seconds_bucket{le="5"} 2' in text
+    assert 'repro_round_seconds_bucket{le="+Inf"} 3' in text
+    assert "repro_round_seconds_count 3" in text
+    assert "repro_round_seconds_sum 101.5" in text
+    # every non-comment line is "name[{labels}] value"
+    for line in text.strip().splitlines():
+        if not line.startswith("#"):
+            name, value = line.rsplit(" ", 1)
+            assert name and float(value) == float(value)
+
+
+def test_metric_kind_mismatch_and_counter_decrease_rejected():
+    reg = MetricsRegistry()
+    reg.counter("x").inc()
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    with pytest.raises(ValueError):
+        reg.counter("x").inc(-1)
+
+
+# ---------------------------------------------------------------------------
+# overlap ledger
+# ---------------------------------------------------------------------------
+
+def test_ledger_identity_and_efficiency():
+    tl = simulate(scenario())
+    led = OverlapLedger.from_timeline(tl)
+    for row, e in zip(led.rows, tl.events):
+        # the ledger identity: hidden + exposed == t_comm (modeled clock,
+        # exposed can never exceed t_comm in-process)
+        assert row.hidden_comm_s + row.exposed_comm_s == pytest.approx(
+            e.t_comm_s, abs=1e-9)
+        assert 0.0 <= row.overlap_frac <= 1.0
+    assert led.overlap_efficiency == pytest.approx(
+        tl.overlap_efficiency, abs=1e-9)
+    assert "overlap ledger: comm" in led.summary()
+    d = led.to_dict()
+    assert d["summary"]["comm_s"] == pytest.approx(led.comm_s, abs=1e-6)
+    assert len(d["rows"]) == len(tl.events)
+
+
+def test_ledger_clamps_measured_noise():
+    # proc noise can push measured exposed past t_comm: hidden clamps at 0
+    e = event(t_comm_s=1.0, exposed_comm_s=1.4)
+    led = OverlapLedger.from_timeline(
+        Timeline(scenario={}, events=[e]))
+    assert led.rows[0].hidden_comm_s == 0.0
+    assert led.overlap_efficiency == 0.0
+
+
+def test_drift_measured_vs_modeled():
+    modeled = Timeline(scenario={}, events=[event(r, t_round_s=2.0)
+                                            for r in range(3)])
+    measured = Timeline(scenario={}, events=[event(r, t_round_s=2.5)
+                                             for r in range(3)])
+    d = ledger_mod.drift(measured, modeled)
+    assert d["per_round_s"] == [0.5, 0.5, 0.5]
+    assert d["cumulative_s"] == [0.5, 1.0, 1.5]
+    assert d["final_drift_s"] == 1.5
+    assert d["final_drift_frac"] == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# structured logger
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def restore_log_config():
+    yield
+    log_mod.configure(stream=None, json_stream=None, level="info")
+
+
+def test_logger_human_line_is_exactly_msg(restore_log_config):
+    human, js = io.StringIO(), io.StringIO()
+    log_mod.configure(stream=human, json_stream=js)
+    log = log_mod.get_logger("t")
+    log.info("round 0: loss=1.0", round=0, loss=1.0)
+    # byte-stable: the human line is the message alone — fields only ever
+    # appear on the JSON stream (CLI output is grepped by tests/CI)
+    assert human.getvalue() == "round 0: loss=1.0\n"
+    rec = json.loads(js.getvalue())
+    assert rec["msg"] == "round 0: loss=1.0"
+    assert rec["round"] == 0 and rec["loss"] == 1.0
+    assert rec["logger"] == "t" and rec["level"] == "info"
+
+
+def test_logger_levels_and_prefixes(restore_log_config):
+    human = io.StringIO()
+    log_mod.configure(stream=human, level="info")
+    log = log_mod.get_logger("t2")
+    log.debug("hidden")
+    log.warning("careful")
+    log.error("boom")
+    assert human.getvalue() == "WARNING: careful\nERROR: boom\n"
+    with pytest.raises(ValueError):
+        log_mod.configure(level="loud")
+
+
+# ---------------------------------------------------------------------------
+# benchmark trajectory diff
+# ---------------------------------------------------------------------------
+
+def test_trajectory_flatten_and_regression_detection():
+    from benchmarks.trajectory import compare, flatten
+    cur = flatten({"a": {"b": 10.0, "ok": True}, "list": [1, 2]})
+    assert cur == {"a.b": 10.0, "list.0": 1.0, "list.1": 2.0}
+    prev = {"a.b": 4.0, "list.0": 1.0, "list.1": 2.0, "gone": 5.0}
+    diff = compare(cur, prev, threshold=2.0)
+    regressed = [r[0] for r in diff["regressions"]]
+    assert regressed == ["a.b"]          # 2.5x move, either direction
+    assert diff["only_previous"] == ["gone"]
+    # direction-agnostic: a 2.5x *improvement* trips the same wire
+    diff2 = compare({"a.b": 4.0}, {"a.b": 10.0}, threshold=2.0)
+    assert len(diff2["regressions"]) == 1
+
+
+def test_trajectory_cli_exit_codes(tmp_path):
+    from benchmarks.trajectory import main
+    cur = tmp_path / "cur.json"
+    prev = tmp_path / "prev.json"
+    cur.write_text(json.dumps({"sections": {"k": {"v": 10.0}}}))
+    prev.write_text(json.dumps({"k": {"v": 1.0}}))   # schema-tolerant
+    with pytest.raises(SystemExit) as ex:
+        main([str(cur), str(prev)])
+    assert ex.value.code == 1
+    with pytest.raises(SystemExit) as ex:
+        main([str(cur), str(prev), "--warn-only"])
+    assert ex.value.code in (0, None)
+    # a missing baseline is the cold-start case, never an error
+    with pytest.raises(SystemExit) as ex:
+        main([str(cur), str(tmp_path / "nope.json")])
+    assert ex.value.code in (0, None)
+    # within-threshold success returns normally (exit status 0)
+    main([str(cur), str(prev), "--threshold", "20"])
+
+
+# ---------------------------------------------------------------------------
+# Timeline degenerate inputs
+# ---------------------------------------------------------------------------
+
+def test_empty_timeline_degenerate():
+    tl = Timeline(scenario={"n_clusters": 0})
+    assert tl.total_time_s == 0.0
+    assert tl.tokens_per_s == 0.0
+    assert tl.exposed_comm_frac == 0.0
+    assert tl.total_hidden_comm_s == 0.0
+    assert tl.overlap_efficiency == 1.0     # nothing needed hiding
+    assert tl.barrier_idle_frac == 0.0
+    assert tl.h_schedule() == [] and tl.rank_schedule() == []
+    assert isinstance(tl.fingerprint(), str)
+    assert isinstance(tl.structural_fingerprint(), str)
+    assert "total 0.00s" in tl.table()
+    d = tl.to_dict()
+    assert d["events"] == []
+    trace = timeline_trace(tl)
+    assert validate_chrome_trace(trace) == []
+    led = OverlapLedger.from_timeline(tl)
+    assert led.rows == [] and led.overlap_efficiency == 1.0
+
+
+def test_all_dead_rounds_timeline():
+    dead = [event(r, alive=(), t_compute_s=0.0, t_comm_s=0.0,
+                  exposed_comm_s=0.0, t_round_s=0.0, wire_bytes=0,
+                  tokens=0.0, faults=("all dead",), rank=None,
+                  slowest_cluster=-1, spans=None)
+            for r in range(2)]
+    tl = Timeline(scenario={"n_clusters": 2}, events=dead)
+    assert tl.tokens_per_s == 0.0
+    assert tl.overlap_efficiency == 1.0
+    assert "all dead" in tl.table()
+    assert validate_chrome_trace(timeline_trace(tl)) == []
+    reg = MetricsRegistry()
+    reg.observe_timeline(tl)
+    assert reg.snapshot()["repro_alive_clusters"] == 0
+
+
+def test_h_by_none_mixed_with_schedule_rounds():
+    evs = [event(0, h_by=None),
+           event(1, h_by=(4, 2)),
+           event(2, h_by=None)]
+    tl = Timeline(scenario={"n_clusters": 2}, events=evs)
+    assert tl.h_schedule() == [4, [4, 2], 4]
+    assert isinstance(tl.structural_fingerprint(), str)
+    assert validate_chrome_trace(timeline_trace(tl)) == []
+    reg = MetricsRegistry()
+    reg.observe_timeline(tl)
+    recs = reg.round_records
+    assert [r["h_steps"] for r in recs] == [4, 4, 4]
+
+
+# ---------------------------------------------------------------------------
+# proc backend: measured spans (slow — spawns real worker processes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_proc_trace_valid_and_sums_to_round_accounting(tmp_path):
+    """2-cluster timing-only proc run: the exported trace must be valid
+    Chrome-trace JSON whose per-round hidden+exposed comm accounting sums
+    to the RoundEvent's measured t_comm within the equivalence-style
+    tolerance (measured independently, so noise-bounded, not exact)."""
+    from repro.sim.proc import run_proc
+
+    sc = Scenario(n_clusters=2, rounds=3, h_steps=2, t_step_s=0.02,
+                  link=LinkProfile(bytes_per_s=200_000),
+                  compressor="diloco_x",
+                  compressor_kw={"rank": 8, "min_dim_for_lowrank": 8},
+                  rank=8, n_params=1e5, seed=0)
+    tl = run_proc(sc, None)
+    assert len(tl.events) == 3
+    # every round shipped measured spans from both workers
+    for e in tl.events:
+        assert e.spans, f"round {e.round} has no spans"
+        clusters = {s[1] for s in e.spans if s[1] >= 0}
+        assert clusters == {0, 1}
+        names = {s[0] for s in e.spans}
+        # timing-only mode: no numeric phases, so compress/outer are
+        # absent — the compute/idle/wire/mix skeleton must still be there
+        assert {"inner", "idle", "wire", "mix"} <= names
+
+    trace = timeline_trace(tl)
+    assert validate_chrome_trace(trace) == []
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert all(e["cat"] == "measured" for e in xs)
+
+    # per-round envelope accounting: hidden + exposed vs t_comm, within
+    # the same tolerance shape the proc equivalence gate uses
+    envelopes = [e for e in xs if e["name"] == "round"]
+    assert len(envelopes) == 3
+    for env, e in zip(envelopes, tl.events):
+        a = env["args"]
+        assert a["round"] == e.round
+        total = a["hidden_comm_s"] + a["exposed_comm_s"]
+        tol = 0.3 + 0.5 * e.t_comm_s
+        assert abs(total - e.t_comm_s) <= tol, (
+            f"round {e.round}: hidden+exposed {total:.3f}s vs "
+            f"t_comm {e.t_comm_s:.3f}s (tol {tol:.3f}s)")
+    tf = trace_fingerprint(trace)
+    assert tf == trace_fingerprint(json.loads(json.dumps(trace)))
