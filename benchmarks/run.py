@@ -187,6 +187,25 @@ def main() -> None:
             raise AssertionError("straggler-h acceptance criteria failed")
     section("straggler_h", straggler_h_bench)
 
+    # beyond-paper: 64-cluster bounded-stale fleet vs the global barrier
+    def fleet_async_bench() -> None:
+        from benchmarks import fleet_async
+        fa = fleet_async.run(fast=args.fast or args.skip_convergence)
+        blobs["fleet_async"] = fa
+        crit = fa["criteria"]
+        print(f"fleet_async.barrier_idle_cut,"
+              f"{crit['barrier_idle_cut']},frac")
+        print(f"fleet_async.overlap_efficiency,"
+              f"{crit['overlap_efficiency_async']},frac")
+        print(f"fleet_async.makespan_gain,{crit['makespan_gain']},"
+              f"x_vs_barrier")
+        print(f"fleet_async.wall_clock_win,{crit['wall_clock_win']},"
+              f"x_loss_at_makespan")
+        print(f"fleet_async.ok,{int(crit['ok'])},bool")
+        if not crit["ok"]:
+            raise AssertionError("fleet-async acceptance criteria failed")
+    section("fleet_async", fleet_async_bench)
+
     # analytic fused-vs-unfused outer-step compressor roofline (no inputs)
     def roofline_outer() -> None:
         from benchmarks import roofline

@@ -219,6 +219,34 @@ def pseudo_grad(anchor, params_local, error=None):
         anchor, params_local, error)
 
 
+def staleness_weights(base_w, staleness, max_staleness: int):
+    """Alg. 2 outer-step mixing weights under bounded staleness.
+
+    ``base_w``: (C,) float push-sum / neighborhood weights for the
+    committing cluster (``topology.mixing.async_mix_weights`` row);
+    ``staleness``: (C,) int rounds-stale of each peer's freshest published
+    delta (<0 = no usable delta).  A delta ``s`` rounds old is discounted
+    by ``1/(1+s)`` — the SSP-style linear decay — and anything beyond the
+    ``max_staleness`` bound (or unpublished, or outside the neighborhood)
+    gets weight exactly 0.  The result feeds
+    ``membership.masked_cluster_mean`` as a *float* mask, whose
+    sum-normalization is precisely the push-sum ``x/phi`` debiasing: the
+    weighted mean stays unbiased no matter how asymmetric the incorporated
+    set is.
+
+    Host-side numpy (like ``adaptive.plan_h``): both sim backends compute
+    the same float64 weights from the same engine-provided staleness
+    vector, so the jitted aggregation consumes bit-identical inputs.
+    """
+    import numpy as np
+
+    w = np.asarray(base_w, np.float64).copy()
+    s = np.asarray(staleness, np.int64)
+    ok = (s >= 0) & (s <= int(max_staleness))
+    w = np.where(ok, w / (1.0 + np.maximum(s, 0)), 0.0)
+    return w.astype(np.float32)
+
+
 def _pseudo_grad(anchor, params_inner, err, gossip: bool):
     """delta = (theta_anchor - theta_local) + e, per cluster."""
     if gossip:

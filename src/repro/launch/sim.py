@@ -246,6 +246,15 @@ def main() -> None:
     ap.add_argument("--topology-degree", type=int, default=0,
                     help="random topology: k of the k-regular graph "
                          "(0 = auto)")
+    ap.add_argument("--sync", default="barrier",
+                    choices=["barrier", "bounded_stale"],
+                    help="outer-sync policy: barrier = lockstep rounds "
+                         "(the paper's setting); bounded_stale = "
+                         "event-driven async rounds on per-cluster clocks "
+                         "(no delta older than --max-staleness mixed in)")
+    ap.add_argument("--max-staleness", type=int, default=2,
+                    help="bounded_stale: staleness bound in rounds "
+                         "(0 = barrier cadence on local clocks)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--timing-only", action="store_true",
                     help="proc backend: workers skip jax (membership/"
@@ -341,10 +350,25 @@ def main() -> None:
         if args.topology != "random":
             ap.error("--topology-seeds redraws the random k-regular graph "
                      "per round; it needs --topology random")
-        if args.backend == "proc":
-            ap.error("--topology-seeds (time-varying topology) is "
-                     "in-process only for now; drop --backend proc")
         topo_seeds = tuple(int(s) for s in args.topology_seeds.split(","))
+
+    if args.sync == "bounded_stale":
+        if args.check_equivalence:
+            ap.error("--check-equivalence compares modeled vs wall-clock "
+                     "round timing, which async workers (run flat-out) "
+                     "don't expose; the bounded_stale cross-backend gate "
+                     "is the structural-fingerprint + param-hash test in "
+                     "tests/test_sim_proc.py")
+        if args.compare:
+            ap.error("--compare replays the paper's barrier methods; "
+                     "drop --sync bounded_stale")
+        if args.adaptive != "off" or args.h_policy != "global":
+            ap.error("--sync bounded_stale has no controller step "
+                     "(no global round to decide at); drop --adaptive/"
+                     "--h-policy")
+        if topo_seeds is not None:
+            ap.error("--sync bounded_stale gates on a fixed peer set; "
+                     "drop --topology-seeds")
 
     kw = {"rank": args.rank} if args.compressor in ("diloco_x",) else {}
     if args.backend == "proc" and args.compressor == "diloco_x":
@@ -363,6 +387,7 @@ def main() -> None:
         adaptive=adaptive_spec, h_spec=h_spec,
         topology=args.topology, topology_degree=args.topology_degree,
         topology_seed=args.seed, topology_seed_schedule=topo_seeds,
+        sync=args.sync, max_staleness=args.max_staleness,
         n_params=args.params, seed=args.seed)
 
     if args.backend == "proc":

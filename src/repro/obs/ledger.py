@@ -15,11 +15,20 @@ H·T_step)``.  The ledger quantifies exactly that from a ``Timeline``:
    measured−modeled round-time gap on the proc backend — how far real
    processes have slipped from the clock model that CI's equivalence
    tolerance is anchored to.
+
+Bounded-stale timelines reuse the same ledger with an async reading:
+each event is one cluster's commit (``LedgerRow.cluster`` is set), the
+publish overlaps everything after the leg finishes, so ``exposed_comm_s``
+is the *staleness-gate wait* — the only seconds a cluster ever stands
+still — and ``hidden_comm_s = max(0, t_send − wait)`` is the wire time
+genuinely behind compute.  ``barrier_idle_s`` rows then sum gate waits
+in cluster-seconds, directly comparable to a barrier run of the same
+scenario (the fleet benchmark's ≥50% idle-reduction gate).
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 
 @dataclass(frozen=True)
@@ -32,6 +41,9 @@ class LedgerRow:
     overlap_frac: float
     barrier_idle_s: float
     t_round_s: float
+    # bounded_stale: which cluster's commit this row is (None = barrier
+    # round, where the row aggregates the whole fleet)
+    cluster: Optional[int] = None
 
 
 @dataclass
@@ -51,7 +63,8 @@ class OverlapLedger:
                               else 1.0),
                 barrier_idle_s=(sum(e.idle_by)
                                 if e.idle_by is not None else 0.0),
-                t_round_s=e.t_round_s))
+                t_round_s=e.t_round_s,
+                cluster=getattr(e, "cluster", None)))
         return cls(rows)
 
     # ---- run-level aggregates ---------------------------------------------

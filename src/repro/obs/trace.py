@@ -19,18 +19,36 @@ Span taxonomy (one lane pair per cluster):
   ===========  =====  =================================================
   inner        0      H local AdamW steps (the compute leg)
   idle         0      barrier wait after own compute (straggler waste)
+  stale_wait   0      bounded_stale: staleness-gate wait after the leg
+                      (the async replacement for barrier ``idle``)
+  leg          0      bounded_stale: per-cluster leg envelope (compute
+                      + gate wait); carries the commit's ``staleness``
+                      and ``round_clock`` in its ``args``
   compress     1      compressor round-trip on the outgoing delta
-  wire         1      payload on the wire (socket send / p2p exchange)
+  wire         1      payload on the wire (socket send / p2p exchange);
+                      in bounded_stale mode the publish is emitted as a
+                      ``b``/``e`` async pair because it legitimately
+                      overlaps the gate wait and the next leg (§2.3
+                      generalized)
   mix          1      applying the returned average / neighbor mixing
   outer        1      EF + outer Nesterov + param hash
   gather       1      coordinator-side gather phase (pid = coordinator)
-  round        0      per-round envelope (pid = coordinator row); its
-                      ``args`` carry the round's comm accounting
+  round        0      barrier mode: per-round envelope (pid =
+                      coordinator row); its ``args`` carry the round's
+                      comm accounting
   ===========  =====  =================================================
 
 Lane 0 holds compute-side spans and lane 1 comm-side spans, so spans
 nest without overlap within a ``(pid, tid)`` row even in delay mode
 (where the comm thread genuinely runs concurrently with compute).
+
+Clock layout depends on the outer-sync policy.  Barrier timelines place
+round ``r`` at the cumulative ``t_round_s`` offset and wrap it in a
+coordinator-row ``round`` envelope.  Bounded-stale timelines have no
+global round — each event is one cluster's commit, placed at its own
+``RoundEvent.t_start_s`` on the cluster's row, so Perfetto shows the
+per-cluster round clocks drifting apart and re-converging; the ``leg``
+span is the envelope and there is no coordinator round row.
 
 ``trace_fingerprint`` hashes the *structural* shape of a trace — event
 names/categories/rows/round tags, never ``ts``/``dur`` — so identical-
@@ -49,7 +67,7 @@ from typing import Any, Dict, List, Optional
 # pid of the coordinator/global row (clusters use their own id)
 COORD_PID = 9999
 
-_LANES = {"inner": 0, "idle": 0, "round": 0,
+_LANES = {"inner": 0, "idle": 0, "round": 0, "stale_wait": 0, "leg": 0,
           "compress": 1, "wire": 1, "mix": 1, "outer": 1, "gather": 1}
 
 
@@ -81,20 +99,48 @@ def timeline_trace(tl: Any) -> Dict[str, Any]:
                        "pid": pid, "tid": tid, "args": args})
         pids_seen.setdefault(pid, set()).add(tid)
 
+    def emit_pub(pid: int, start_s: float, dur_s: float, rnd: int) -> None:
+        # async publish: a b/e pair (Chrome async events MAY overlap,
+        # complete events in a row must nest — and an in-flight send
+        # genuinely overlaps the gate wait and the next leg)
+        base = {"name": "wire", "cat": cat, "pid": pid, "tid": 1,
+                "id": int(rnd), "args": {"round": int(rnd)}}
+        events.append({**base, "ph": "b", "ts": round(start_s * 1e6, 3)})
+        events.append({**base, "ph": "e",
+                       "ts": round((start_s + max(0.0, dur_s)) * 1e6, 3)})
+        pids_seen.setdefault(pid, set()).add(1)
+
+    is_async = any(e.t_start_s is not None for e in tl.events)
     offset = 0.0
     for e in tl.events:
         hidden = max(0.0, e.t_comm_s - e.exposed_comm_s)
-        emit("round", COORD_PID, offset, e.t_round_s,
-             {"round": e.round, "t_comm_s": round(e.t_comm_s, 6),
-              "hidden_comm_s": round(hidden, 6),
-              "exposed_comm_s": round(e.exposed_comm_s, 6),
-              "wire_bytes": e.wire_bytes})
+        if is_async:
+            # per-cluster round clocks: place the commit at its own leg
+            # start; the cluster-row "leg" span is the envelope (there is
+            # no global round, so no coordinator round row)
+            off = float(e.t_start_s or 0.0)
+        else:
+            off = offset
+            emit("round", COORD_PID, off, e.t_round_s,
+                 {"round": e.round, "t_comm_s": round(e.t_comm_s, 6),
+                  "hidden_comm_s": round(hidden, 6),
+                  "exposed_comm_s": round(e.exposed_comm_s, 6),
+                  "wire_bytes": e.wire_bytes})
+            offset += e.t_round_s
         for span in (e.spans or ()):
             name, cluster, start_s, dur_s = span
             pid = COORD_PID if int(cluster) < 0 else int(cluster)
-            emit(str(name), pid, offset + float(start_s), float(dur_s),
-                 {"round": e.round})
-        offset += e.t_round_s
+            if is_async and str(name) == "wire":
+                emit_pub(pid, off + float(start_s), float(dur_s), e.round)
+                continue
+            args: Dict[str, Any] = {"round": e.round}
+            if is_async and str(name) == "leg":
+                args.update(
+                    cluster=e.cluster,
+                    staleness={int(p): int(s)
+                               for p, s in (e.staleness or ())},
+                    round_clock=list(e.round_clock or ()))
+            emit(str(name), pid, off + float(start_s), float(dur_s), args)
 
     meta: List[Dict[str, Any]] = []
     for pid in sorted(pids_seen):

@@ -5,8 +5,10 @@ clusters connected by modeled slow links (core/comm.py arithmetic), with
 injectable faults: stragglers, link degradation, membership churn
 (core/membership.py semantics). See README.md in this directory.
 """
-from repro.sim.faults import (FaultSchedule, Join, Leave, LinkDegradation,
-                              Straggler)
+from repro.sim.engine import (SYNC_KINDS, AsyncCommit, BoundedStaleEngine,
+                              run_barrier)
+from repro.sim.faults import (Byzantine, FaultSchedule, Join, Leave,
+                              LinkDegradation, Straggler)
 from repro.sim.pp_problem import PPSpec
 from repro.sim.problems import problem_from_dict
 from repro.sim.quadratic import QuadraticSpec
@@ -17,6 +19,8 @@ from repro.sim.timeline import (RoundEvent, Timeline, combine_row_hashes,
                                 tree_hash)
 
 __all__ = [
+    "SYNC_KINDS", "AsyncCommit", "BoundedStaleEngine", "run_barrier",
+    "Byzantine",
     "FaultSchedule", "Join", "Leave", "LinkDegradation", "Straggler",
     "LinkProfile", "Scenario", "synthetic_shapes", "QuadraticSpec",
     "PPSpec", "problem_from_dict",

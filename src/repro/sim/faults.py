@@ -13,6 +13,18 @@ OpenDiLoCo/NoLoCo's WAN setting:
    participating in the outer average (mask-weighted mean,
    ``core.membership``); a (re)joining cluster restarts from the current
    global params with zeroed pending-delta/error buffers.
+ - ``Byzantine``: an adversarial cluster whose *published* compressed
+   delta is corrupted (scaled by an arbitrary factor, e.g. sign-flipped
+   and blown up) before it enters any aggregation — the attack model the
+   trimmed-mean robust aggregation in ``core.membership`` defends
+   against.  Only meaningful under ``sync="bounded_stale"``, where the
+   publish step is an explicit engine event (barrier-mode aggregation
+   happens inside the jitted round program with no injection point).
+
+Under ``sync="bounded_stale"`` there is no global round: ``Straggler`` /
+``LinkDegradation`` / ``Leave`` windows are indexed by each cluster's OWN
+round clock, while ``Join`` fires when the fleet frontier (highest
+committed leg anywhere) reaches the join round (see ``sim/engine.py``).
 """
 from __future__ import annotations
 
@@ -66,6 +78,19 @@ class Join:
 
 
 @dataclass(frozen=True)
+class Byzantine:
+    cluster: int
+    start_round: int
+    end_round: int                 # exclusive
+    scale: float = -8.0            # multiplies the published delta while
+                                   # active (default: sign-flip + blow-up)
+
+    def describe(self) -> str:
+        return (f"byzantine(c{self.cluster} x{self.scale:g} "
+                f"@[{self.start_round},{self.end_round}))")
+
+
+@dataclass(frozen=True)
 class FaultSchedule:
     events: Tuple = field(default_factory=tuple)
 
@@ -107,12 +132,38 @@ class FaultSchedule:
                 new[e.cluster] = True
         return new, rejoined
 
+    def byzantine_scale(self, cluster: int, rnd: int) -> Optional[float]:
+        """Product of active Byzantine corruption scales on one cluster's
+        published delta, or None when the cluster is honest this round."""
+        s = None
+        for e in self.events:
+            if (isinstance(e, Byzantine) and e.cluster == cluster
+                    and e.start_round <= rnd < e.end_round):
+                s = e.scale if s is None else s * e.scale
+        return s
+
+    def leaves_at(self, rnd: int) -> Tuple[int, ...]:
+        """Clusters leaving at round ``rnd`` (sorted) — the per-event query
+        the bounded-stale engine uses in place of ``membership``."""
+        return tuple(sorted(e.cluster for e in self.events
+                            if isinstance(e, Leave) and e.round == rnd))
+
+    def leave_events(self) -> Tuple[Tuple[int, int], ...]:
+        """All ``(round, cluster)`` Leave events (engine init input)."""
+        return tuple((e.round, e.cluster) for e in self.events
+                     if isinstance(e, Leave))
+
+    def join_events(self) -> Tuple[Tuple[int, int], ...]:
+        """All ``(round, cluster)`` Join events (engine init input)."""
+        return tuple((e.round, e.cluster) for e in self.events
+                     if isinstance(e, Join))
+
     def active(self, rnd: int) -> Tuple[str, ...]:
         """Human-readable tags of everything firing/active at round rnd
         (recorded on the event timeline)."""
         tags = []
         for e in self.events:
-            if isinstance(e, (Straggler, LinkDegradation)):
+            if isinstance(e, (Straggler, LinkDegradation, Byzantine)):
                 if e.start_round <= rnd < e.end_round:
                     tags.append(e.describe())
             elif e.round == rnd:

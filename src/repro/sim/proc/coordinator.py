@@ -55,6 +55,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import comm
+from repro.sim.engine import BoundedStaleEngine, run_barrier
 from repro.sim.scenario import Scenario
 from repro.sim.timeline import (RoundEvent, Timeline, combine_row_hashes,
                                 tree_hash)
@@ -176,8 +177,12 @@ def _spawn(cluster: int, port: int, sc: Scenario, problem, gossip: bool,
         # each worker's per-round H in the round header; numeric workers
         # compile the masked fixed-length inner scan once (H traced)
         "dynamic_h": (sc.h_spec is not None and sc.h_spec.active),
-        "delay": sc.delay,
+        # bounded-stale async workers run the synchronous gather arm with
+        # classic compressor-local EF: publish-at-finish overlap is modeled
+        # by the engine, not by the worker's §2.3 comm thread
+        "delay": sc.delay and sc.sync != "bounded_stale",
         "gossip": gossip,
+        "classic_ef": sc.sync == "bounded_stale",
         "epoch": epoch,
         "crash_at_round": (crash_at or {}).get(cluster),
     }
@@ -222,13 +227,42 @@ def run_proc(sc: Scenario, problem=None, *,
         raise NotImplementedError(
             "backend='proc' implements the outer-round syncs (gather and "
             "gossip), not per-step allreduce baselines")
-    if sc.topology_seed_schedule is not None:
-        raise NotImplementedError(
-            "backend='proc' does not yet support time-varying topologies "
-            "(per-round topology_seed schedules); use the in-process "
-            "backend")
+    if sc.sync == "bounded_stale":
+        return _run_proc_bounded_stale(
+            sc, problem, crash_at=crash_at,
+            spawn_timeout_s=spawn_timeout_s,
+            round_timeout_s=round_timeout_s)
     topo = sc.topo()
     gossip = topo.is_gossip
+
+    # dynamic time-varying topology: a fresh random graph (and mixing
+    # matrix) per round, cached by seed — same key scheme as simulate()'s
+    # topo_at/mm_at, so round r communicates over the identical graph on
+    # both backends.  PeerMesh.set_peers reconciles each round's peer
+    # dict (stale links closed, new ones dialed), so the workers re-dial
+    # to the new neighbor sets transparently.
+    _topo_cache: Dict[int, Any] = {}
+
+    def topo_at(rnd: int):
+        if sc.topology_seed_schedule is None:
+            return topo
+        key = rnd % len(sc.topology_seed_schedule)
+        if key not in _topo_cache:
+            _topo_cache[key] = sc.topo(rnd)
+        return _topo_cache[key]
+
+    _mm_cache: Dict[int, Any] = {}
+
+    def mm_at(rnd: int, topo_r):
+        if not gossip:
+            return None
+        if sc.topology_seed_schedule is None:
+            key = -1
+        else:
+            key = rnd % len(sc.topology_seed_schedule)
+        if key not in _mm_cache:
+            _mm_cache[key] = MixingMatrix.metropolis(topo_r)
+        return _mm_cache[key]
     h_active = sc.h_spec is not None and sc.h_spec.active
     numeric = problem is not None
     if numeric and problem.n_clusters != sc.n_clusters:
@@ -268,7 +302,6 @@ def run_proc(sc: Scenario, problem=None, *,
     wire = int(compressor.wire_bytes(shapes, rank=sc.rank))
     alive = (np.ones(C, bool) if sc.initial_alive is None
              else np.asarray(sc.initial_alive, bool).copy())
-    base_mm = MixingMatrix.metropolis(topo) if gossip else None
     epochs = {c: 0 for c in range(C)}
 
     if numeric:
@@ -368,10 +401,17 @@ def run_proc(sc: Scenario, problem=None, *,
         for c in sorted(handles):
             bootstrap(c, None)
 
-        for r in range(sc.rounds):
+        def _barrier_round(r: int) -> None:
+            # The pre-engine per-round body, verbatim — run_barrier drives
+            # it in the same index order, so the proc barrier path (and
+            # with it every proc≡in-process equivalence gate) stays
+            # bit-for-bit identical through the engine refactor.
+            nonlocal alive
             prev_alive = alive.copy()
             alive, rejoined = sc.faults.membership(r, alive)
             crash_tags: List[str] = []
+            topo_r = topo_at(r)
+            mm_r = mm_at(r, topo_r)
 
             # --- membership enforcement: kill leavers, respawn joiners ----
             for c in range(C):
@@ -410,7 +450,7 @@ def run_proc(sc: Scenario, problem=None, *,
                     wire_bytes=int(compressor.wire_bytes(shapes, rank=rank0)),
                     slowest_cluster=-1, bottleneck_cluster=-1, tokens=0.0,
                     faults=sc.faults.active(r), wire_bytes_total=0))
-                continue
+                return
 
             # --- modeled targets: same arithmetic as simulate() -----------
             h_t = sc.h_steps
@@ -421,7 +461,7 @@ def run_proc(sc: Scenario, problem=None, *,
             # (and, under gossip, the same spectral-gap clamp on the same
             # masked matrix) as the in-process simulator — the broadcast H
             # schedule cannot drift from the modeled one
-            gap = (base_mm.masked(alive).spectral_gap(alive)
+            gap = (mm_r.masked(alive).spectral_gap(alive)
                    if (gossip and h_active) else None)
             h_map = _ada.plan_h(sc.h_spec, h_t, t_steps, alive,
                                 spectral_gap=gap)
@@ -440,8 +480,8 @@ def run_proc(sc: Scenario, problem=None, *,
             wire_r = wire
             if ctrl is not None:
                 rank_t, ranks_map = ctrl.decide(
-                    compressor, shapes, topo, alive, bws, sc.link.latency_s,
-                    leg.t_barrier_s, gossip)
+                    compressor, shapes, topo_r, alive, bws,
+                    sc.link.latency_s, leg.t_barrier_s, gossip)
                 wire_r = int(compressor.wire_bytes(shapes, rank=rank_t))
             ranks_tuple = (tuple(ranks_map[c] for c in alive_ids)
                            if ranks_map is not None else None)
@@ -449,12 +489,12 @@ def run_proc(sc: Scenario, problem=None, *,
             if gossip:
                 wire_by = (compressor.wire_bytes_per_edge(shapes, ranks_map)
                            if ranks_map is not None else None)
-                gc = gossip_round_comm(topo, alive, wire_r, bws,
+                gc = gossip_round_comm(topo_r, alive, wire_r, bws,
                                        sc.link.latency_s,
                                        wire_by_cluster=wire_by)
                 bottleneck = gc.bottleneck_cluster
                 wire_total = gc.wire_bytes_total
-                W_r = (base_mm.masked(alive).W if numeric else None)
+                W_r = (mm_r.masked(alive).W if numeric else None)
             elif n_alive >= 2:
                 bottleneck = int(min(alive_ids, key=lambda c: bws[c]))
                 wire_total = round_wire_total("gather", n_alive, wire_r)
@@ -483,7 +523,7 @@ def run_proc(sc: Scenario, problem=None, *,
                     rmsg["rank"] = int(ranks_map[c] if ranks_map is not None
                                        else rank_t)
                 if gossip:
-                    nbrs = topo.alive_neighbors(c, alive)
+                    nbrs = topo_r.alive_neighbors(c, alive)
                     wire_c = (wire_by[c] if ranks_map is not None else wire_r)
                     rmsg.update({
                         "charge_bytes": float(wire_c) if nbrs else None,
@@ -635,6 +675,8 @@ def run_proc(sc: Scenario, problem=None, *,
                     key=lambda s: (s[1], _SPAN_ORDER.get(s[0], 99), s[2])))
                     if span_rows else None)))
 
+        run_barrier(sc.rounds, _barrier_round)
+
         if numeric and alive.any():
             if gossip:
                 final_params = {}
@@ -644,6 +686,263 @@ def run_proc(sc: Scenario, problem=None, *,
                         final_params[int(c)] = st["params"]
             else:
                 final_params = dump_state()["params"]
+    finally:
+        for h in handles.values():
+            h.send({"type": "stop"})
+        time.sleep(0.05)
+        for h in handles.values():
+            h.kill()
+        server.close()
+        for h in handles.values():
+            try:
+                h.proc.wait(timeout=10.0)
+            except Exception:
+                pass
+
+    tl = Timeline(scenario={**sc.meta(), "backend": "proc"}, events=events)
+    if final_params is not None:
+        tl.final_params = final_params
+    return tl
+
+
+def _run_proc_bounded_stale(sc: Scenario, problem=None, *,
+                            crash_at: Optional[Dict[int, int]] = None,
+                            spawn_timeout_s: float = 300.0,
+                            round_timeout_s: float = 300.0) -> Timeline:
+    """Bounded-stale async rounds on real processes: the coordinator stops
+    being a lockstep gather hub and becomes a membership/clock service over
+    the SAME :class:`BoundedStaleEngine` the in-process backend drives.
+
+    The engine runs on modeled time (``async_modeled_times`` — the one
+    shared definition), so its commit sequence, staleness records, and
+    round-clock vectors are bit-identical to ``simulate()``'s; each commit
+    is realized as one serial round-trip with the owning worker (round →
+    delta → weighted avg → done).  Workers run flat-out (no compute-target
+    sleep, unthrottled links): wall clock never feeds a structural field,
+    which is what makes the CI run-to-run drift gate and the cross-backend
+    structural/param-hash comparison exact.
+
+    Membership is event-driven: ``on_leave`` SIGKILLs the worker at its
+    local leg start; ``on_join`` respawns it when the fleet frontier
+    reaches the join round and bootstraps it from the survivors' consensus
+    (masked mean of params + outer momentum — the in-process
+    ``_AsyncNumeric.on_join`` arithmetic).
+    """
+    from repro.core.compression import make_compressor
+    from repro.sim.simulator import async_modeled_times
+    from repro.topology import async_mix_weights
+
+    if crash_at:
+        raise NotImplementedError(
+            "crash_at is a barrier-round test hook; bounded_stale models "
+            "churn through Leave/Join engine events")
+    if sc.topology_seed_schedule is not None:
+        raise ValueError(
+            "sync='bounded_stale' gates on a FIXED peer set per cluster; "
+            "run dynamic topologies under barrier")
+    numeric = problem is not None
+    if numeric and problem.n_clusters != sc.n_clusters:
+        raise ValueError("problem.n_clusters != scenario.n_clusters")
+
+    C = sc.n_clusters
+    topo = sc.topo()
+    compressor = make_compressor(sc.compressor, **sc.compressor_kw)
+    wire = int(compressor.wire_bytes(sc.shapes(), rank=sc.rank))
+    W_base = async_mix_weights(topo)
+    peers = [tuple(p for p in range(C) if p != c and W_base[c, p] > 0.0)
+             for c in range(C)]
+    leg_seconds, send_seconds, sends = async_modeled_times(sc, wire, topo)
+    trimmed = sc.aggregation == "trimmed_mean"
+    alive = (np.ones(C, bool) if sc.initial_alive is None
+             else np.asarray(sc.initial_alive, bool).copy())
+    epochs = {c: 0 for c in range(C)}
+
+    if numeric:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.diloco import staleness_weights
+        from repro.core.membership import (masked_cluster_mean,
+                                           trimmed_cluster_mean)
+        mean_j = jax.jit(masked_cluster_mean)
+        trim_j = jax.jit(
+            lambda t, m: trimmed_cluster_mean(t, m, sc.trim_k))
+        corrupt_j = jax.jit(lambda t, s: jax.tree.map(
+            lambda x: (s * x.astype(jnp.float32)).astype(x.dtype), t))
+        zeros_row = jax.tree.map(
+            lambda x: np.zeros(np.shape(x), np.float32),
+            problem.init_params())
+        jax.block_until_ready(mean_j(_stack_rows([zeros_row] * C),
+                                     jnp.ones((C,), jnp.float32)))
+
+    server = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    server.bind(("127.0.0.1", 0))
+    server.listen(C + 2)
+    port = server.getsockname()[1]
+    handles: Dict[int, _Handle] = {}
+
+    def accept_one(expect: int, timeout: float) -> None:
+        from repro.sim.proc.transport import recv_frame
+        deadline = time.monotonic() + timeout
+        while handles[expect].conn is None:
+            server.settimeout(max(0.1, deadline - time.monotonic()))
+            conn, _ = server.accept()
+            hello = recv_frame(conn, timeout=30.0)
+            h = handles[int(hello["cluster"])]
+            h.p2p_port = hello.get("p2p_port")
+            h.attach(conn)
+
+    def spawn(c: int) -> None:
+        epochs[c] += 1
+        # gossip=False even on ring/torus: async mixing happens in the
+        # coordinator's weighted mean over the versioned delta store, not
+        # over p2p links (there is no synchronized peer round to exchange
+        # with) — the topology enters through W_base/peers instead
+        handles[c] = _Handle(c, _spawn(c, port, sc, problem, False,
+                                       epochs[c], None))
+
+    def dump_one(c: int) -> Optional[Dict[str, Any]]:
+        h = handles.get(c)
+        if h is None or h.dead or not h.send({"type": "dump"}):
+            return None
+        return h.get("state", round_timeout_s)
+
+    def consensus_state() -> Dict[str, Any]:
+        """Masked mean of the SURVIVORS' (params, outer momentum) — the
+        same zero-padded rows through the same jitted mean as
+        ``_AsyncNumeric.on_join``, hence a bit-identical bootstrap."""
+        states = {c: dump_one(c) for c in range(C)
+                  if alive[c] and not handles[c].dead}
+        rows_p, rows_m, mask, step = [], [], [], None
+        for c in range(C):
+            st = states.get(c)
+            if st is not None and st.get("params") is not None:
+                rows_p.append(st["params"])
+                rows_m.append(st["outer_opt"]["momentum"])
+                step = st["outer_opt"]["step"]
+                mask.append(1.0)
+            else:
+                rows_p.append(zeros_row)
+                rows_m.append(zeros_row)
+                mask.append(0.0)
+        if step is None:
+            raise WorkerDied("no live worker to bootstrap a rejoin from")
+        m = jnp.asarray(mask, jnp.float32)
+        params = jax.tree.map(np.asarray, mean_j(_stack_rows(rows_p), m))
+        mom = jax.tree.map(np.asarray, mean_j(_stack_rows(rows_m), m))
+        return {"params": params,
+                "outer_opt": {"step": step, "momentum": mom}}
+
+    store: List[Dict[int, Any]] = [dict() for _ in range(C)]
+    events: List[RoundEvent] = []
+    final_params = None
+
+    def commit_cb(ev) -> None:
+        c, k = ev.cluster, ev.round
+        h = handles[c]
+        if not h.send({"type": "round", "round": k,
+                       "compute_target_s": 0.0, "latency_s": 0.0,
+                       "charge_bytes": None, "rate_bytes_per_s": None}):
+            raise WorkerDied(f"worker c{c} died before async round {k}")
+        msg = h.get("delta", round_timeout_s)
+        if msg is None:
+            raise WorkerDied(f"worker c{c} died in async round {k}")
+        delta_np = None
+        if numeric:
+            hat = msg["hat"]
+            scale = sc.faults.byzantine_scale(c, k)
+            pub = (hat if scale is None
+                   else jax.tree.map(np.asarray, corrupt_j(
+                       hat, jnp.asarray(scale, jnp.float32))))
+            store[c][k] = pub
+            for old in sorted(store[c])[:-4]:
+                del store[c][old]
+            used = dict(ev.used)
+            rows = [store[p][used[p]]
+                    if p in used and used[p] in store[p] else zeros_row
+                    for p in range(C)]
+            stacked = _stack_rows(rows)
+            if trimmed:
+                mask = np.array([1.0 if p in used else 0.0
+                                 for p in range(C)], np.float32)
+                Delta = trim_j(stacked, jnp.asarray(mask))
+            else:
+                stal = np.full((C,), -1, np.int64)
+                for p, s_p in ev.staleness:
+                    stal[p] = s_p
+                w = staleness_weights(W_base[c], stal, sc.max_staleness)
+                Delta = mean_j(stacked, jnp.asarray(w))
+            delta_np = jax.tree.map(lambda x: np.asarray(x), Delta)
+        if not h.send({"type": "avg", "delta": delta_np}):
+            raise WorkerDied(f"worker c{c} died in async round {k}")
+        done = h.get("done", round_timeout_s)
+        if done is None:
+            raise WorkerDied(f"worker c{c} died in async round {k}")
+        span_rows = [(str(s[0]), int(s[1]), float(s[2]), float(s[3]))
+                     for s in done.get("spans") or []]
+        t_comp, wait, t_send = (float(ev.t_compute), float(ev.wait),
+                                float(ev.t_send))
+        events.append(RoundEvent(
+            round=k, alive=ev.alive, rejoined=ev.rejoined,
+            h_steps=sc.h_steps, rank=sc.rank,
+            t_compute_s=t_comp, t_comm_s=t_send, exposed_comm_s=wait,
+            t_round_s=t_comp + wait, wire_bytes=wire,
+            slowest_cluster=c, bottleneck_cluster=c,
+            tokens=sc.tokens_per_step * sc.h_steps / max(C, 1),
+            faults=sc.faults.active(k),
+            loss=done.get("loss"), param_hash=done.get("param_hash"),
+            wire_bytes_total=wire * sends[c],
+            t_compute_by=(t_comp,), idle_by=(wait,),
+            spans=(tuple(sorted(
+                span_rows,
+                key=lambda s: (s[1], _SPAN_ORDER.get(s[0], 99), s[2])))
+                if span_rows else None),
+            cluster=c, staleness=ev.staleness,
+            round_clock=ev.round_clock, t_start_s=float(ev.t_start)))
+
+    def on_leave(c: int, k: int, t: float) -> None:
+        alive[c] = False
+        if c in handles and not handles[c].dead:
+            handles[c].kill()
+
+    def on_join(c: int, k: int, t: float) -> None:
+        state = consensus_state() if numeric else None
+        spawn(c)
+        accept_one(c, spawn_timeout_s)
+        handles[c].send({"type": "bootstrap",
+                         "params": None if state is None
+                         else state["params"],
+                         "outer_opt": None if state is None
+                         else state["outer_opt"]})
+        store[c].clear()
+        alive[c] = True
+
+    try:
+        for c in np.flatnonzero(alive):
+            spawn(int(c))
+        for c in sorted(handles):
+            if handles[c].conn is None:
+                accept_one(c, spawn_timeout_s)
+        for c in sorted(handles):
+            handles[c].send({"type": "bootstrap", "params": None,
+                             "outer_opt": None})
+
+        engine = BoundedStaleEngine(
+            n_clusters=C, rounds=sc.rounds,
+            max_staleness=sc.max_staleness, peers=peers,
+            leg_seconds=leg_seconds, send_seconds=send_seconds,
+            commit=commit_cb, leaves=sc.faults.leave_events(),
+            joins=sc.faults.join_events(),
+            initial_alive=[int(i) for i in np.flatnonzero(alive)],
+            on_leave=on_leave, on_join=on_join)
+        engine.run()
+
+        if numeric and alive.any():
+            final_params = {}
+            for c in np.flatnonzero(alive):
+                st = dump_one(int(c))
+                if st is not None and st.get("params") is not None:
+                    final_params[int(c)] = st["params"]
     finally:
         for h in handles.values():
             h.send({"type": "stop"})

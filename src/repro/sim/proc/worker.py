@@ -219,6 +219,12 @@ def main(argv=None) -> None:
     crash_at = cfg.get("crash_at_round")
     delay = bool(cfg.get("delay", True))
     gossip = bool(cfg.get("gossip", False))
+    # bounded-stale async rounds: the coordinator's weighted mean mixes
+    # STALE peer deltas, so error feedback must be the classic
+    # compressor-local form e = δ − C(δ) (vs Alg. 2's δ − Δ, whose I − W
+    # error iteration diverges under partial/stale mixing — the same
+    # reasoning as the gossip arm below)
+    classic_ef = bool(cfg.get("classic_ef", False))
     report_pending = bool(cfg.get("report_pending", False))
     my_epoch = int(cfg.get("epoch", 0))
 
@@ -401,7 +407,7 @@ def main(argv=None) -> None:
             # gossip: classic compressor-local EF (e = δ − C(δ)) — see
             # core.diloco._error_feedback for why Alg. 2's δ − Δ form is
             # unstable under partial mixing
-            err_ref = comm_out["hat"] if gossip else Delta
+            err_ref = comm_out["hat"] if (gossip or classic_ef) else Delta
             if delay:
                 rt.pending = rt.ed_j(rt.pending, err_ref, anchor,
                                      cmp_["p_inner"])

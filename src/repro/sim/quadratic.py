@@ -194,7 +194,8 @@ class QuadraticSpec:
                               eval_fn=eval_fn,
                               inner_fn_stacked=inner_fn_stacked,
                               inner_fn_h=inner_fn_h,
-                              inner_fn_h_stacked=inner_fn_h_stacked)
+                              inner_fn_h_stacked=inner_fn_h_stacked,
+                              inner_fn_row=one_cluster)
 
 
 def make_quadratic_problem(n_clusters: int, *, d: int = 16, n_mats: int = 2,

@@ -81,6 +81,24 @@ class Scenario:
     # topology_seed.  In-process backend only (proc raises).
     topology_seed_schedule: Optional[Tuple[int, ...]] = None
 
+    # outer-sync policy (sim/engine.py): "barrier" is the historical
+    # lockstep round loop (staleness bound 0 on a global clock; bitwise-
+    # identical to the pre-engine backends); "bounded_stale" runs SSP-
+    # style async rounds — each cluster commits an outer step the moment
+    # its local leg finishes, mixing the freshest published peer deltas
+    # through push-sum weights, gated so no incorporated delta is more
+    # than max_staleness rounds older than its own clock.
+    sync: str = "barrier"
+    max_staleness: int = 1
+
+    # bounded-stale aggregation: "mean" is the staleness-discounted
+    # weighted mean (push-sum debiased); "trimmed_mean" drops the
+    # coordinate-wise top/bottom trim_k candidate rows before averaging
+    # (core.membership.trimmed_cluster_mean) — the robust defense against
+    # a Byzantine cluster's corrupted deltas.
+    aggregation: str = "mean"
+    trim_k: int = 1
+
     # inner engine: "scalar" is the historical single-replica inner loop
     # (quadratic/trainer vmap); "pp" runs each cluster's H local steps
     # through the sharded pipeline-parallel engine
@@ -122,6 +140,32 @@ class Scenario:
             raise ValueError(
                 f"inner_engine must be 'scalar' or 'pp', "
                 f"got {self.inner_engine!r}")
+        from repro.sim.engine import SYNC_KINDS
+        if self.sync not in SYNC_KINDS:
+            raise ValueError(
+                f"sync must be one of {SYNC_KINDS}, got {self.sync!r}")
+        if self.aggregation not in ("mean", "trimmed_mean"):
+            raise ValueError(
+                f"aggregation must be 'mean' or 'trimmed_mean', "
+                f"got {self.aggregation!r}")
+        if self.sync == "bounded_stale":
+            if self.max_staleness < 0:
+                raise ValueError("max_staleness must be >= 0")
+            if self.allreduce_per_step:
+                raise ValueError("bounded_stale has no per-step allreduce "
+                                 "(there is no global step barrier)")
+            if self.adaptive is not None or self.h_spec is not None:
+                raise ValueError(
+                    "bounded_stale does not support adaptive compression "
+                    "or H policies yet (the controllers assume a global "
+                    "round clock)")
+            if self.inner_engine != "scalar":
+                raise ValueError("bounded_stale supports the scalar inner "
+                                 "engine only")
+        elif self.aggregation != "mean":
+            raise ValueError("trimmed_mean aggregation is a bounded_stale "
+                             "feature (barrier aggregation happens inside "
+                             "the jitted round program)")
         if self.topology_seed_schedule is not None:
             if self.topology != "random":
                 raise ValueError(
@@ -158,6 +202,10 @@ class Scenario:
             "h_spec": (None if self.h_spec is None
                        else self.h_spec.to_dict()),
             "delay": self.delay,
+            "sync": self.sync,
+            "max_staleness": self.max_staleness,
+            "aggregation": self.aggregation,
+            "trim_k": self.trim_k,
             "inner_engine": self.inner_engine,
             "allreduce_per_step": self.allreduce_per_step,
             "topology": self.topology,

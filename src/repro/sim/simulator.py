@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, Optional
 import numpy as np
 
 from repro.core import comm
+from repro.sim.engine import BoundedStaleEngine, run_barrier
 from repro.sim.scenario import Scenario
 from repro.sim.timeline import (RoundEvent, Timeline, combine_row_hashes,
                                 tree_hash)
@@ -68,6 +69,13 @@ class NumericProblem:
                                      # (sharded pipeline-parallel unit
                                      # mesh); cross-checked against
                                      # Scenario.inner_engine
+    inner_fn_row: Optional[Callable] = None      # bounded-stale async mode:
+                                     # ONE cluster's H-step inner program
+                                     # (params_row, opt_row, cluster) ->
+                                     # (params_H, opt', losses) — the same
+                                     # per-row program a proc worker jits,
+                                     # so the async executor mirrors the
+                                     # worker op-for-op
 
 
 def make_quadratic_problem(n_clusters: int, **kw) -> NumericProblem:
@@ -121,6 +129,20 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
     from repro.topology import (MixingMatrix, compute_leg, gossip_round_comm,
                                 round_wire_total)
     from repro.topology import mixing as topo_mixing
+
+    if sc.sync == "bounded_stale":
+        if adaptive_cfg is not None or rank_schedule is not None:
+            raise ValueError(
+                "sync='bounded_stale' has no global round clock for the "
+                "adaptive controller / a recorded rank schedule to index; "
+                "run them under sync='barrier'")
+        return _simulate_bounded_stale(sc, numeric)
+    from repro.sim.faults import Byzantine
+    if any(isinstance(e, Byzantine) for e in sc.faults.events):
+        raise ValueError(
+            "Byzantine faults model corrupt *published* deltas, which only "
+            "exist under sync='bounded_stale' (the barrier round mixes "
+            "inside one jitted program with no publish step to corrupt)")
 
     C = sc.n_clusters
     shapes = sc.shapes()
@@ -303,7 +325,14 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                     "use mode='bandwidth' for synchronous rounds")
 
     events = []
-    for r in range(sc.rounds):
+
+    def _barrier_round(r: int) -> None:
+        # The pre-engine per-round body, verbatim: ``run_barrier`` drives it
+        # with the same index sequence, so sync="barrier" through the engine
+        # stays bit-for-bit identical to the old inline loop (same host
+        # arithmetic, same jit call order — the property every proc≡in-
+        # process CI gate certifies).
+        nonlocal alive
         alive, rejoined = sc.faults.membership(r, alive)
         alive_ids = tuple(int(i) for i in np.flatnonzero(alive))
         n_alive = len(alive_ids)
@@ -569,9 +598,288 @@ def simulate(sc: Scenario, numeric: Optional[NumericProblem] = None,
                      if n_alive else None),
             spans=(tuple(spans) if spans else None)))
 
+    run_barrier(sc.rounds, _barrier_round)
+
     tl = Timeline(scenario=sc.meta(), events=events)
     if num is not None:
         tl.final_params = num["state"].params      # handy for callers/tests
+    return tl
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness async rounds (sync="bounded_stale")
+# ---------------------------------------------------------------------------
+
+def async_modeled_times(sc: Scenario, wire: int, topo):
+    """The bounded-stale engine's modeled timing callbacks, built from the
+    same host arithmetic (``_jitter_factors`` salts 1/2, fault multipliers)
+    the barrier path uses.  This is the ONE definition — the proc
+    coordinator imports it too, so the engine's commit sequence (and every
+    structural Timeline field) is identical across the two backends.
+
+    Returns ``(leg_seconds, send_seconds, sends)`` where ``sends[c]`` is
+    the number of uplink transfers charged per publish: gossip pushes to
+    each graph neighbor; gather models the relay hub (one up + one down
+    transfer).
+    """
+    C = sc.n_clusters
+    sends = [topo.degree(c) if topo.is_gossip else (2 if C > 1 else 0)
+             for c in range(C)]
+
+    def leg_seconds(c: int, k: int) -> float:
+        step_j = _jitter_factors(sc.seed, k, C, sc.link.jitter, salt=1)
+        return float(sc.h_steps * sc.t_step_s
+                     * sc.faults.step_multiplier(c, k) * step_j[c])
+
+    def send_seconds(c: int, k: int) -> float:
+        if sends[c] == 0:
+            return 0.0
+        bw_j = _jitter_factors(sc.seed, k, C, sc.link.jitter, salt=2)
+        bw = float(sc.link.bytes_per_s * sc.faults.bandwidth_factor(c, k)
+                   * bw_j[c])
+        return float(sends[c] * wire / bw + sends[c] * sc.link.latency_s)
+
+    return leg_seconds, send_seconds, sends
+
+
+class _AsyncNumeric:
+    """Per-cluster numeric executor for bounded-stale commits.
+
+    Holds one (params, inner opt, outer opt, EF error, compressor state)
+    replica per cluster plus a versioned store of *published* compressed
+    deltas, and runs one outer step per :class:`AsyncCommit` — mixing the
+    exact delta versions the engine recorded in ``AsyncCommit.used``.
+
+    Every jitted program mirrors the proc worker's sync arm op-for-op
+    (``proc/worker.py``: ``inner_j``/``raw_j``/``compress_j``/``err_j``/
+    ``outer_j`` with the same lambda structure), and the weighted mean runs
+    through the same standalone jitted ``masked_cluster_mean`` the proc
+    coordinator applies to the workers' reported rows — which is what makes
+    the two backends' async param hashes bit-identical.
+
+    Error feedback is the CLASSIC compressor-local form ``e = δ − C(δ)``
+    (vs the worker's own uncorrupted hat), never Alg. 2's ``δ − Δ``: under
+    partial/stale mixing the latter's ``I − W`` error iteration has
+    spectral radius > 1 and diverges (see ``core.diloco._error_feedback``).
+    """
+
+    def __init__(self, sc: Scenario, numeric: NumericProblem, compressor,
+                 W_base: np.ndarray):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import diloco, membership
+        from repro.optim import nesterov
+
+        if numeric.inner_fn_row is None:
+            raise ValueError(
+                "sync='bounded_stale' needs NumericProblem.inner_fn_row — "
+                "the per-cluster H-step program a proc worker jits "
+                "(QuadraticSpec.problem() provides it)")
+        if not (numeric.compress and numeric.error_feedback):
+            raise ValueError("bounded_stale models the compressed published "
+                             "delta; compress/error_feedback must stay on")
+        self.jax, self.jnp = jax, jnp
+        self.C = sc.n_clusters
+        self.W = np.asarray(W_base, np.float64)
+        self.max_staleness = int(sc.max_staleness)
+        self.trimmed = sc.aggregation == "trimmed_mean"
+        self.faults = sc.faults
+        self._stw = diloco.staleness_weights
+        rank_scalar = (None if sc.rank is None
+                       else jnp.asarray(sc.rank, jnp.int32))
+
+        self.zeros = jax.tree.map(
+            lambda x: jnp.zeros_like(x, jnp.float32), numeric.params)
+        self._inner0 = [diloco.take_row(numeric.inner_opt_stacked, c)
+                        for c in range(self.C)]
+        self.params = [numeric.params for _ in range(self.C)]
+        self.inner_opt = list(self._inner0)
+        self.outer_opt = [nesterov.init(numeric.params)
+                          for _ in range(self.C)]
+        self.error = [self.zeros for _ in range(self.C)]
+        self._comp0 = compressor.init_state(numeric.params)
+        self.comp = [self._comp0 for _ in range(self.C)]
+        self.store = [dict() for _ in range(self.C)]   # leg -> published hat
+        self.alive = (np.ones(self.C, bool) if sc.initial_alive is None
+                      else np.asarray(sc.initial_alive, bool).copy())
+        self.nesterov = nesterov
+
+        # jitted programs — the worker's exact lambda structure
+        self.inner_j = jax.jit(numeric.inner_fn_row)
+        self.raw_j = jax.jit(lambda a, p, e: jax.tree.map(
+            lambda ai, pi, ei: (ai.astype(jnp.float32)
+                                - pi.astype(jnp.float32)) + ei, a, p, e))
+        self.compress_j = jax.jit(
+            lambda d, s: compressor.roundtrip(d, s, rank_scalar))
+        self.err_j = jax.jit(lambda raw, D: jax.tree.map(
+            lambda d, Di: d - Di, raw, D))
+        self.outer_j = jax.jit(lambda D, o, p: nesterov.update(
+            D, o, p, lr=numeric.outer_lr,
+            momentum=numeric.outer_momentum))
+        self.mean_j = jax.jit(membership.masked_cluster_mean)
+        self.trim_j = jax.jit(
+            lambda t, m: membership.trimmed_cluster_mean(t, m, sc.trim_k))
+        self.corrupt_j = jax.jit(lambda t, s: jax.tree.map(
+            lambda x: (s * x.astype(jnp.float32)).astype(x.dtype), t))
+
+    def _stack(self, rows):
+        jnp = self.jnp
+        return self.jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+    def commit(self, ev):
+        """One bounded-stale outer step; returns (loss, hash, disagreement).
+        """
+        jnp = self.jnp
+        c, k = ev.cluster, ev.round
+        anchor = self.params[c]
+        p_inner, inner_new, losses = self.inner_j(
+            anchor, self.inner_opt[c], jnp.asarray(c, jnp.int32))
+        raw = self.raw_j(anchor, p_inner, self.error[c])
+        hat, comp_new = self.compress_j(raw, self.comp[c])
+        # a Byzantine cluster corrupts what it PUBLISHES (everyone's mix
+        # row, including its own) but keeps honest EF vs its clean hat —
+        # the attack is on the wire, not on its local buffers
+        scale = self.faults.byzantine_scale(c, k)
+        pub = (hat if scale is None
+               else self.corrupt_j(hat, jnp.asarray(scale, jnp.float32)))
+        self.store[c][k] = pub
+        for old in sorted(self.store[c])[:-4]:   # only fresh versions mix
+            del self.store[c][old]
+
+        used = dict(ev.used)
+        rows = [self.store[p][used[p]]
+                if p in used and used[p] in self.store[p] else self.zeros
+                for p in range(self.C)]
+        stacked = self._stack(rows)
+        if self.trimmed:
+            mask = np.array([1.0 if p in used else 0.0
+                             for p in range(self.C)], np.float32)
+            Delta = self.trim_j(stacked, jnp.asarray(mask))
+        else:
+            stal = np.full((self.C,), -1, np.int64)
+            for p, s_p in ev.staleness:
+                stal[p] = s_p
+            w = self._stw(self.W[c], stal, self.max_staleness)
+            Delta = self.mean_j(stacked, jnp.asarray(w))
+        err_new = self.err_j(raw, hat)
+        params_new, outer_new = self.outer_j(Delta, self.outer_opt[c],
+                                             anchor)
+        self.params[c] = params_new
+        self.inner_opt[c] = inner_new
+        self.outer_opt[c] = outer_new
+        self.error[c] = err_new
+        self.comp[c] = comp_new
+
+        from repro.topology.mixing import consensus_distance
+        flat = np.stack(
+            [np.concatenate([np.asarray(x).reshape(-1) for x in
+                             self.jax.tree.leaves(self.params[p])])
+             for p in range(self.C)], axis=0)
+        return (float(np.mean(np.asarray(losses))),
+                tree_hash(params_new),
+                consensus_distance(flat, self.alive))
+
+    def on_leave(self, c: int, k: int, t: float) -> None:
+        self.alive[c] = False     # state freezes; nobody mixes it anymore
+
+    def on_join(self, c: int, k: int, t: float) -> None:
+        """Consensus bootstrap: a rejoiner is a fresh worker (proc respawn)
+        restarting from the masked mean of the SURVIVORS' (params, outer
+        momentum) — the same zero-masked rows through the same jitted
+        ``masked_cluster_mean`` the proc coordinator uses."""
+        jnp = self.jnp
+        m = jnp.asarray(self.alive, jnp.float32)
+        self.params[c] = self.mean_j(self._stack(self.params), m)
+        mom = self.mean_j(
+            self._stack([o.momentum for o in self.outer_opt]), m)
+        self.outer_opt[c] = self.nesterov.NesterovState(
+            step=jnp.zeros((), jnp.int32), momentum=mom)
+        self.inner_opt[c] = self._inner0[c]
+        self.error[c] = self.zeros
+        self.comp[c] = self._comp0     # re-INIT, never zeroed (PowerSGD)
+        self.store[c].clear()
+        self.alive[c] = True
+
+    def final_params(self):
+        return self._stack(self.params)
+
+
+def _simulate_bounded_stale(sc: Scenario,
+                            numeric: Optional[NumericProblem]) -> Timeline:
+    """Drive ``BoundedStaleEngine`` over the scenario: modeled per-cluster
+    leg/publish times from the SAME host arithmetic the barrier path uses
+    (``_jitter_factors`` salts 1/2, fault multipliers), push-sum-supported
+    mixing weights, and one :class:`RoundEvent` per committed outer step.
+
+    ``sc.delay`` is ignored here on purpose: publish-at-finish means the
+    send *always* overlaps the staleness wait and the next leg, which
+    subsumes the §2.3 one-step-delay rule — ``exposed_comm_s`` records the
+    gate wait instead.
+    """
+    from repro.core.compression import make_compressor
+    from repro.topology import async_mix_weights
+
+    if sc.topology_seed_schedule is not None:
+        raise ValueError(
+            "sync='bounded_stale' gates on a FIXED peer set per cluster; "
+            "a per-round topology re-draw would change the staleness-gate "
+            "semantics mid-flight (run dynamic topologies under barrier)")
+
+    C = sc.n_clusters
+    compressor = make_compressor(sc.compressor, **sc.compressor_kw)
+    wire = int(compressor.wire_bytes(sc.shapes(), rank=sc.rank))
+    topo = sc.topo()
+    W_base = async_mix_weights(topo)
+    peers = [tuple(p for p in range(C) if p != c and W_base[c, p] > 0.0)
+             for c in range(C)]
+    leg_seconds, send_seconds, sends = async_modeled_times(sc, wire, topo)
+
+    execr = (None if numeric is None
+             else _AsyncNumeric(sc, numeric, compressor, W_base))
+
+    events = []
+
+    def on_commit(ev) -> None:
+        loss = param_hash = disagreement = None
+        if execr is not None:
+            loss, param_hash, disagreement = execr.commit(ev)
+        c, k = ev.cluster, ev.round
+        t_comp, wait, t_send = (float(ev.t_compute), float(ev.wait),
+                                float(ev.t_send))
+        spans = [("inner", c, 0.0, t_comp),
+                 ("stale_wait", c, t_comp, wait)]
+        if t_send > 0:
+            spans.append(("wire", c, t_comp, t_send))
+        spans.append(("leg", c, 0.0, t_comp + wait))
+        events.append(RoundEvent(
+            round=k, alive=ev.alive, rejoined=ev.rejoined,
+            h_steps=sc.h_steps, rank=sc.rank,
+            t_compute_s=t_comp, t_comm_s=t_send, exposed_comm_s=wait,
+            t_round_s=t_comp + wait, wire_bytes=wire,
+            slowest_cluster=c, bottleneck_cluster=c,
+            tokens=sc.tokens_per_step * sc.h_steps / max(C, 1),
+            faults=sc.faults.active(k), loss=loss, param_hash=param_hash,
+            wire_bytes_total=wire * sends[c], disagreement=disagreement,
+            t_compute_by=(t_comp,), idle_by=(wait,),
+            spans=tuple(spans), cluster=c, staleness=ev.staleness,
+            round_clock=ev.round_clock, t_start_s=float(ev.t_start)))
+
+    alive0 = (None if sc.initial_alive is None
+              else tuple(int(i) for i in
+                         np.flatnonzero(np.asarray(sc.initial_alive, bool))))
+    engine = BoundedStaleEngine(
+        n_clusters=C, rounds=sc.rounds, max_staleness=sc.max_staleness,
+        peers=peers, leg_seconds=leg_seconds, send_seconds=send_seconds,
+        commit=on_commit, leaves=sc.faults.leave_events(),
+        joins=sc.faults.join_events(), initial_alive=alive0,
+        on_leave=(execr.on_leave if execr is not None else None),
+        on_join=(execr.on_join if execr is not None else None))
+    engine.run()
+
+    tl = Timeline(scenario=sc.meta(), events=events)
+    if execr is not None:
+        tl.final_params = execr.final_params()
     return tl
 
 

@@ -109,6 +109,27 @@ class RoundEvent:
                                        # Telemetry only: deliberately NOT
                                        # in STRUCTURAL_FIELDS (proc spans
                                        # carry wall clock)
+    cluster: Optional[int] = None      # bounded-stale async mode: the one
+                                       # cluster that committed this outer
+                                       # step (None = barrier round, where
+                                       # every alive cluster commits)
+    staleness: Optional[Tuple[Tuple[int, int], ...]] = None
+                                       # async mode: (peer, rounds_stale)
+                                       # for every delta incorporated in
+                                       # this commit (self always 0); the
+                                       # engine guarantees every entry is
+                                       # <= max_staleness
+    round_clock: Optional[Tuple[int, ...]] = None
+                                       # async mode: per-cluster committed-
+                                       # leg counters after this event —
+                                       # the fleet's logical clock vector
+                                       # (-1 = never committed)
+    t_start_s: Optional[float] = None  # async mode: global modeled clock
+                                       # at this leg's start.  Async events
+                                       # overlap in global time, so the
+                                       # timeline is laid out by t_start_s
+                                       # instead of cumulative round sums
+                                       # (telemetry; NOT structural)
 
 
 @dataclass
@@ -119,6 +140,12 @@ class Timeline:
     # ---- aggregates -------------------------------------------------------
     @property
     def total_time_s(self) -> float:
+        """Barrier mode: rounds are sequential, so total time is the sum.
+        Bounded-stale async mode: commits overlap in global time (each
+        event carries its ``t_start_s``), so total time is the makespan."""
+        if any(e.t_start_s is not None for e in self.events):
+            return max((e.t_start_s or 0.0) + e.t_round_s
+                       for e in self.events)
         return sum(e.t_round_s for e in self.events)
 
     @property
@@ -198,8 +225,22 @@ class Timeline:
                 "barrier_idle_frac": round(self.barrier_idle_frac, 6),
                 "structural_fingerprint": self.structural_fingerprint(),
             },
-            "events": [asdict(e) for e in self.events],
+            "events": [self._event_row(e) for e in self.events],
         }
+
+    @classmethod
+    def _event_row(cls, e: "RoundEvent") -> Dict[str, Any]:
+        """One event as a dict, with never-set async fields omitted (see
+        ``ASYNC_FIELDS``) — the single serialization used by both
+        ``to_dict`` and ``fingerprint``."""
+        return {k: v for k, v in asdict(e).items()
+                if not (v is None and k in cls.ASYNC_FIELDS)}
+
+    #: fields that only bounded-stale async events populate.  Omitted from
+    #: serialization while None so that barrier timelines hash to the SAME
+    #: fingerprints as before these fields existed (the bitwise guarantee
+    #: the engine refactor preserves).
+    ASYNC_FIELDS = ("cluster", "staleness", "round_clock", "t_start_s")
 
     def fingerprint(self) -> str:
         """Stable hash of the full event timeline (floats canonicalized to
@@ -213,13 +254,20 @@ class Timeline:
                 return [canon(v) for v in x]
             return x
 
-        blob = json.dumps(canon([asdict(e) for e in self.events]),
-                          sort_keys=True).encode("utf-8")
+        rows = [self._event_row(e) for e in self.events]
+        blob = json.dumps(canon(rows), sort_keys=True).encode("utf-8")
         return hashlib.sha256(blob).hexdigest()
 
     STRUCTURAL_FIELDS = ("round", "alive", "rejoined", "h_steps", "h_by",
                          "rank", "ranks", "wire_bytes", "wire_bytes_total",
-                         "faults", "param_hash")
+                         "faults", "param_hash",
+                         # bounded-stale async rounds: the commit owner,
+                         # the staleness of every incorporated delta, and
+                         # the per-cluster round-clock vector are decision
+                         # outputs of the event engine (no seconds), so
+                         # they are part of the determinism currency the
+                         # CI drift gate compares
+                         "cluster", "staleness", "round_clock")
 
     def h_schedule(self) -> List[Any]:
         """Per-round executed local-step counts — the H-policy's decision
@@ -246,8 +294,13 @@ class Timeline:
         no measured/modeled seconds.  A proc-backend run is wall-clock-noisy,
         yet two runs of the same scenario must produce the same structural
         fingerprint; CI fails on drift."""
-        rows = [[getattr(e, f) for f in self.STRUCTURAL_FIELDS]
-                for e in self.events]
+        rows = []
+        for e in self.events:
+            row = [getattr(e, f) for f in self.STRUCTURAL_FIELDS]
+            if e.cluster is None and e.staleness is None \
+                    and e.round_clock is None:
+                row = row[:-3]       # barrier event: pre-async row layout
+            rows.append(row)
         blob = json.dumps(rows, sort_keys=True).encode("utf-8")
         return hashlib.sha256(blob).hexdigest()
 

@@ -14,16 +14,22 @@ only the mix operators themselves touch jax, lazily.
 from repro.topology.accounting import (ComputeLeg, GossipComm, compute_leg,
                                        gossip_round_comm, round_wire_total)
 from repro.topology.graphs import (GATHER_KINDS, GOSSIP_KINDS, KINDS,
-                                   Topology, full, make_topology, ring,
+                                   Digraph, Topology, as_digraph,
+                                   directed_ring, full, make_topology, ring,
                                    random_regular, star, torus)
-from repro.topology.mixing import (MixingMatrix, consensus_distance,
-                                   mix_row, mix_stacked, mixing_op)
+from repro.topology.mixing import (MixingMatrix, async_mix_weights,
+                                   consensus_distance, mix_row, mix_stacked,
+                                   mixing_op, push_sum_average,
+                                   push_sum_round, push_sum_weights)
 
 __all__ = [
     "Topology", "make_topology", "ring", "torus", "random_regular", "star",
     "full", "KINDS", "GATHER_KINDS", "GOSSIP_KINDS",
+    "Digraph", "as_digraph", "directed_ring",
     "MixingMatrix", "mixing_op", "mix_row", "mix_stacked",
     "consensus_distance",
+    "push_sum_weights", "push_sum_round", "push_sum_average",
+    "async_mix_weights",
     "GossipComm", "gossip_round_comm", "round_wire_total",
     "ComputeLeg", "compute_leg",
 ]

@@ -97,6 +97,66 @@ class Topology:
         return (f"{self.kind}(n={self.n}, |E|={len(self.edges)}{extra})")
 
 
+@dataclass(frozen=True)
+class Digraph:
+    """A directed communication graph: arc ``(src, dst)`` means ``src``
+    pushes its delta to ``dst``.  This is the asymmetric-uplink setting
+    (WAN sites with very different up/down capacity) where doubly-
+    stochastic Metropolis-Hastings weights do not exist — push-sum
+    (``mixing.push_sum_weights``) mixes correctly with only column
+    stochasticity, which any out-degree normalization provides.
+    """
+    n: int
+    arcs: Tuple[Tuple[int, int], ...]
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "arcs", tuple(sorted({(int(a), int(b))
+                                        for a, b in self.arcs})))
+        for a, b in self.arcs:
+            if not (0 <= a < self.n and 0 <= b < self.n) or a == b:
+                raise ValueError(f"bad arc ({a},{b}) for n={self.n}")
+
+    def out_neighbors(self, c: int) -> Tuple[int, ...]:
+        return tuple(sorted(b for a, b in self.arcs if a == c))
+
+    def in_neighbors(self, c: int) -> Tuple[int, ...]:
+        return tuple(sorted(a for a, b in self.arcs if b == c))
+
+    def out_degree(self, c: int) -> int:
+        return len(self.out_neighbors(c))
+
+    def is_strongly_connected(self) -> bool:
+        """Push-sum converges to the true average iff the graph is
+        strongly connected (every node's mass can reach every other)."""
+        def reach(start, nbrs):
+            seen, stack = {start}, [start]
+            while stack:
+                c = stack.pop()
+                for j in nbrs(c):
+                    if j not in seen:
+                        seen.add(j)
+                        stack.append(j)
+            return len(seen) == self.n
+
+        return (reach(0, self.out_neighbors) and reach(0, self.in_neighbors))
+
+
+def directed_ring(n: int) -> Digraph:
+    """The canonical asymmetric gossip graph: ``i -> (i+1) % n``."""
+    return Digraph(n, tuple((i, (i + 1) % n) for i in range(n)))
+
+
+def as_digraph(topo: Topology) -> Digraph:
+    """Both directions of every undirected edge — how the symmetric
+    topologies enter the push-sum weight construction."""
+    arcs = []
+    for i, j in topo.edges:
+        arcs.append((i, j))
+        arcs.append((j, i))
+    return Digraph(topo.n, tuple(arcs))
+
+
 def _dedupe(pairs) -> Tuple[Tuple[int, int], ...]:
     return tuple(sorted({(min(a, b), max(a, b)) for a, b in pairs
                          if a != b}))

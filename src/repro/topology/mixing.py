@@ -34,7 +34,8 @@ from typing import Any, Optional, Sequence
 
 import numpy as np
 
-from repro.topology.graphs import Topology
+from repro.topology.graphs import (GATHER_KINDS, Digraph, Topology,
+                                   as_digraph)
 
 # jax is imported lazily inside the mix operators: the coordinator and the
 # timing-only workers import this module for the numpy-side accounting and
@@ -105,6 +106,84 @@ class MixingMatrix:
             return 1.0
         eig = np.sort(np.abs(np.linalg.eigvals(W)))[::-1]
         return float(1.0 - eig[1])
+
+
+# ---------------------------------------------------------------------------
+# push-sum: column-stochastic weights for directed/asymmetric graphs
+# ---------------------------------------------------------------------------
+
+def push_sum_weights(graph) -> np.ndarray:
+    """Column-stochastic push-sum weights for a directed graph.
+
+    ``W[i, j] = 1 / (out_degree(j) + 1)`` for every arc ``j -> i`` and for
+    the self-loop ``j -> j``: node ``j`` splits its mass equally over its
+    out-neighbors and itself, so every *column* sums to exactly 1 — total
+    mass is conserved — with no symmetry (double stochasticity)
+    requirement at all.  That is the whole point: Metropolis-Hastings
+    weights need ``W = Wᵀ``, which an asymmetric-uplink WAN cannot
+    provide; push-sum instead tracks a weight scalar ``φ`` through the
+    same matrix and debiases with the ratio ``x/φ`` (Kempe et al.), which
+    converges to the true average on any strongly connected digraph.
+
+    Accepts a ``Digraph`` or an undirected ``Topology`` (promoted via
+    ``as_digraph``).  float64, exact ``1/(d+1)`` rationals — both sim
+    backends build the identical matrix.
+    """
+    g = graph if isinstance(graph, Digraph) else as_digraph(graph)
+    n = g.n
+    W = np.zeros((n, n), np.float64)
+    for j in range(n):
+        share = 1.0 / (g.out_degree(j) + 1.0)
+        W[j, j] = share
+        for i in g.out_neighbors(j):
+            W[i, j] = share
+    return W
+
+
+def push_sum_round(W: np.ndarray, x: np.ndarray, phi: np.ndarray):
+    """One synchronous push-sum iteration: ``x' = W x``, ``φ' = W φ``.
+    ``x``: (n, ...) values, ``φ``: (n,) weights (init: ones).  The
+    debiased estimate at any time is ``x / φ`` per node; column
+    stochasticity conserves ``Σx`` and ``Σφ`` exactly."""
+    x = np.asarray(x, np.float64)
+    phi = np.asarray(phi, np.float64)
+    xc = x.reshape(x.shape[0], -1)
+    return (W @ xc).reshape(x.shape), W @ phi
+
+
+def push_sum_average(graph, x: np.ndarray, iters: int = 200):
+    """Run ``iters`` push-sum rounds from ``φ = 1`` and return the
+    per-node debiased estimates ``x_i/φ_i`` (each converging to
+    ``mean(x)`` on a strongly connected graph) — the reference iteration
+    the property tests certify and the bounded-stale engine's
+    weighted-mean aggregation approximates one commit at a time."""
+    W = push_sum_weights(graph)
+    x = np.asarray(x, np.float64)
+    phi = np.ones(x.shape[0], np.float64)
+    for _ in range(int(iters)):
+        x, phi = push_sum_round(W, x, phi)
+    return x / phi.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def async_mix_weights(topo: Topology) -> np.ndarray:
+    """The (C, C) base mixing-weight matrix for ``sync="bounded_stale"``:
+    row ``c`` holds the weight cluster ``c`` gives each peer's freshest
+    published delta (support of row c = c's in-neighborhood = the
+    staleness-gate set).
+
+    Gather kinds (star/full) model a relay hub that re-broadcasts every
+    published delta, so every cluster mixes everyone uniformly (``J/n`` —
+    push-sum on the complete graph).  Gossip kinds take the push-sum
+    weights of the bidirected graph: ``W[c, p] = 1/(deg(p)+1)`` — each
+    peer's out-share of its own delta.  Rows are NOT normalized here:
+    ``core.diloco.staleness_weights`` discounts by staleness and
+    ``masked_cluster_mean``'s sum-normalization supplies the push-sum
+    ``x/φ`` debiasing at commit time.
+    """
+    n = topo.n
+    if topo.kind in GATHER_KINDS:
+        return np.full((n, n), 1.0 / n, np.float64)
+    return push_sum_weights(topo)
 
 
 def consensus_distance(stacked: np.ndarray, alive: np.ndarray) -> float:

@@ -1,0 +1,225 @@
+"""Event-driven round engine (repro.sim.engine): the barrier policy is
+exactly the historical loop, and bounded_stale gives deterministic
+SSP-style async rounds — staleness bound honored through churn, eager
+commits cutting barrier idle, and the staleness-weighted / trimmed-mean
+aggregation converging (and surviving a Byzantine member) end to end."""
+import numpy as np
+import pytest
+
+from repro.sim import (FaultSchedule, Join, Leave, LinkProfile, Scenario,
+                       Straggler, simulate)
+from repro.sim.engine import AsyncCommit, BoundedStaleEngine, run_barrier
+from repro.sim.faults import Byzantine
+from repro.sim.quadratic import QuadraticSpec
+
+
+# ---------------------------------------------------------------------------
+# engine kernel (no scenario, no jax)
+# ---------------------------------------------------------------------------
+
+def test_run_barrier_is_the_sequential_loop():
+    seen = []
+    run_barrier(5, seen.append)
+    assert seen == [0, 1, 2, 3, 4]
+
+
+def _drive(n=3, rounds=4, s=1, legs=None, leaves=(), joins=(), **kw):
+    commits = []
+    eng = BoundedStaleEngine(
+        n_clusters=n, rounds=rounds, max_staleness=s,
+        peers=[[p for p in range(n) if p != c] for c in range(n)],
+        leg_seconds=legs or (lambda c, k: 1.0),
+        send_seconds=lambda c, k: 0.1,
+        commit=commits.append, leaves=leaves, joins=joins, **kw)
+    eng.run()
+    return commits
+
+
+def test_engine_commits_every_leg_once_and_is_deterministic():
+    a = _drive(legs=lambda c, k: 1.0 + 0.3 * c)
+    b = _drive(legs=lambda c, k: 1.0 + 0.3 * c)
+    assert a == b                         # exact dataclass equality
+    per = {}
+    for ev in a:
+        assert isinstance(ev, AsyncCommit)
+        per.setdefault(ev.cluster, []).append(ev.round)
+    assert all(v == [0, 1, 2, 3] for v in per.values())
+
+
+def test_engine_staleness_bound_holds_under_stragglers():
+    slow = lambda c, k: 5.0 if c == 2 else 1.0
+    for s in (0, 1, 2):
+        for ev in _drive(rounds=6, s=s, legs=slow):
+            for p, stale in ev.staleness:
+                assert 0 <= stale <= s, (ev.cluster, ev.round, p, stale)
+
+
+def test_engine_zero_staleness_is_barrier_cadence():
+    # with s=0 nobody commits leg k before every peer has published leg k:
+    # commit order collapses to whole-fleet waves, like the barrier loop
+    commits = _drive(rounds=4, s=0, legs=lambda c, k: 1.0 + 0.5 * c)
+    waves = [ev.round for ev in commits]
+    assert waves == sorted(waves)
+    for ev in commits:
+        assert all(stale == 0 for _, stale in ev.staleness)
+        # and every live peer's delta is incorporated, barrier-style
+        assert len(ev.used) == 3
+
+
+def test_engine_fast_clusters_run_ahead_within_bound():
+    slow = lambda c, k: 4.0 if c == 2 else 1.0
+    commits = _drive(rounds=6, s=2, legs=slow)
+    clock = {c: [] for c in range(3)}
+    for ev in commits:
+        clock[ev.cluster].append(ev.t_commit)
+    # the fast clusters finish their 6 legs well before the straggler
+    assert max(clock[0][-1], clock[1][-1]) < clock[2][-1]
+    # but never more than s+1 legs ahead (the gate would block them)
+    for ev in commits:
+        own = ev.round_clock[ev.cluster]
+        others = [ev.round_clock[p] for p in range(3) if p != ev.cluster]
+        assert own - min(others) <= 3
+
+
+def test_engine_membership_leave_join_sequencing():
+    hooks = []
+    commits = _drive(
+        rounds=6, s=1, leaves=[(2, 1)], joins=[(4, 1)],
+        on_leave=lambda c, k, t: hooks.append(("leave", c, k)),
+        on_join=lambda c, k, t: hooks.append(("join", c, k)))
+    assert ("leave", 1, 2) in hooks and ("join", 1, 4) in hooks
+    assert hooks.index(("leave", 1, 2)) < hooks.index(("join", 1, 4))
+    # no commit from c1 for legs 2..3; it resumes at the fleet frontier
+    c1 = [ev.round for ev in commits if ev.cluster == 1]
+    assert 2 not in c1 and 3 not in c1 and c1 == sorted(c1)
+    rejoined = [ev for ev in commits if ev.rejoined]
+    assert rejoined and rejoined[0].cluster == 1
+    # nobody ever incorporated c1's pre-leave delta after it went stale
+    for ev in commits:
+        for p, idx in ev.used:
+            assert idx >= ev.round - 1, (ev.cluster, ev.round, p, idx)
+
+
+def test_engine_rejects_bad_parameters():
+    with pytest.raises(ValueError):
+        _drive(rounds=0)
+    with pytest.raises(ValueError):
+        _drive(s=-1)
+
+
+# ---------------------------------------------------------------------------
+# through the simulator: timelines, idle, numerics
+# ---------------------------------------------------------------------------
+
+def _async_sc(**kw):
+    base = dict(n_clusters=4, rounds=6, h_steps=4, seed=3, t_step_s=0.02,
+                sync="bounded_stale", max_staleness=2,
+                link=LinkProfile(bytes_per_s=2e8, latency_s=0.01,
+                                 jitter=0.1),
+                faults=FaultSchedule((Straggler(1, 1, 4, 3.0),)))
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_async_timeline_structure_and_makespan():
+    tl = simulate(_async_sc())
+    assert len(tl.events) == 4 * 6
+    assert all(e.cluster is not None and e.round_clock is not None
+               and e.t_start_s is not None for e in tl.events)
+    # commits are recorded in event-time order, t_start monotone per cluster
+    per = {}
+    for e in tl.events:
+        per.setdefault(e.cluster, []).append(e.t_start_s)
+    for starts in per.values():
+        assert starts == sorted(starts)
+    # makespan semantics: total_time_s is the async makespan, strictly
+    # below the barrier run's serial sum for the same faults
+    tlb = simulate(Scenario(**{**_async_sc().__dict__,
+                               "sync": "barrier", "faults":
+                               _async_sc().faults}))
+    assert tl.total_time_s < tlb.total_time_s
+    # eager commits cut barrier idle (the headline async win)
+    assert tl.total_barrier_idle_s < tlb.total_barrier_idle_s
+
+
+def test_async_two_runs_bitwise_identical():
+    a, b = simulate(_async_sc()), simulate(_async_sc())
+    assert a.fingerprint() == b.fingerprint()
+    assert a.structural_fingerprint() == b.structural_fingerprint()
+
+
+def test_barrier_events_serialize_without_async_fields():
+    tlb = simulate(Scenario(n_clusters=3, rounds=3, h_steps=4, seed=0,
+                            link=LinkProfile(bytes_per_s=2e8)))
+    for e in tlb.events:
+        assert e.cluster is None and e.staleness is None
+    # the None async fields are omitted from the serialized rows, so
+    # pre-engine fingerprints are reproduced literally
+    d = tlb.to_dict()
+    assert all("cluster" not in row and "staleness" not in row
+               and "round_clock" not in row and "t_start_s" not in row
+               for row in d["events"])
+
+
+def test_async_numeric_trains_and_matches_across_aggregations():
+    mk = lambda: QuadraticSpec(n_clusters=4, d=8, h_steps=4,
+                               seed=1).problem()
+    for topo in ("star", "ring"):
+        sc = _async_sc(topology=topo, faults=FaultSchedule(()),
+                       compressor="diloco_x", compressor_kw={"rank": 4},
+                       rank=4)
+        tl = simulate(sc, numeric=mk())
+        losses = tl.losses()
+        assert losses[-1] < losses[0]
+        assert all(e.param_hash for e in tl.events)
+        tl2 = simulate(sc, numeric=mk())
+        assert tl.fingerprint() == tl2.fingerprint()
+
+
+def test_async_churn_rejoin_consensus_bootstrap():
+    sc = _async_sc(faults=FaultSchedule((Leave(0, 2), Join(0, 4))),
+                   compressor="diloco_x", compressor_kw={"rank": 4},
+                   rank=4)
+    tl = simulate(sc, numeric=QuadraticSpec(n_clusters=4, d=8, h_steps=4,
+                                            seed=1).problem())
+    c0 = [e.round for e in tl.events if e.cluster == 0]
+    assert 2 not in c0 and 3 not in c0
+    rejoined = [e for e in tl.events if e.rejoined == (0,)]
+    assert len(rejoined) == 1
+    assert tl.losses()[-1] < tl.losses()[0]
+
+
+def test_trimmed_mean_defends_against_byzantine_member():
+    mk = lambda: QuadraticSpec(n_clusters=5, d=8, h_steps=4,
+                               seed=3).problem()
+    kw = dict(n_clusters=5, rounds=10, h_steps=4, seed=11, t_step_s=0.02,
+              sync="bounded_stale", max_staleness=1,
+              compressor="diloco_x", compressor_kw={"rank": 4}, rank=4,
+              link=LinkProfile(bytes_per_s=2e8, latency_s=0.01,
+                               jitter=0.05))
+    byz = FaultSchedule((Byzantine(cluster=2, start_round=2, end_round=8,
+                                   scale=-8.0),))
+    tail = lambda tl: float(np.mean(tl.losses()[-3:]))
+    honest = tail(simulate(Scenario(**kw), numeric=mk()))
+    attacked = tail(simulate(Scenario(**kw, faults=byz), numeric=mk()))
+    defended = tail(simulate(Scenario(**kw, faults=byz,
+                                      aggregation="trimmed_mean",
+                                      trim_k=1), numeric=mk()))
+    # the scaled-delta attack visibly damages plain mean aggregation;
+    # coordinate-wise trimming restores near-honest convergence
+    assert attacked > 5 * honest
+    assert abs(defended - honest) < 0.2 * abs(attacked - honest)
+
+
+def test_scenario_validation_gates_async_knobs():
+    with pytest.raises(ValueError):
+        Scenario(n_clusters=3, rounds=3, sync="nope")
+    with pytest.raises(ValueError):
+        Scenario(n_clusters=3, rounds=3, sync="bounded_stale",
+                 max_staleness=-1)
+    with pytest.raises(ValueError):
+        Scenario(n_clusters=3, rounds=3, aggregation="trimmed_mean")
+    with pytest.raises(ValueError):  # barrier mode cannot take Byzantine
+        simulate(Scenario(
+            n_clusters=3, rounds=3,
+            faults=FaultSchedule((Byzantine(1, 0, 2),))))

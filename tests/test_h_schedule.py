@@ -248,12 +248,10 @@ def test_dynamic_topology_numeric_converges_and_rejects_misuse():
     losses = tl.losses()
     assert all(np.isfinite(losses)) and losses[-1] < losses[0]
     assert all(e.disagreement is not None for e in tl.events)
-    # only the random kind can redraw; proc backend is a documented follow-up
+    # only the random kind can redraw (the proc backend now re-dials the
+    # PeerMesh per round — its own gates live in tests/test_sim_proc.py)
     with pytest.raises(ValueError):
         _scenario(topology="ring", topology_seed_schedule=(0, 1))
-    from repro.sim.proc import run_proc
-    with pytest.raises(NotImplementedError):
-        run_proc(sc, None)
 
 
 # ---------------------------------------------------------------------------

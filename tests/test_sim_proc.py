@@ -539,3 +539,119 @@ def test_proc_pallas_backend_bitwise_equivalence():
     assert rep["final_params_bitwise_equal"]
     losses = rep["timelines"]["proc"].losses()
     assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# per-round topology re-dial (satellite: dynamic topology on proc)
+# ---------------------------------------------------------------------------
+
+def test_dynamic_topology_timing_equivalence_with_model():
+    """topology_seed_schedule on the PROC backend: each round the workers
+    re-dial the freshly drawn k-regular graph through PeerMesh.set_peers,
+    and the measured timeline matches the in-process clock model (which
+    draws the identical graphs from the same seeds)."""
+    sc = proc_scenario(n_clusters=5, rounds=5, h_steps=3, t_step_s=0.03,
+                       topology="random", topology_degree=2,
+                       topology_seed_schedule=(11, 12, 13),
+                       faults=FaultSchedule((Straggler(1, 1, 3, 2.5),)))
+    rep = check_equivalence(sc, None)
+    assert rep["structural_match"], rep
+    assert rep["timing_ok"], rep
+    assert rep["proc_fingerprint"] == rep["model_fingerprint"]
+    # the schedule genuinely varies the graph: rounds must not all ship
+    # identical per-cluster byte totals in lockstep order
+    tls = rep["timelines"]["model"]
+    assert len({tuple(e.t_compute_by) for e in tls.events}) > 1
+
+
+@pytest.mark.slow
+def test_proc_dynamic_topology_numeric_bitwise_equivalence():
+    sc = proc_scenario(n_clusters=4, rounds=5, h_steps=4, t_step_s=0.05,
+                       topology="random", topology_degree=2,
+                       topology_seed_schedule=(5, 9),
+                       link=LinkProfile(bytes_per_s=100_000, jitter=0.1),
+                       n_params=1e5)
+    spec = QuadraticSpec(n_clusters=4, d=8, n_mats=2, h_steps=4, seed=0)
+    rep = check_equivalence(sc, spec)
+    assert rep["hash_match"], rep
+    assert rep["structural_match"], rep
+    assert rep["final_params_bitwise_equal"]
+    losses = rep["timelines"]["proc"].losses()
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# bounded-stale async rounds on real processes (the tentpole, proc leg)
+# ---------------------------------------------------------------------------
+
+def async_proc_scenario(**kw):
+    base = dict(n_clusters=3, rounds=5, h_steps=4, t_step_s=0.02, seed=3,
+                sync="bounded_stale", max_staleness=2,
+                link=LinkProfile(bytes_per_s=2e8, latency_s=0.01,
+                                 jitter=0.1),
+                compressor="diloco_x",
+                compressor_kw={"rank": 4, "min_dim_for_lowrank": 8},
+                rank=4, n_params=1e5,
+                faults=FaultSchedule((Straggler(1, 1, 3, 3.0),)))
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_proc_bounded_stale_timing_structural_drift_gate():
+    """The CI drift gate's contract: two proc runs of the same async
+    scenario produce the SAME structural fingerprint (commit order,
+    staleness records, round clocks), and it equals the in-process
+    engine's — modeled time drives both backends, wall clock never
+    enters a structural field."""
+    sc = async_proc_scenario()
+    a, b = run_proc(sc), run_proc(sc)
+    assert a.structural_fingerprint() == b.structural_fingerprint()
+    assert (a.structural_fingerprint()
+            == simulate(sc).structural_fingerprint())
+    assert len(a.events) == 3 * 5
+    for e in a.events:
+        assert e.cluster is not None and e.t_start_s is not None
+        for _, s in e.staleness:
+            assert 0 <= s <= sc.max_staleness
+
+
+@pytest.mark.slow
+def test_proc_bounded_stale_numeric_bitwise_equivalence():
+    """Async outer steps on real workers: every commit's param hash (and
+    loss) is bit-identical to the in-process ``_AsyncNumeric`` executor —
+    same jitted ops, same versioned delta store, same staleness-weighted
+    mean."""
+    sc = async_proc_scenario(rounds=6)
+    mk = lambda: QuadraticSpec(n_clusters=3, d=8, n_mats=2, h_steps=4,
+                               seed=1)
+    tl_in = simulate(sc, numeric=mk().problem())
+    tl_p = run_proc(sc, mk())
+    assert (tl_p.structural_fingerprint()
+            == tl_in.structural_fingerprint())
+    assert ([(e.cluster, e.round, e.param_hash) for e in tl_p.events]
+            == [(e.cluster, e.round, e.param_hash) for e in tl_in.events])
+    assert tl_p.losses() == tl_in.losses()
+    assert tl_p.losses()[-1] < tl_p.losses()[0]
+
+
+@pytest.mark.slow
+def test_proc_bounded_stale_churn_byzantine_trimmed_equivalence():
+    """Leave/Join respawn + consensus bootstrap and the Byzantine
+    corrupt-delta fault under trimmed-mean aggregation, proc vs
+    in-process, bit for bit."""
+    from repro.sim.faults import Byzantine
+    faults = FaultSchedule((Byzantine(2, 1, 5, scale=-8.0),
+                            Leave(1, 3), Join(1, 5)))
+    sc = async_proc_scenario(n_clusters=4, rounds=6, max_staleness=1,
+                             seed=11, faults=faults,
+                             aggregation="trimmed_mean", trim_k=1)
+    mk = lambda: QuadraticSpec(n_clusters=4, d=8, n_mats=2, h_steps=4,
+                               seed=2)
+    tl_in = simulate(sc, numeric=mk().problem())
+    tl_p = run_proc(sc, mk())
+    assert (tl_p.structural_fingerprint()
+            == tl_in.structural_fingerprint())
+    assert ([(e.cluster, e.round, e.param_hash) for e in tl_p.events]
+            == [(e.cluster, e.round, e.param_hash) for e in tl_in.events])
+    rejoined = [e for e in tl_p.events if e.rejoined == (1,)]
+    assert len(rejoined) == 1

@@ -237,3 +237,126 @@ def test_simulator_gossip_numeric_converges_and_is_deterministic():
     tl_star = simulate(dataclasses.replace(sc, topology="star"))
     for eg, es in zip(a.events, tl_star.events):
         assert eg.wire_bytes_total < es.wire_bytes_total
+
+
+# ---------------------------------------------------------------------------
+# push-sum on directed/asymmetric uplinks (satellite: property tests)
+# ---------------------------------------------------------------------------
+
+def _digraph_for(shape, n):
+    from repro.topology import as_digraph, directed_ring
+    if shape == "directed_ring":
+        return directed_ring(n)
+    return as_digraph(make_topology(shape, n))
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=st.sampled_from(["directed_ring", "star", "ring", "full"]),
+       n=st.integers(3, 8))
+def test_push_sum_weights_column_stochastic(shape, n):
+    from repro.topology import push_sum_weights
+    W = push_sum_weights(_digraph_for(shape, n))
+    assert W.shape == (n, n)
+    assert np.all(W >= 0.0)
+    # column stochasticity is EXACT (1/(d+1) splits), not approximate
+    np.testing.assert_array_equal(W.sum(axis=0), np.ones(n))
+
+
+def test_push_sum_handles_row_substochastic_digraph():
+    """An irregular digraph (heterogeneous out-degrees) has NO doubly
+    stochastic weights; push-sum only needs the columns to sum to 1."""
+    from repro.topology import Digraph, push_sum_average, push_sum_weights
+    g = Digraph(4, ((0, 1), (0, 2), (0, 3), (1, 0), (2, 0), (3, 0),
+                    (1, 2), (2, 3), (3, 1)))
+    W = push_sum_weights(g)
+    np.testing.assert_array_equal(W.sum(axis=0), np.ones(4))
+    assert not np.allclose(W.sum(axis=1), 1.0)      # rows are NOT stochastic
+    x = np.arange(4, dtype=np.float64).reshape(4, 1)
+    est = push_sum_average(g, x, iters=300)
+    np.testing.assert_allclose(est, np.full((4, 1), 1.5), rtol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=st.sampled_from(["directed_ring", "star", "ring", "full"]),
+       n=st.integers(3, 8), seed=st.integers(0, 10))
+def test_push_sum_conserves_mass_every_round(shape, n, seed):
+    from repro.topology import push_sum_round, push_sum_weights
+    rng = np.random.default_rng(seed)
+    W = push_sum_weights(_digraph_for(shape, n))
+    x = rng.normal(size=(n, 3))
+    phi = np.ones(n)
+    for _ in range(20):
+        x2, phi2 = push_sum_round(W, x, phi)
+        # column stochasticity conserves total mass and total weight
+        np.testing.assert_allclose(x2.sum(axis=0), x.sum(axis=0),
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(phi2.sum(), phi.sum(),
+                                   rtol=1e-12, atol=1e-12)
+        x, phi = x2, phi2
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape=st.sampled_from(["directed_ring", "star", "ring"]),
+       n=st.integers(3, 8), seed=st.integers(0, 10))
+def test_push_sum_debiased_estimates_converge_to_mean(shape, n, seed):
+    from repro.topology import push_sum_average
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 2))
+    est = push_sum_average(_digraph_for(shape, n), x, iters=300)
+    target = np.broadcast_to(x.mean(axis=0), est.shape)
+    # every node's x/phi ratio reaches the TRUE average — including on the
+    # directed ring, where no doubly-stochastic matrix exists at all
+    np.testing.assert_allclose(est, target, rtol=1e-8, atol=1e-8)
+
+
+def test_push_sum_requires_strong_connectivity_flag():
+    from repro.topology import Digraph, directed_ring
+    assert directed_ring(5).is_strongly_connected()
+    # a one-way chain cannot push mass back: not strongly connected
+    chain = Digraph(4, ((0, 1), (1, 2), (2, 3)))
+    assert not chain.is_strongly_connected()
+
+
+def test_async_mix_weights_support_matches_topology():
+    from repro.topology import async_mix_weights
+    ring = make_topology("ring", 6)
+    W = async_mix_weights(ring)
+    for c in range(6):
+        support = {p for p in range(6) if W[c, p] > 0 and p != c}
+        assert support == set(ring.neighbors(c))
+        # each peer contributes its own out-share 1/(deg+1)
+        for p in support:
+            assert W[c, p] == 1.0 / (ring.degree(p) + 1.0)
+    star = async_mix_weights(make_topology("star", 5))
+    np.testing.assert_array_equal(star, np.full((5, 5), 1.0 / 5))
+
+
+# ---------------------------------------------------------------------------
+# bounded staleness, certified from the Timeline itself
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(topology=st.sampled_from(["star", "ring"]), bound=st.integers(0, 3),
+       seed=st.integers(0, 50), jitter=st.floats(0.0, 0.3))
+def test_timeline_staleness_never_exceeds_bound(topology, bound, seed,
+                                                jitter):
+    from repro.sim import FaultSchedule, LinkProfile, Scenario, Straggler
+    from repro.sim import simulate
+    sc = Scenario(n_clusters=4, rounds=6, h_steps=4, seed=seed,
+                  t_step_s=0.02, topology=topology,
+                  sync="bounded_stale", max_staleness=bound,
+                  link=LinkProfile(bytes_per_s=2e8, latency_s=0.01,
+                                   jitter=jitter),
+                  faults=FaultSchedule((Straggler(1, 1, 4, 3.0),)))
+    tl = simulate(sc)
+    for e in tl.events:
+        assert e.cluster is not None and e.staleness is not None
+        for p, s in e.staleness:
+            assert 0 <= s <= bound, (e.round, e.cluster, p, s)
+        # the committing cluster's own delta is always fresh
+        assert dict(e.staleness)[e.cluster] == 0
+    # every cluster commits every local leg exactly once
+    per = {}
+    for e in tl.events:
+        per.setdefault(e.cluster, []).append(e.round)
+    assert all(v == list(range(6)) for v in per.values())
