@@ -47,9 +47,23 @@ Membership semantics under local clocks (documented in the sim README):
 leg index anywhere) reaches ``r - 1`` — the rejoiner adopts the frontier
 clock and, until its first real publish, carries a *virtual* published
 index equal to the frontier so it never retroactively stalls peers it was
-not part of.  A blocked cluster has always already published the leg it is
-waiting to commit (publish happens at finish, commit is what the gate
-delays), so the staleness gate cannot deadlock among live clusters.
+not part of.  Its pre-leave publishes are retired for good: the join
+resets the cluster's published watermark and bumps its publish epoch, so
+an in-flight pre-leave arrival can never resurrect a version the numeric
+backends discarded when they bootstrapped the fresh replica.  A blocked
+cluster has always already published the leg it is waiting to commit
+(publish happens at finish, commit is what the gate delays), so the
+staleness gate cannot deadlock among live clusters.
+
+Publish/commit split for the backends: ``on_publish(c, k, t)`` fires the
+moment leg ``k`` finishes — BEFORE the gate is evaluated and before any
+peer can observe the version — and is where a numeric backend must
+materialize the published (compressed, possibly Byzantine-corrupted)
+delta into its versioned store.  ``commit`` then only aggregates and
+applies the outer step.  This is what guarantees every ``(peer, leg)``
+pair in ``AsyncCommit.used`` exists in the store even when the publishing
+peer is itself still gate-blocked: availability is a property of the
+*publish*, never of the publisher's own commit.
 """
 from __future__ import annotations
 
@@ -100,6 +114,10 @@ class AsyncCommit:
     alive: Tuple[int, ...]        # alive cluster ids at commit time
     rejoined: Tuple[int, ...]     # (c,) on the first commit after a Join
     round_clock: Tuple[int, ...]  # per-cluster committed-leg counters
+    avail: Tuple[int, ...]        # per-cluster arrived-publish watermarks;
+                                  # versions below avail[p] can never be
+                                  # referenced again (avail is monotone per
+                                  # epoch), so backends may GC them
 
 
 class BoundedStaleEngine:
@@ -116,6 +134,11 @@ class BoundedStaleEngine:
         ``(cluster, leg) -> float`` modeled compute / publish times.
     commit:
         Called once per committed outer step with an :class:`AsyncCommit`.
+    on_publish:
+        ``(cluster, leg, t_finish)`` — fired at leg finish, before the
+        gate is evaluated and before any peer can commit against the new
+        version.  Numeric backends materialize the published delta here
+        (see module docstring); timing-only callers may omit it.
     leaves / joins:
         ``(round, cluster)`` membership events (see module docstring for
         the local-clock semantics).
@@ -131,6 +154,7 @@ class BoundedStaleEngine:
         leg_seconds: Callable[[int, int], float],
         send_seconds: Callable[[int, int], float],
         commit: Callable[[AsyncCommit], None],
+        on_publish: Optional[Callable[[int, int, float], None]] = None,
         leaves: Iterable[Tuple[int, int]] = (),
         joins: Iterable[Tuple[int, int]] = (),
         initial_alive: Optional[Sequence[int]] = None,
@@ -149,6 +173,7 @@ class BoundedStaleEngine:
         self._leg_seconds = leg_seconds
         self._send_seconds = send_seconds
         self._commit_cb = commit
+        self._on_publish = on_publish
         self._on_leave = on_leave
         self._on_join = on_join
         self._leave_set = {(int(r), int(c)) for r, c in leaves}
@@ -163,11 +188,13 @@ class BoundedStaleEngine:
         self._avail = [-1] * self.n       # highest peer-visible published leg
         self._virtual = [-1] * self.n     # rejoiner gate floor (pre-publish)
         self._own = [-1] * self.n         # highest locally finished leg
+        self._epoch = [0] * self.n        # publish epoch; bumped on Join so
+                                          # in-flight pre-leave arrivals die
         self._frontier = -1               # max committed leg fleet-wide
         self._rejoin_pending: set = set()
         # c -> (k, t_finish, t_start, t_leg, t_send) awaiting the gate
         self._blocked: Dict[int, Tuple[int, float, float, float, float]] = {}
-        self._heap: List[Tuple[float, int, int, int]] = []
+        self._heap: List[Tuple[float, int, int, int, int]] = []
         self._leg_meta: Dict[int, Tuple[int, float, float]] = {}
 
     # ------------------------------------------------------------------ run
@@ -181,8 +208,12 @@ class BoundedStaleEngine:
             if self._alive[c]:
                 self._schedule_leg(c, 0, 0.0)
         while self._heap:
-            t, kind, c, k = heapq.heappop(self._heap)
+            t, kind, c, k, epoch = heapq.heappop(self._heap)
             if kind == _AVAIL:
+                if epoch != self._epoch[c]:
+                    continue              # pre-leave publish of a rejoiner:
+                                          # the version was discarded at the
+                                          # join bootstrap, never resurrect
                 if k > self._avail[c]:
                     self._avail[c] = k
                 self._recheck_blocked(t)
@@ -207,14 +238,18 @@ class BoundedStaleEngine:
             return
         dur = float(self._leg_seconds(c, k))
         self._leg_meta[c] = (k, t, dur)
-        heapq.heappush(self._heap, (t + dur, _FINISH, c, k))
+        heapq.heappush(self._heap, (t + dur, _FINISH, c, k, self._epoch[c]))
 
     def _finish(self, c: int, k: int, t: float) -> None:
         # publish first: the delta exists now and the send overlaps the
-        # gate wait and the next leg (the async generalization of §2.3)
+        # gate wait and the next leg (the async generalization of §2.3).
+        # on_publish materializes the version BEFORE any gate/commit can
+        # reference it — a gate-blocked publisher's delta is still real.
         t_send = float(self._send_seconds(c, k))
         self._own[c] = k
-        heapq.heappush(self._heap, (t + t_send, _AVAIL, c, k))
+        if self._on_publish is not None:
+            self._on_publish(c, k, t)
+        heapq.heappush(self._heap, (t + t_send, _AVAIL, c, k, self._epoch[c]))
         _, t_start, t_leg = self._leg_meta[c]
         if self._gate_ok(c, k):
             self._commit(c, k, t, t, t_start, t_leg, t_send)
@@ -256,6 +291,7 @@ class BoundedStaleEngine:
             alive=tuple(i for i in range(self.n) if self._alive[i]),
             rejoined=rejoined,
             round_clock=tuple(self._committed),
+            avail=tuple(self._avail),
         )
         self._commit_cb(ev)
         if k > self._frontier:
@@ -272,6 +308,12 @@ class BoundedStaleEngine:
             self._alive[c] = True
             self._committed[c] = self._frontier
             self._virtual[c] = self._frontier
+            # the rejoiner is a FRESH replica: its pre-leave publishes are
+            # gone from the numeric stores, so retire them here too (new
+            # epoch kills in-flight arrivals; watermark back to "nothing
+            # published") — only current-epoch versions ever enter `used`
+            self._avail[c] = -1
+            self._epoch[c] += 1
             self._rejoin_pending.add(c)
             if self._on_join is not None:
                 self._on_join(c, self._frontier + 1, t)

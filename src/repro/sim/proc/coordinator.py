@@ -232,6 +232,15 @@ def run_proc(sc: Scenario, problem=None, *,
             sc, problem, crash_at=crash_at,
             spawn_timeout_s=spawn_timeout_s,
             round_timeout_s=round_timeout_s)
+    from repro.sim.faults import Byzantine
+    if any(isinstance(e, Byzantine) for e in sc.faults.events):
+        # mirror simulate()'s validation: a barrier round has no publish
+        # step to corrupt, so silently ignoring the attack here would let
+        # the two backends diverge on what the scenario even means
+        raise ValueError(
+            "Byzantine faults model corrupt *published* deltas, which only "
+            "exist under sync='bounded_stale' (the barrier round mixes "
+            "inside one jitted program with no publish step to corrupt)")
     topo = sc.topo()
     gossip = topo.is_gossip
 
@@ -830,15 +839,25 @@ def _run_proc_bounded_stale(sc: Scenario, problem=None, *,
         m = jnp.asarray(mask, jnp.float32)
         params = jax.tree.map(np.asarray, mean_j(_stack_rows(rows_p), m))
         mom = jax.tree.map(np.asarray, mean_j(_stack_rows(rows_m), m))
+        # the rejoiner's outer step counter restarts at 0, exactly like
+        # _AsyncNumeric.on_join — NOT a survivor's counter: nesterov.update
+        # ignores step today, but the documented bootstrap is bit-identical
+        # and must stay so if step ever enters the update (e.g. a schedule)
         return {"params": params,
-                "outer_opt": {"step": step, "momentum": mom}}
+                "outer_opt": {"step": np.zeros((), np.int32),
+                              "momentum": mom}}
 
     store: List[Dict[int, Any]] = [dict() for _ in range(C)]
     events: List[RoundEvent] = []
     final_params = None
 
-    def commit_cb(ev) -> None:
-        c, k = ev.cluster, ev.round
+    def publish_cb(c: int, k: int, t: float) -> None:
+        """Engine ``on_publish``: drive the worker's leg (round → delta)
+        and materialize the published version the instant the engine says
+        it exists — the worker then parks awaiting its ``avg`` (it serves
+        ``dump``/``stop`` while parked), so a gate-blocked publisher's
+        delta is already in the store for every peer that commits against
+        it."""
         h = handles[c]
         if not h.send({"type": "round", "round": k,
                        "compute_target_s": 0.0, "latency_s": 0.0,
@@ -847,7 +866,6 @@ def _run_proc_bounded_stale(sc: Scenario, problem=None, *,
         msg = h.get("delta", round_timeout_s)
         if msg is None:
             raise WorkerDied(f"worker c{c} died in async round {k}")
-        delta_np = None
         if numeric:
             hat = msg["hat"]
             scale = sc.faults.byzantine_scale(c, k)
@@ -855,12 +873,25 @@ def _run_proc_bounded_stale(sc: Scenario, problem=None, *,
                    else jax.tree.map(np.asarray, corrupt_j(
                        hat, jnp.asarray(scale, jnp.float32))))
             store[c][k] = pub
-            for old in sorted(store[c])[:-4]:
-                del store[c][old]
+
+    def commit_cb(ev) -> None:
+        c, k = ev.cluster, ev.round
+        h = handles[c]
+        delta_np = None
+        if numeric:
             used = dict(ev.used)
-            rows = [store[p][used[p]]
-                    if p in used and used[p] in store[p] else zeros_row
-                    for p in range(C)]
+            rows = []
+            for p in range(C):
+                if p not in used:
+                    rows.append(zeros_row)     # weight/mask 0 anyway
+                elif used[p] in store[p]:
+                    rows.append(store[p][used[p]])
+                else:
+                    raise WorkerDied(
+                        f"bounded-stale store miss: commit (c{c}, k{k}) "
+                        f"uses version (c{p}, k{used[p]}) which was never "
+                        f"materialized — engine publish/commit contract "
+                        f"broken")
             stacked = _stack_rows(rows)
             if trimmed:
                 mask = np.array([1.0 if p in used else 0.0
@@ -873,6 +904,11 @@ def _run_proc_bounded_stale(sc: Scenario, problem=None, *,
                 w = staleness_weights(W_base[c], stal, sc.max_staleness)
                 Delta = mean_j(stacked, jnp.asarray(w))
             delta_np = jax.tree.map(lambda x: np.asarray(x), Delta)
+            # GC: avail watermarks are monotone (per epoch) — versions
+            # below avail[p] can never be referenced again
+            for p in range(C):
+                for old in [v for v in store[p] if v < ev.avail[p]]:
+                    del store[p][old]
         if not h.send({"type": "avg", "delta": delta_np}):
             raise WorkerDied(f"worker c{c} died in async round {k}")
         done = h.get("done", round_timeout_s)
@@ -931,7 +967,8 @@ def _run_proc_bounded_stale(sc: Scenario, problem=None, *,
             n_clusters=C, rounds=sc.rounds,
             max_staleness=sc.max_staleness, peers=peers,
             leg_seconds=leg_seconds, send_seconds=send_seconds,
-            commit=commit_cb, leaves=sc.faults.leave_events(),
+            commit=commit_cb, on_publish=publish_cb,
+            leaves=sc.faults.leave_events(),
             joins=sc.faults.join_events(),
             initial_alive=[int(i) for i in np.flatnonzero(alive)],
             on_leave=on_leave, on_join=on_join)

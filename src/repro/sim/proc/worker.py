@@ -280,20 +280,23 @@ def main(argv=None) -> None:
             got[j] = fr.get("hat")
         return got
 
+    def state_msg() -> Dict[str, Any]:
+        """The replicated outer state, as the coordinator dumps it (to
+        bootstrap a respawning worker, or the final params)."""
+        state = {"type": "state", "params": None, "outer_opt": None}
+        if rt is not None:
+            state["params"] = _to_np(rt.params)
+            state["outer_opt"] = {
+                "step": np.asarray(rt.outer_opt.step),
+                "momentum": _to_np(rt.outer_opt.momentum)}
+        return state
+
     while True:
         msg = link.recv()
         if msg["type"] == "stop":
             break
         if msg["type"] == "dump":
-            # coordinator wants the replicated outer state (to bootstrap a
-            # respawning worker, or the final params); reply and keep going
-            state = {"type": "state", "params": None, "outer_opt": None}
-            if rt is not None:
-                state["params"] = _to_np(rt.params)
-                state["outer_opt"] = {
-                    "step": np.asarray(rt.outer_opt.step),
-                    "momentum": _to_np(rt.outer_opt.momentum)}
-            link.send(state)
+            link.send(state_msg())
             continue
         assert msg["type"] == "round", msg
         r = int(msg["round"])
@@ -394,6 +397,17 @@ def main(argv=None) -> None:
                             comm_out["hat"]) if rt is not None else None)
         else:
             avg = link.recv()
+            # bounded-stale mode parks the worker here between its publish
+            # (delta shipped at leg finish) and its commit: serve state
+            # dumps meanwhile — rt.params is still the pre-commit anchor,
+            # exactly the row the in-process executor's consensus
+            # bootstrap reads from a gate-blocked peer — and exit cleanly
+            # on a stop that lands mid-park
+            while avg["type"] == "dump":
+                link.send(state_msg())
+                avg = link.recv()
+            if avg["type"] == "stop":
+                break
             assert avg["type"] == "avg", avg
             Delta = (rt.jax.tree.map(rt.jnp.asarray, avg["delta"])
                      if rt is not None else None)

@@ -23,7 +23,7 @@ bit-identical timeline (``Timeline.fingerprint()``).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -647,8 +647,16 @@ class _AsyncNumeric:
 
     Holds one (params, inner opt, outer opt, EF error, compressor state)
     replica per cluster plus a versioned store of *published* compressed
-    deltas, and runs one outer step per :class:`AsyncCommit` — mixing the
-    exact delta versions the engine recorded in ``AsyncCommit.used``.
+    deltas.  The engine's publish/commit split maps onto two entry points:
+    :meth:`publish` (the ``on_publish`` callback) runs the inner leg and
+    materializes the compressed — possibly Byzantine-corrupted — delta
+    into the store the moment the leg finishes, so the version exists even
+    while its publisher is still gate-blocked; :meth:`commit` then mixes
+    the exact delta versions the engine recorded in ``AsyncCommit.used``
+    and applies the outer step.  A ``used`` version missing from the store
+    is an engine/executor contract violation and raises instead of
+    silently substituting zeros (which would deflate the outer step while
+    ``staleness_weights``/the trimmed mean still credited the row).
 
     Every jitted program mirrors the proc worker's sync arm op-for-op
     (``proc/worker.py``: ``inner_j``/``raw_j``/``compress_j``/``err_j``/
@@ -701,6 +709,8 @@ class _AsyncNumeric:
         self._comp0 = compressor.init_state(numeric.params)
         self.comp = [self._comp0 for _ in range(self.C)]
         self.store = [dict() for _ in range(self.C)]   # leg -> published hat
+        # c -> (hat, inner_new, comp_new, losses) between publish and commit
+        self._inflight: Dict[int, Tuple] = {}
         self.alive = (np.ones(self.C, bool) if sc.initial_alive is None
                       else np.asarray(sc.initial_alive, bool).copy())
         self.nesterov = nesterov
@@ -727,11 +737,12 @@ class _AsyncNumeric:
         jnp = self.jnp
         return self.jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
 
-    def commit(self, ev):
-        """One bounded-stale outer step; returns (loss, hash, disagreement).
-        """
+    def publish(self, c: int, k: int, t: float) -> None:
+        """Engine ``on_publish``: run leg ``k`` from the post-commit anchor
+        (the engine schedules leg ``k`` only after leg ``k-1``'s commit, so
+        nothing mutates cluster ``c`` between here and its commit) and
+        materialize the published version the instant it exists."""
         jnp = self.jnp
-        c, k = ev.cluster, ev.round
         anchor = self.params[c]
         p_inner, inner_new, losses = self.inner_j(
             anchor, self.inner_opt[c], jnp.asarray(c, jnp.int32))
@@ -744,13 +755,29 @@ class _AsyncNumeric:
         pub = (hat if scale is None
                else self.corrupt_j(hat, jnp.asarray(scale, jnp.float32)))
         self.store[c][k] = pub
-        for old in sorted(self.store[c])[:-4]:   # only fresh versions mix
-            del self.store[c][old]
+        self._inflight[c] = (self.err_j(raw, hat), inner_new, comp_new,
+                             losses)
+
+    def commit(self, ev):
+        """One bounded-stale outer step; returns (loss, hash, disagreement).
+        """
+        jnp = self.jnp
+        c, k = ev.cluster, ev.round
+        anchor = self.params[c]
+        err_new, inner_new, comp_new, losses = self._inflight.pop(c)
 
         used = dict(ev.used)
-        rows = [self.store[p][used[p]]
-                if p in used and used[p] in self.store[p] else self.zeros
-                for p in range(self.C)]
+        rows = []
+        for p in range(self.C):
+            if p not in used:
+                rows.append(self.zeros)        # weight/mask 0 anyway
+            elif used[p] in self.store[p]:
+                rows.append(self.store[p][used[p]])
+            else:
+                raise RuntimeError(
+                    f"bounded-stale store miss: commit (c{c}, k{k}) uses "
+                    f"version (c{p}, k{used[p]}) which was never "
+                    f"materialized — engine publish/commit contract broken")
         stacked = self._stack(rows)
         if self.trimmed:
             mask = np.array([1.0 if p in used else 0.0
@@ -762,7 +789,6 @@ class _AsyncNumeric:
                 stal[p] = s_p
             w = self._stw(self.W[c], stal, self.max_staleness)
             Delta = self.mean_j(stacked, jnp.asarray(w))
-        err_new = self.err_j(raw, hat)
         params_new, outer_new = self.outer_j(Delta, self.outer_opt[c],
                                              anchor)
         self.params[c] = params_new
@@ -770,6 +796,11 @@ class _AsyncNumeric:
         self.outer_opt[c] = outer_new
         self.error[c] = err_new
         self.comp[c] = comp_new
+        # GC: the engine's arrived-publish watermarks are monotone (per
+        # epoch), so versions below avail[p] can never be referenced again
+        for p in range(self.C):
+            for old in [v for v in self.store[p] if v < ev.avail[p]]:
+                del self.store[p][old]
 
         from repro.topology.mixing import consensus_distance
         flat = np.stack(
@@ -798,7 +829,8 @@ class _AsyncNumeric:
         self.inner_opt[c] = self._inner0[c]
         self.error[c] = self.zeros
         self.comp[c] = self._comp0     # re-INIT, never zeroed (PowerSGD)
-        self.store[c].clear()
+        self.store[c].clear()          # engine retires the old epoch too
+        self._inflight.pop(c, None)
         self.alive[c] = True
 
     def final_params(self):
@@ -871,7 +903,9 @@ def _simulate_bounded_stale(sc: Scenario,
     engine = BoundedStaleEngine(
         n_clusters=C, rounds=sc.rounds, max_staleness=sc.max_staleness,
         peers=peers, leg_seconds=leg_seconds, send_seconds=send_seconds,
-        commit=on_commit, leaves=sc.faults.leave_events(),
+        commit=on_commit,
+        on_publish=(execr.publish if execr is not None else None),
+        leaves=sc.faults.leave_events(),
         joins=sc.faults.join_events(), initial_alive=alive0,
         on_leave=(execr.on_leave if execr is not None else None),
         on_join=(execr.on_join if execr is not None else None))

@@ -107,6 +107,63 @@ def test_engine_rejects_bad_parameters():
         _drive(s=-1)
 
 
+def test_engine_every_used_version_was_published_first():
+    """Regression (publish/commit split): every ``used`` version must have
+    fired ``on_publish`` BEFORE the commit that incorporates it — including
+    versions whose publisher is itself still gate-blocked (used > the
+    publisher's committed clock), the case that used to read as zeros in
+    the numeric executors."""
+    log = []
+    eng = BoundedStaleEngine(
+        n_clusters=3, rounds=6, max_staleness=2,
+        peers=[[p for p in range(3) if p != c] for c in range(3)],
+        leg_seconds=lambda c, k: 5.0 if c == 2 else 1.0,   # straggler c2
+        send_seconds=lambda c, k: 0.1,
+        commit=lambda ev: log.append(("commit", ev)),
+        on_publish=lambda c, k, t: log.append(("publish", c, k)))
+    eng.run()
+    published = set()
+    ahead_of_commit = 0
+    for entry in log:
+        if entry[0] == "publish":
+            published.add((entry[1], entry[2]))
+        else:
+            ev = entry[1]
+            for p, idx in ev.used:
+                assert (p, idx) in published, (ev.cluster, ev.round, p, idx)
+                if idx > ev.round_clock[p]:
+                    ahead_of_commit += 1
+    # the straggler regime really exercises published-but-uncommitted
+    # versions (the regime the zeros bug hit) — otherwise this test
+    # wouldn't prove anything
+    assert ahead_of_commit > 0
+
+
+def test_engine_rejoiner_pre_leave_publishes_are_retired():
+    """A rejoiner is a fresh replica: its pre-leave publishes must never
+    re-enter ``used`` (the numeric stores discarded them at the join
+    bootstrap), even when a large staleness bound would still admit them."""
+    log = []
+    eng = BoundedStaleEngine(
+        n_clusters=3, rounds=6, max_staleness=4,
+        peers=[[p for p in range(3) if p != c] for c in range(3)],
+        leg_seconds=lambda c, k: 1.0, send_seconds=lambda c, k: 0.1,
+        commit=lambda ev: log.append(("commit", ev)),
+        leaves=[(1, 1)], joins=[(2, 1)],
+        on_join=lambda c, k, t: log.append(("join", c, k)))
+    eng.run()
+    rejoin_leg = None
+    for entry in log:
+        if entry[0] == "join":
+            rejoin_leg = entry[2]
+        elif rejoin_leg is not None:
+            for p, idx in entry[1].used:
+                if p == 1:
+                    assert idx >= rejoin_leg, (entry[1].cluster,
+                                               entry[1].round, idx)
+    assert rejoin_leg is not None
+
+
 # ---------------------------------------------------------------------------
 # through the simulator: timelines, idle, numerics
 # ---------------------------------------------------------------------------
@@ -174,6 +231,50 @@ def test_async_numeric_trains_and_matches_across_aggregations():
         assert all(e.param_hash for e in tl.events)
         tl2 = simulate(sc, numeric=mk())
         assert tl.fingerprint() == tl2.fingerprint()
+
+
+def test_async_numeric_straggler_mixes_materialized_deltas():
+    """Regression for the zeros-substitution bug: under a straggler, fast
+    clusters commit against peers' published-but-UNcommitted deltas.  Those
+    versions must be materialized at publish time — the executor now raises
+    on a store miss instead of silently mixing a zero row with nonzero
+    staleness weight — and the run stays bitwise reproducible."""
+    mk = lambda: QuadraticSpec(n_clusters=3, d=8, h_steps=4,
+                               seed=1).problem()
+    sc = Scenario(n_clusters=3, rounds=8, h_steps=4, seed=3, t_step_s=0.02,
+                  sync="bounded_stale", max_staleness=2, topology="star",
+                  compressor="diloco_x", compressor_kw={"rank": 4}, rank=4,
+                  link=LinkProfile(bytes_per_s=2e8, latency_s=0.01,
+                                   jitter=0.1),
+                  faults=FaultSchedule((Straggler(1, 1, 5, 3.0),)))
+    # certify the scenario really exercises the blocked-publisher regime
+    # by replaying the engine's (jax-free, numerics-identical) decision
+    # sequence: some commit incorporates a version its publisher had not
+    # committed yet — the case that used to read as zeros
+    from repro.core.compression import make_compressor
+    from repro.sim.simulator import async_modeled_times
+    from repro.topology import async_mix_weights
+    comp = make_compressor(sc.compressor, **sc.compressor_kw)
+    wire = int(comp.wire_bytes(sc.shapes(), rank=sc.rank))
+    topo = sc.topo()
+    W = async_mix_weights(topo)
+    peers = [tuple(p for p in range(3) if p != c and W[c, p] > 0.0)
+             for c in range(3)]
+    leg_s, send_s, _ = async_modeled_times(sc, wire, topo)
+    commits = []
+    BoundedStaleEngine(
+        n_clusters=3, rounds=sc.rounds, max_staleness=sc.max_staleness,
+        peers=peers, leg_seconds=leg_s, send_seconds=send_s,
+        commit=commits.append).run()
+    ahead = sum(1 for ev in commits for p, idx in ev.used
+                if idx > ev.round_clock[p])
+    assert ahead > 0
+
+    tl = simulate(sc, numeric=mk())
+    assert tl.losses()[-1] < tl.losses()[0]
+    assert all(e.param_hash for e in tl.events)
+    tl2 = simulate(sc, numeric=mk())
+    assert tl.fingerprint() == tl2.fingerprint()
 
 
 def test_async_churn_rejoin_consensus_bootstrap():

@@ -597,6 +597,19 @@ def async_proc_scenario(**kw):
     return Scenario(**base)
 
 
+def test_proc_barrier_rejects_byzantine_like_in_process():
+    """run_proc must reject Byzantine-under-barrier exactly like
+    simulate(): the barrier round has no publish step to corrupt, and the
+    proc path never calls byzantine_scale — silently ignoring the attack
+    would diverge from the in-process backend's validation."""
+    from repro.sim.faults import Byzantine
+    sc = proc_scenario(faults=FaultSchedule((Byzantine(1, 0, 2),)))
+    with pytest.raises(ValueError, match="bounded_stale"):
+        run_proc(sc)
+    with pytest.raises(ValueError, match="bounded_stale"):
+        simulate(sc)
+
+
 def test_proc_bounded_stale_timing_structural_drift_gate():
     """The CI drift gate's contract: two proc runs of the same async
     scenario produce the SAME structural fingerprint (commit order,
