@@ -206,6 +206,25 @@ def main() -> None:
             raise AssertionError("fleet-async acceptance criteria failed")
     section("fleet_async", fleet_async_bench)
 
+    # beyond-paper: paged-KV continuous-batching serving under Poisson load
+    def serve_load_bench() -> None:
+        from benchmarks import serve_load
+        sl = serve_load.run(fast=args.fast or args.skip_convergence)
+        blobs["serve_load"] = sl
+        crit = sl["criteria"]
+        cont = sl["continuous"]
+        print(f"serve_load.throughput_gain,{crit['throughput_gain']},"
+              f"x_vs_static")
+        print(f"serve_load.decode_tok_s,{cont['decode_tok_s']:.1f},"
+              f"tokens_per_s")
+        print(f"serve_load.per_token_p99,{cont['per_token_ms_p99']:.2f},ms")
+        print(f"serve_load.ttft_p99,{cont['ttft_steps_p99']:.0f},steps")
+        print(f"serve_load.deterministic,{int(crit['deterministic'])},bool")
+        print(f"serve_load.ok,{int(crit['ok'])},bool")
+        if not crit["ok"]:
+            raise AssertionError("serve-load acceptance criteria failed")
+    section("serve_load", serve_load_bench)
+
     # analytic fused-vs-unfused outer-step compressor roofline (no inputs)
     def roofline_outer() -> None:
         from benchmarks import roofline

@@ -66,6 +66,7 @@ class ModelConfig:
     n_kv_heads: int = 4
     d_ff: int = 512
     vocab_size: int = 512
+    eos_id: int = 2               # end-of-sequence id the serving loops stop on
     head_dim: int = 0             # 0 -> d_model // n_heads
     # attention flavour
     attn_type: str = "gqa"        # gqa | mla

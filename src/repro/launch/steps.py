@@ -145,15 +145,31 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
-    """One decode step: token + caches -> next token (greedy) + caches."""
+def make_serve_step(cfg: ModelConfig, *, eos_id: Optional[int] = None):
+    """One decode step: token + caches -> next token (greedy) + caches.
+
+    With ``eos_id`` set the returned function takes and returns a
+    per-sequence ``finished`` bool mask: rows already finished keep
+    emitting ``eos_id`` (so everything past the first EOS is masked in
+    the decoded output) and the mask absorbs rows whose new token is EOS.
+    Callers must reset the mask across prefill-by-decode steps — those
+    outputs are prompt-forced and must not trip EOS."""
 
     def serve_step(params, state, tokens):
         logits, state = M.decode_step(params, cfg, state, tokens)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, state
 
-    return serve_step
+    if eos_id is None:
+        return serve_step
+
+    def serve_step_eos(params, state, tokens, finished):
+        nxt, state = serve_step(params, state, tokens)
+        nxt = jnp.where(finished[:, None], jnp.int32(eos_id), nxt)
+        finished = finished | (nxt[:, 0] == eos_id)
+        return nxt, state, finished
+
+    return serve_step_eos
 
 
 # ---------------------------------------------------------------------------

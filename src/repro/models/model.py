@@ -57,6 +57,24 @@ def _rle(specs: List[str]) -> List[Tuple[str, int]]:
 # dense / gqa / mla layer units
 # ---------------------------------------------------------------------------
 
+def apply_ffn_unit(p, x, cfg: ModelConfig, *, use_moe: bool = False):
+    """FFN half of a transformer unit: ln2 + MLP/MoE dispatch (handles the
+    layernorm/gelu family, swiglu, ln2-less and mlp-less variants). Shared
+    by the train/decode units here and the paged serve engine
+    (repro.serve.engine), which must stay bitwise-identical to this path.
+    Returns (ffn_out, aux_scalar)."""
+    if use_moe:
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        return moe_lib.apply_moe(p["moe"], h, cfg)
+    if "mlp" not in p:
+        return jnp.zeros_like(x), 0.0
+    h = apply_norm(p["ln2"], x, cfg.norm) if "ln2" in p else x
+    if "w_gate" in p["mlp"]:
+        return apply_swiglu(p["mlp"], h), 0.0
+    from repro.models.layers import apply_gelu_mlp
+    return apply_gelu_mlp(p["mlp"], h), 0.0
+
+
 def _mk_attn_layer(cfg: ModelConfig, *, window: int, cross: bool = False,
                    causal: bool = True, use_moe: bool = False,
                    dense_ffn: bool = True, shared_after: bool = False,
@@ -104,17 +122,7 @@ def _mk_attn_layer(cfg: ModelConfig, *, window: int, cross: bool = False,
             mrope_sections=cfg.mrope_sections if cfg.mrope else None)
 
     def _ffn(p, x, ctx):
-        if use_moe:
-            h = apply_norm(p["ln2"], x, cfg.norm)
-            y, aux = moe_lib.apply_moe(p["moe"], h, cfg)
-            return y, aux
-        if "mlp" not in p:
-            return jnp.zeros_like(x), 0.0
-        h = apply_norm(p["ln2"], x, cfg.norm) if "ln2" in p else x
-        if "w_gate" in p["mlp"]:
-            return apply_swiglu(p["mlp"], h), 0.0
-        from repro.models.layers import apply_gelu_mlp
-        return apply_gelu_mlp(p["mlp"], h), 0.0
+        return apply_ffn_unit(p, x, cfg, use_moe=use_moe)
 
     def apply_unit(p, x, ctx):
         if cfg.parallel_residual and not use_moe:

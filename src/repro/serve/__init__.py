@@ -1,0 +1,12 @@
+"""Paged KV-cache + continuous-batching serving engine (see README.md).
+
+``pages``/``scheduler`` are jax-free host-side bookkeeping; ``engine``
+builds the jit-shape-stable paged decode step on top of
+``attention_paged`` and ties the three together behind ``ServeEngine``.
+"""
+from repro.serve.pages import PageManager
+from repro.serve.scheduler import (DECODE, DONE, PREFILL, WAITING, Request,
+                                   Scheduler)
+
+__all__ = ["PageManager", "Request", "Scheduler",
+           "WAITING", "PREFILL", "DECODE", "DONE"]

@@ -1,0 +1,129 @@
+"""Host-side paged KV-cache bookkeeping (jax-free, like ``repro.obs``).
+
+The device-side KV store is a pool of fixed-size *physical pages*
+(``(n_units, 1 + n_pages, page_size, KV, dh)`` per segment — see
+``serve.engine.init_kv_pages``); one page index addresses the same slot in
+every layer's store, so a single free list and a single per-sequence page
+table serve the whole stack (vLLM layout).
+
+Contract:
+
+* **Physical page 0 is the reserved scratch page.** It is never in the
+  free list; inactive engine slots route their KV writes there, and
+  unallocated page-table entries point at it (reads are killed by the
+  position mask, see serve/README.md).
+* ``admit(slot, total)`` *reserves* the worst case
+  ``ceil(total / page_size)`` pages up front but allocates none; physical
+  pages are taken lazily by ``ensure(slot, length)`` as the sequence
+  crosses page boundaries. Admission is refused while the reservation does
+  not fit in the unreserved free pool, so a mid-decode ``ensure`` can
+  never fail: the engine gets a never-OOM guarantee with no preemption.
+* ``release(slot)`` returns owned pages (and any untouched reservation)
+  to the pool on EOS / length-cap finish.
+
+``check_partition`` asserts the invariant the property tests drive: the
+free list and the union of per-slot owned pages always partition
+``{1..n_pages}`` exactly, and outstanding reservations never exceed the
+free pool.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List
+
+import numpy as np
+
+
+class PageManager:
+    def __init__(self, n_pages: int, page_size: int, max_seqs: int,
+                 max_pages_per_seq: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError((n_pages, page_size))
+        self.n_pages = int(n_pages)          # usable pages (scratch excluded)
+        self.page_size = int(page_size)
+        self.max_seqs = int(max_seqs)
+        self.max_pages_per_seq = int(max_pages_per_seq)
+        # FIFO free list keeps allocation order deterministic
+        self._free: deque = deque(range(1, self.n_pages + 1))
+        self._owned: Dict[int, List[int]] = {}
+        self._reserved: Dict[int, int] = {}
+        self.page_table = np.zeros((self.max_seqs, self.max_pages_per_seq),
+                                   np.int32)
+        self.peak_pages_used = 0
+
+    # -- accounting --------------------------------------------------------
+    def pages_needed(self, total_len: int) -> int:
+        return -(-int(total_len) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    @property
+    def reserved_pages(self) -> int:
+        return sum(self._reserved.values())
+
+    # -- admission ---------------------------------------------------------
+    def can_admit(self, total_len: int) -> bool:
+        need = self.pages_needed(total_len)
+        return (need <= self.max_pages_per_seq
+                and need <= self.free_pages - self.reserved_pages)
+
+    def admit(self, slot: int, total_len: int) -> None:
+        """Reserve worst-case pages for a sequence of ``total_len`` tokens."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already admitted")
+        if not self.can_admit(total_len):
+            raise ValueError(f"cannot admit {total_len} tokens "
+                             f"(free={self.free_pages}, "
+                             f"reserved={self.reserved_pages})")
+        self._owned[slot] = []
+        self._reserved[slot] = self.pages_needed(total_len)
+
+    # -- growth / release --------------------------------------------------
+    def ensure(self, slot: int, length: int) -> int:
+        """Make sure the page holding token position ``length`` of ``slot``
+        is allocated; returns its physical page id. Called once per active
+        slot per engine step (extend-on-decode)."""
+        owned = self._owned[slot]
+        page_idx = int(length) // self.page_size
+        if page_idx > len(owned):
+            raise ValueError(f"slot {slot}: position {length} skips a page")
+        if page_idx == len(owned):
+            if self._reserved[slot] <= 0:
+                raise ValueError(f"slot {slot}: grew past its reservation")
+            phys = self._free.popleft()      # cannot fail: reservation held
+            owned.append(phys)
+            self._reserved[slot] -= 1
+            self.page_table[slot, page_idx] = phys
+            self.peak_pages_used = max(self.peak_pages_used, self.used_pages)
+        return owned[page_idx]
+
+    def release(self, slot: int) -> None:
+        for phys in self._owned.pop(slot):
+            self._free.append(phys)
+        self._reserved.pop(slot, None)       # untouched reservation lapses
+        self.page_table[slot, :] = 0
+
+    # -- invariants --------------------------------------------------------
+    def check_partition(self) -> None:
+        free = set(self._free)
+        owned = [p for v in self._owned.values() for p in v]
+        assert len(free) == len(self._free), "duplicate page in free list"
+        assert len(owned) == len(set(owned)), "page owned twice"
+        assert 0 not in free and 0 not in owned, "scratch page handed out"
+        assert free | set(owned) == set(range(1, self.n_pages + 1)), \
+            "free + owned does not partition the pool"
+        assert not (free & set(owned)), "page both free and owned"
+        assert self.reserved_pages <= self.free_pages, \
+            "reservations exceed the free pool"
+        for slot, pages in self._owned.items():
+            for idx, phys in enumerate(pages):
+                assert self.page_table[slot, idx] == phys, \
+                    f"page table desync at slot {slot} page {idx}"
+            assert (self.page_table[slot, len(pages):] == 0).all(), \
+                f"stale table entries for slot {slot}"

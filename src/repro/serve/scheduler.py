@@ -1,0 +1,180 @@
+"""Continuous-batching admission + per-sequence state machine (jax-free).
+
+Every engine iteration is one fixed-shape device step over ``max_seqs``
+slots; the scheduler decides what each slot feeds it:
+
+  WAITING --admit--> PREFILL --last prompt token--> DECODE --EOS/len--> DONE
+
+Prefill is *by decode*: an admitted sequence feeds one prompt token per
+step (same executable as decode — one compiled step serves every phase and
+occupancy). The model output of a prefill step is discarded except for the
+last prompt token's, which is the sequence's first generated token.
+
+Admission (``admit_ready``) is FIFO over the waiting queue, gated on
+arrival step, a free slot, and the page manager's worst-case reservation
+(page-exhaustion backpressure defers admission — head-of-line, so the
+admission order stays deterministic and is fingerprinted for the CI
+determinism gate). ``policy="static"`` is the classic static-batch
+baseline: admit only when every slot is idle, then drain the whole wave —
+used by ``benchmarks/serve_load.py`` to isolate the continuous-batching
+win with the identical compiled step.
+
+Arrival times are measured in *engine steps*, not wall clock, so a trace
+replays identically on any machine.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.pages import PageManager
+
+WAITING, PREFILL, DECODE, DONE = "WAITING", "PREFILL", "DECODE", "DONE"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    arrival: int = 0                 # engine step at which it becomes visible
+    # filled in by the scheduler:
+    state: str = WAITING
+    generated: List[int] = field(default_factory=list)
+    admit_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    done_step: Optional[int] = None
+    admit_wall: Optional[float] = None
+    first_token_wall: Optional[float] = None
+    done_wall: Optional[float] = None
+    finish_reason: Optional[str] = None          # "eos" | "length"
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + self.max_new
+
+
+@dataclass
+class _Slot:
+    req: Request
+    fed: int = 0         # tokens fed to the model so far (== cache length)
+
+
+class Scheduler:
+    def __init__(self, pages: PageManager, *, max_seqs: int,
+                 eos_id: Optional[int] = None, policy: str = "continuous"):
+        if policy not in ("continuous", "static"):
+            raise ValueError(policy)
+        self.pages = pages
+        self.max_seqs = int(max_seqs)
+        self.eos_id = eos_id
+        self.policy = policy
+        self.waiting: Deque[Request] = deque()
+        self.slots: List[Optional[_Slot]] = [None] * self.max_seqs
+        self.done: List[Request] = []
+        self.admissions: List[Tuple[int, int, int]] = []  # (step, rid, slot)
+        self.deferred = 0          # page-backpressure admission deferrals
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.state = WAITING
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- admission ---------------------------------------------------------
+    def admit_ready(self, now: int, wall: float = 0.0) -> int:
+        """Admit FIFO-eligible requests into free slots; returns how many
+        were admitted this step."""
+        if self.policy == "static" and self.n_active:
+            return 0
+        n = 0
+        while self.waiting and self.waiting[0].arrival <= now:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
+                break
+            req = self.waiting[0]
+            if not self.pages.can_admit(req.total_len):
+                self.deferred += 1
+                break          # head-of-line: keeps admission deterministic
+            self.waiting.popleft()
+            slot = free[0]
+            self.pages.admit(slot, req.total_len)
+            req.state = PREFILL
+            req.admit_step = now
+            req.admit_wall = wall
+            self.slots[slot] = _Slot(req)
+            self.admissions.append((now, req.rid, slot))
+            n += 1
+        return n
+
+    # -- one engine step ---------------------------------------------------
+    def plan_step(self):
+        """Builds the fixed-shape step inputs ``(tokens, lengths, active)``
+        (each ``(max_seqs,)``; inactive slots masked) and allocates the
+        physical page each active slot's next token lands in. Returns None
+        when no slot is active (e.g. all arrivals are in the future)."""
+        tokens = np.zeros(self.max_seqs, np.int32)
+        lengths = np.zeros(self.max_seqs, np.int32)
+        active = np.zeros(self.max_seqs, bool)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            req = s.req
+            tokens[i] = (req.prompt[s.fed] if s.fed < len(req.prompt)
+                         else req.generated[-1])
+            lengths[i] = s.fed
+            active[i] = True
+            self.pages.ensure(i, s.fed)
+        if not active.any():
+            return None
+        return tokens, lengths, active
+
+    def commit(self, next_tokens: Sequence[int], step: int,
+               wall: float = 0.0) -> None:
+        """Processes the device step's outputs: state transitions, EOS /
+        length-cap finishes, slot + page recycling."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            req = s.req
+            out = int(next_tokens[i])
+            s.fed += 1
+            if s.fed < len(req.prompt):
+                continue           # mid-prefill: output is prompt-forced
+            if req.state == PREFILL:
+                req.state = DECODE
+                req.first_token_step = step
+                req.first_token_wall = wall
+            req.generated.append(out)
+            if self.eos_id is not None and out == self.eos_id:
+                self._finish(i, step, wall, "eos")
+            elif len(req.generated) >= req.max_new:
+                self._finish(i, step, wall, "length")
+
+    def _finish(self, slot: int, step: int, wall: float,
+                reason: str) -> None:
+        req = self.slots[slot].req
+        req.state = DONE
+        req.done_step = step
+        req.done_wall = wall
+        req.finish_reason = reason
+        self.pages.release(slot)
+        self.slots[slot] = None
+        self.done.append(req)
+
+    # -- determinism gate --------------------------------------------------
+    def admission_fingerprint(self) -> str:
+        h = hashlib.sha256()
+        for step, rid, slot in self.admissions:
+            h.update(f"{step}:{rid}:{slot};".encode())
+        return h.hexdigest()[:16]

@@ -48,3 +48,28 @@ def test_serve_driver(arch):
               "--gen-len", "8"])
     assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
     assert "SERVE-DRIVER-OK" in r.stdout
+    # satellite: throughput is now reported per phase + the combined line
+    assert "prefill: " in r.stdout and "decode: " in r.stdout
+    assert "generated shape" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma3-1b", "granite-3-8b"])
+def test_serve_driver_paged(arch):
+    r = _run(["repro.launch.serve", "--arch", arch, "--smoke",
+              "--devices", "4", "--batch", "3", "--prompt-len", "8",
+              "--gen-len", "8", "--paged", "--requests", "6"])
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "SERVE-DRIVER-OK" in r.stdout
+    assert "paged engine: 6 requests" in r.stdout
+    assert "admission fingerprint:" in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_driver_paged_unsupported_family():
+    # zamba2 is a hybrid SSM stack: the paged engine must refuse cleanly
+    r = _run(["repro.launch.serve", "--arch", "zamba2-1.2b", "--smoke",
+              "--devices", "4", "--batch", "2", "--prompt-len", "4",
+              "--gen-len", "4", "--paged"])
+    assert r.returncode == 2, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "SERVE-DRIVER-UNSUPPORTED" in r.stdout
